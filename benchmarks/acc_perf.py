@@ -1,0 +1,67 @@
+"""Fig. 12/13 analogue: Acc-Demeter query time & throughput — TPU projection.
+
+No TPU exists in this container, so this benchmark does what the paper does
+with its RTL model: drive a calibrated performance model of the
+*accelerated* pipeline with the real workload parameters, and cross-check
+kernel correctness in interpret mode (bit-exact vs ref — test suite).
+
+Model (per v5e chip; constants in hw.py):
+  encoder  (VPU): rolling-gram XOR/select + per-bit counter accumulate
+                  ~ c_enc vector-ops per HD bit per gram.
+  AM search(MXU): +-1 matmul, 2*B*S*D flops (kernels/am_matmul.py).
+  majority (VPU): D ops per read.
+Encode and search pipeline (paper pipelines steps 3 and 4), so chip
+throughput = 1 / max(stage times) — the paper's own bottleneck analysis
+(encoder-bound, §7.3) is reproduced by the model.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.hw import V5E
+
+
+def stage_times(read_len: int, n: int, dim: int, num_protos: int,
+                batch: int = 4096) -> dict:
+    g = read_len - n + 1
+    c_enc = 1.25         # ops/bit/gram: 1 add (counter) + rolling-gram XORs
+    enc_ops = batch * g * dim * c_enc + batch * dim        # + majority
+    enc_t = enc_ops / V5E.vpu_ops
+    mm_flops = 2.0 * batch * num_protos * dim
+    mm_t = mm_flops / V5E.bf16_flops
+    # HBM traffic: packed queries out + scores; prototypes resident in VMEM
+    hbm_bytes = batch * (dim / 8) * 2 + batch * num_protos * 4
+    hbm_t = hbm_bytes / V5E.hbm_bw
+    return {"encode_s": enc_t, "search_s": max(mm_t, hbm_t),
+            "per_read_us": max(enc_t, mm_t, hbm_t) / batch * 1e6,
+            "reads_per_s": batch / max(enc_t, mm_t, hbm_t)}
+
+
+def run(community=None, emit=common.emit, software_query=None) -> dict:
+    community = community or common.afs_small()
+    sp = common.PROD_SPACE
+    # prototype count at production window size (8192) for this community
+    num_protos = int(sum(-(-len(g) // 8192)
+                         for g in community.genomes.values()))
+    st = stage_times(150, sp.ngram, sp.dim, max(num_protos, 128))
+    emit("acc.model.encode_us_per_read", st["encode_s"] / 4096 * 1e6,
+         "VPU-bound")
+    emit("acc.model.search_us_per_read", st["search_s"] / 4096 * 1e6,
+         "MXU")
+    emit("acc.model.query_us_per_read", st["per_read_us"],
+         f"{st['reads_per_s'] * 60 / 1e6:.2f}Mreads/min")
+    bottleneck = "encoder" if st["encode_s"] >= st["search_s"] else "search"
+    emit("acc.model.bottleneck", 0.0, bottleneck)
+
+    # speedup vs our own software measurements (paper Fig12/13 structure)
+    if software_query:
+        for base, (us, _) in software_query.items():
+            emit(f"acc.speedup_vs_{base}", 0.0,
+                 f"{us / st['per_read_us']:.1f}x")
+    return st
+
+
+if __name__ == "__main__":
+    run()

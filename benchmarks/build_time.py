@@ -1,0 +1,25 @@
+"""Fig. 11 analogue: reference-database build time per profiler."""
+
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(community=None, emit=common.emit) -> dict:
+    community = community or common.afs_small()
+    out = {}
+    for pname, prof in common.make_profilers().items():
+        if pname == "kraken2+bracken":
+            continue
+        if pname == "demeter":
+            secs, _ = common.timeit(
+                lambda: prof.build_refdb(community.genomes))
+        else:
+            secs, _ = common.timeit(lambda: prof.build(community.genomes))
+        out[pname] = secs
+        emit(f"build.{pname}.seconds", secs * 1e6, f"{secs:.3f}s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Table 3 analogue: per-query energy breakdown of the accelerated profiler.
+
+The paper reports PCM-array area/energy from synthesis; analog in-memory
+energy does not transfer to TPU (DESIGN.md §2), so this benchmark applies
+the first-principles digital model in hw.py to the same workload and
+reports (a) the per-unit breakdown (encoder / AM search / IO) and (b) the
+paper's headline efficiency metric, Mbp per joule.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+from benchmarks.hw import V5E
+
+
+def run(community=None, emit=common.emit, *, read_len: int = 150) -> dict:
+    sp = common.PROD_SPACE
+    community = community or common.afs_small()
+    num_protos = int(sum(-(-len(g) // 8192)
+                         for g in community.genomes.values()))
+    g = read_len - sp.ngram + 1
+    d = sp.dim
+
+    # encoder: c_enc VPU ops per bit per gram + majority
+    enc_ops = g * d * 1.25 + d
+    e_encoder = enc_ops * V5E.pj_per_vpu_op
+    # AM search: 2*S*D MACs on the MXU + score readout
+    e_search = 2 * num_protos * d * 0.5 * V5E.pj_per_mac_bf16
+    # IO: packed query to/from HBM + scores
+    io_bytes = d / 8 * 2 + num_protos * 4
+    e_io = io_bytes * V5E.pj_per_hbm_byte
+    total_pj = e_encoder + e_search + e_io
+
+    for name, e in (("encoder", e_encoder), ("am_search", e_search),
+                    ("io", e_io)):
+        emit(f"energy.{name}.pj_per_read", 0.0,
+             f"{e:.0f}pJ;{100 * e / total_pj:.1f}%")
+    mbp_per_joule = read_len / (total_pj * 1e-12) / 1e6
+    emit("energy.total.mbp_per_joule", 0.0, f"{mbp_per_joule:.2f}")
+    emit("energy.paper_reference", 0.0,
+         "paper:9.45Mbp/J(PCM);kraken2:<=0.6Mbp/J")
+    return {"encoder_pj": e_encoder, "search_pj": e_search, "io_pj": e_io,
+            "mbp_per_joule": mbp_per_joule}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Hardware constants for the TPU v5e target (per assignment) and the
+first-principles energy model (Table 3 analogue).
+
+Energy constants are order-of-magnitude literature values (Horowitz-style
+accounting; 7nm-class logic, HBM2e) — clearly a *model*, not a
+measurement; DESIGN.md §2 explains why PCM analog energy does not
+transfer.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    bf16_flops: float     # peak bf16 FLOP/s
+    hbm_bw: float         # HBM bytes/s
+    hbm_gb: float         # HBM capacity
+    ici_bw: float         # per-link bytes/s
+    vpu_ops: float        # elementwise vector ops/s (int/fp alike, est.)
+    # energy model (per op / per byte)
+    pj_per_mac_bf16: float = 0.25
+    pj_per_vpu_op: float = 0.10
+    pj_per_hbm_byte: float = 30.0
+    pj_per_vmem_byte: float = 1.0
+    pj_per_ici_byte: float = 10.0
+
+
+V5E = Chip(
+    bf16_flops=197e12,
+    hbm_bw=819e9,
+    hbm_gb=16.0,
+    ici_bw=50e9,
+    vpu_ops=2.0e12,
+)
+
+CHIPS_PER_POD = 256
+PODS = 2

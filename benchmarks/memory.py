@@ -1,0 +1,33 @@
+"""Fig. 6 analogue: working data-structure size per profiler.
+
+Paper claim: Demeter's HD-RefDB is ~33-36x smaller than Kraken2/MetaCache
+structures on food-scale databases; the reduction is what makes the
+in-memory accelerator feasible (the whole AM fits in PCM arrays / VMEM).
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(community=None, emit=common.emit) -> dict:
+    community = community or common.afs_small()
+    sizes = {}
+    for pname, prof in common.make_profilers().items():
+        if pname == "kraken2+bracken":
+            continue
+        if pname == "demeter":
+            db = prof.build_refdb(community.genomes)
+            sizes[pname] = db.memory_bytes()
+        else:
+            prof.build(community.genomes)
+            sizes[pname] = prof.memory_bytes()
+        emit(f"memory.{pname}.bytes", 0.0, str(sizes[pname]))
+    for base in ("kraken2", "metacache", "clark"):
+        ratio = sizes[base] / sizes["demeter"]
+        emit(f"memory.reduction_vs_{base}", 0.0, f"{ratio:.1f}x")
+    return sizes
+
+
+if __name__ == "__main__":
+    run()

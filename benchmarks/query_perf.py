@@ -1,0 +1,51 @@
+"""Fig. 4/5 analogue: software query time per read + throughput (Mreads/min).
+
+C-Demeter's role is played by the pure-JAX CPU path (jit'd, batched);
+baselines run their numpy hash pipelines.  The paper's observation to
+reproduce: the *software* Demeter is memory-bound and does NOT beat
+Kraken2 on CPU — that gap is the motivation for Acc-Demeter
+(benchmarks/acc_perf.py projects the accelerated version).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import batch_reads
+
+
+def run(community=None, emit=common.emit, sample: str = "kylo") -> dict:
+    community = community or common.afs_small()
+    toks, lens, *_ = community.samples[sample]
+    out = {}
+    for pname, prof in common.make_profilers().items():
+        if pname == "kraken2+bracken":
+            continue                      # same classify path as kraken2
+        if pname == "demeter":
+            db = prof.build_refdb(community.genomes)
+            # warmup (compile)
+            q = prof.encode_reads(toks[:256], lens[:256])
+            prof.classify_batch(db, q).scores.block_until_ready()
+
+            def job():
+                for bt, bl in batch_reads(toks, lens, 256):
+                    import jax.numpy as jnp
+                    q = prof.encode_reads(jnp.asarray(bt), jnp.asarray(bl))
+                    prof.classify_batch(db, q).scores.block_until_ready()
+            secs, _ = common.timeit(job)
+        else:
+            prof.build(community.genomes)
+            secs, _ = common.timeit(
+                lambda: prof.classify_reads(toks, lens))
+        n = len(toks)
+        us_per_read = secs / n * 1e6
+        mreads_per_min = n / secs * 60 / 1e6
+        out[pname] = (us_per_read, mreads_per_min)
+        emit(f"query.{pname}.us_per_read", us_per_read,
+             f"{mreads_per_min:.4f}Mreads/min")
+    return out
+
+
+if __name__ == "__main__":
+    run()

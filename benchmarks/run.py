@@ -1,0 +1,48 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see benchmarks.common.emit).
+
+  accuracy    Fig 2/3   precision/recall per profiler per sample
+  query_perf  Fig 4/5   software query time + throughput
+  memory      Fig 6     working-structure bytes + reduction ratios
+  build_time  Fig 11    reference build time
+  acc_perf    Fig 12/13 accelerated (TPU-model) query time/throughput
+  energy      Table 3   energy breakdown + Mbp/J
+  roofline    §Roofline three-term analysis from dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (accuracy, acc_perf, build_time, common, energy,
+                        memory, query_perf, roofline)
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    community = common.afs_small()
+    print("name,us_per_call,derived")
+
+    def want(name):
+        return only is None or only == name
+
+    if want("accuracy"):
+        accuracy.run(community)
+    sw = None
+    if want("query_perf"):
+        sw = query_perf.run(community)
+    if want("memory"):
+        memory.run(community)
+    if want("build_time"):
+        build_time.run(community)
+    if want("acc_perf"):
+        acc_perf.run(community, software_query=sw)
+    if want("energy"):
+        energy.run(community)
+    if want("roofline"):
+        roofline.run()
+
+
+if __name__ == "__main__":
+    main()

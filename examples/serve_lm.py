@@ -1,0 +1,18 @@
+"""Serve a small LM with batched requests (prefill + lockstep decode).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch import serve as serve_mod
+
+print("cohort 1: mamba2 (SSM decode, O(1) state)")
+serve_mod.serve("mamba2_1_3b", num_requests=4, decode_steps=12,
+                prompt_len=16)
+
+print("\ncohort 2: deepseek-v2-lite (MLA absorbed decode + MoE)")
+serve_mod.serve("deepseek_v2_lite", num_requests=4, decode_steps=12,
+                prompt_len=16)
+
+print("\ncohort 3: hymba (hybrid SWA ring buffer + SSM state)")
+serve_mod.serve("hymba_1_5b", num_requests=4, decode_steps=12,
+                prompt_len=16, temperature=0.8)

@@ -1,0 +1,14 @@
+"""Baseline profilers the paper compares against (software reproductions).
+
+Kraken2Like (exact k-mer votes), MetaCacheLike (windowed minhash),
+ClarkLike (discriminative k-mers), plus Bracken-style abundance
+redistribution. All share the classify_reads() -> (hits, category)
+contract so the accuracy/memory/speed benchmarks are apples-to-apples.
+"""
+
+from repro.baselines.kraken2_like import Kraken2Like
+from repro.baselines.metacache_like import MetaCacheLike
+from repro.baselines.clark_like import ClarkLike
+from repro.baselines import bracken_like
+
+__all__ = ["Kraken2Like", "MetaCacheLike", "ClarkLike", "bracken_like"]

@@ -1,0 +1,22 @@
+"""Bracken-style abundance redistribution on top of any classifier.
+
+Bracken reassigns reads classified at higher/ambiguous ranks down to
+species using the unique-assignment distribution — with a flat species
+taxonomy this is exactly Demeter's step-5 proportional split, so we reuse
+the shared estimator; Kraken2+Bracken in the benchmarks is
+``Kraken2Like`` + this redistribution.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import abundance as abundance_mod
+
+
+def estimate_abundance(hits: np.ndarray, category: np.ndarray,
+                       genome_lengths: np.ndarray):
+    """(R,S) hits + categories -> AbundanceResult (shared step-5 math)."""
+    import jax.numpy as jnp
+    return abundance_mod.estimate(
+        jnp.asarray(hits), jnp.asarray(category), jnp.asarray(genome_lengths))

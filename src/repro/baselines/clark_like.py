@@ -1,0 +1,55 @@
+"""CLARK-style baseline: voting restricted to *discriminative* k-mers.
+
+CLARK discards any k-mer shared by more than one target; classification
+then uses only species-unique k-mers, which makes unique assignments very
+precise but loses reads falling entirely in homologous regions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import kmer_table
+from repro.core import classifier
+from repro.genomics import kmers
+
+
+class ClarkLike:
+    name = "clark-like"
+
+    def __init__(self, k: int = 21, min_hits: int = 2):
+        self.k = k
+        self.min_hits = min_hits
+        self.table: kmer_table.KmerTable | None = None
+
+    def build(self, genomes: dict[str, np.ndarray]) -> "ClarkLike":
+        t = kmer_table.build_table(genomes, self.k)
+        # Keep only k-mers whose mask has exactly one set bit.
+        m = t.masks
+        discriminative = (m & (m - np.uint64(1))) == np.uint64(0)
+        self.table = kmer_table.KmerTable(
+            hashes=t.hashes[discriminative], masks=m[discriminative],
+            num_species=t.num_species, k=t.k)
+        return self
+
+    def memory_bytes(self) -> int:
+        assert self.table is not None
+        return self.table.memory_bytes()
+
+    def classify_reads(self, tokens: np.ndarray, lengths: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        assert self.table is not None, "call build() first"
+        s = self.table.num_species
+        r = len(tokens)
+        hits = np.zeros((r, s), bool)
+        for i in range(r):
+            h = kmers.read_kmer_hashes(tokens[i], int(lengths[i]), self.k)
+            votes = kmer_table.masks_to_votes(self.table.lookup_masks(h), s)
+            top = votes.max() if len(votes) else 0
+            if top >= self.min_hits:
+                hits[i] = votes == top
+        n = hits.sum(axis=1)
+        category = np.where(n == 0, classifier.UNMAPPED,
+                            np.where(n == 1, classifier.UNIQUE,
+                                     classifier.MULTI)).astype(np.int32)
+        return hits, category

@@ -1,0 +1,74 @@
+"""Shared substrate for the k-mer-table baselines (Kraken2/CLARK-like).
+
+A sorted uint64 hash table mapping k-mer hashes to species bitmasks —
+the "humongous hash table" working structure the paper identifies as the
+bottleneck of SOTA profilers (§2.2).  Deliberately honest about size: the
+memory benchmark (Fig. 6 analogue) reads ``memory_bytes()`` off these
+arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.genomics import kmers
+
+
+@dataclasses.dataclass
+class KmerTable:
+    hashes: np.ndarray        # (T,) uint64 sorted
+    masks: np.ndarray         # (T,) uint64 species bitmask
+    num_species: int
+    k: int
+
+    def memory_bytes(self) -> int:
+        return self.hashes.nbytes + self.masks.nbytes
+
+    def lookup_masks(self, read_hashes: np.ndarray) -> np.ndarray:
+        """Species bitmask for each hash (0 when absent)."""
+        idx = np.searchsorted(self.hashes, read_hashes)
+        idx = np.minimum(idx, len(self.hashes) - 1)
+        found = self.hashes[idx] == read_hashes if len(self.hashes) else \
+            np.zeros(len(read_hashes), bool)
+        return np.where(found, self.masks[idx], np.uint64(0))
+
+
+def build_table(genomes: dict[str, np.ndarray], k: int, *,
+                subsample: int = 1) -> KmerTable:
+    """Union of per-species k-mer hash sets with species bitmasks.
+
+    ``subsample > 1`` keeps only hashes < 2^64/subsample (minimizer-style
+    database shrinking, as Kraken2's minimizers do).
+    """
+    num_species = len(genomes)
+    if num_species > 64:
+        raise ValueError("bitmask substrate supports up to 64 species")
+    limit = np.uint64(2**64 - 1) // np.uint64(subsample)
+
+    per_species: list[np.ndarray] = []
+    for s, toks in enumerate(genomes.values()):
+        h = kmers.splitmix64(kmers.pack_kmers(toks, k))
+        if subsample > 1:
+            h = h[h <= limit]
+        per_species.append(np.unique(h))
+
+    all_h = np.concatenate(per_species) if per_species else np.empty(0, np.uint64)
+    all_m = np.concatenate([
+        np.full(len(h), np.uint64(1) << np.uint64(s), np.uint64)
+        for s, h in enumerate(per_species)]) if per_species else \
+        np.empty(0, np.uint64)
+    order = np.argsort(all_h, kind="stable")
+    all_h, all_m = all_h[order], all_m[order]
+    # OR the masks of duplicate hashes.
+    uniq, start = np.unique(all_h, return_index=True)
+    masks = np.bitwise_or.reduceat(all_m, start) if len(all_m) else all_m
+    return KmerTable(hashes=uniq, masks=masks, num_species=num_species, k=k)
+
+
+def masks_to_votes(masks: np.ndarray, num_species: int) -> np.ndarray:
+    """(H,) uint64 bitmasks -> (S,) int64 per-species vote counts."""
+    bits = (masks[:, None] >> np.arange(num_species, dtype=np.uint64)[None, :]
+            ) & np.uint64(1)
+    return bits.sum(axis=0).astype(np.int64)

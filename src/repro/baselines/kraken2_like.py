@@ -1,0 +1,55 @@
+"""Kraken2-style baseline: exact k-mer hash lookups + per-read voting.
+
+Faithful to Kraken2's classification logic at species rank with a flat
+taxonomy: every k-mer of the read votes for the species containing it;
+the read is assigned to the max-vote species (ties -> multi-assignment,
+matching LCA semantics flattened to species level); reads with fewer than
+``min_hits`` voting k-mers stay unclassified.  Minimizer database
+subsampling is exposed as ``subsample``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import kmer_table
+from repro.core import classifier
+from repro.genomics import kmers
+
+
+class Kraken2Like:
+    name = "kraken2-like"
+
+    def __init__(self, k: int = 21, subsample: int = 1, min_hits: int = 2):
+        self.k = k
+        self.subsample = subsample
+        self.min_hits = min_hits
+        self.table: kmer_table.KmerTable | None = None
+
+    def build(self, genomes: dict[str, np.ndarray]) -> "Kraken2Like":
+        self.table = kmer_table.build_table(genomes, self.k,
+                                            subsample=self.subsample)
+        return self
+
+    def memory_bytes(self) -> int:
+        assert self.table is not None
+        return self.table.memory_bytes()
+
+    def classify_reads(self, tokens: np.ndarray, lengths: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (hits (R,S) bool, category (R,) int32)."""
+        assert self.table is not None, "call build() first"
+        s = self.table.num_species
+        r = len(tokens)
+        hits = np.zeros((r, s), bool)
+        for i in range(r):
+            h = kmers.read_kmer_hashes(tokens[i], int(lengths[i]), self.k)
+            votes = kmer_table.masks_to_votes(self.table.lookup_masks(h), s)
+            top = votes.max() if len(votes) else 0
+            if top >= self.min_hits:
+                hits[i] = votes == top
+        n = hits.sum(axis=1)
+        category = np.where(n == 0, classifier.UNMAPPED,
+                            np.where(n == 1, classifier.UNIQUE,
+                                     classifier.MULTI)).astype(np.int32)
+        return hits, category

@@ -1,0 +1,1 @@
+"""Sharded checkpointing with async save and elastic resharding on restore."""

@@ -1,0 +1,100 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Four LM shapes per the assignment; ``input_specs`` builds allocation-free
+stand-ins for every model input of the step function being lowered:
+
+  train_4k     seq 4,096  x batch 256   -> train_step
+  prefill_32k  seq 32,768 x batch 32    -> serve prefill (forward)
+  decode_32k   seq 32,768 x batch 128   -> serve decode_step (1 new token)
+  long_500k    seq 524,288 x batch 1    -> decode; sub-quadratic archs only
+
+[audio]: seq_len applies to the encoder (stub frame embeddings); decoder
+takes dec_len_train tokens for train/prefill shapes.
+[vlm]: vlm_prefix stub patch embeddings are part of the sequence budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped). Skips recorded in EXPERIMENTS.md."""
+    if shape.name == "long_500k" and cfg.quadratic_attention:
+        return False, "pure full-attention arch; 500k decode cache is " \
+                      "O(L) per layer for every layer (DESIGN.md skip table)"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's data arguments.
+
+    train  -> {tokens, labels[, enc_embeds | prefix_embeds]}
+    prefill-> {tokens[, enc_embeds | prefix_embeds]}
+    decode -> {token, cur_pos}  (caches come from cache_specs())
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.param_dtype)
+    if shape.kind == "decode":
+        return {"token": _sds((b,), jnp.int32),
+                "cur_pos": _sds((), jnp.int32)}
+    if cfg.family == "audio":
+        d = cfg.dec_len_train
+        spec = {"enc_embeds": _sds((b, s, cfg.d_model), dt),
+                "tokens": _sds((b, d), jnp.int32)}
+        if shape.kind == "train":
+            spec["labels"] = _sds((b, d), jnp.int32)
+        return spec
+    if cfg.family == "vlm":
+        text = s - cfg.vlm_prefix
+        spec = {"prefix_embeds": _sds((b, cfg.vlm_prefix, cfg.d_model), dt),
+                "tokens": _sds((b, text), jnp.int32)}
+        if shape.kind == "train":
+            spec["labels"] = _sds((b, text), jnp.int32)
+        return spec
+    spec = {"tokens": _sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        spec["labels"] = _sds((b, s), jnp.int32)
+    return spec
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> list:
+    """Decode-cache ShapeDtypeStructs (no allocation) for decode shapes."""
+    assert shape.kind == "decode"
+    enc_len = shape.seq_len if cfg.family == "audio" else 0
+    return jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, shape.global_batch,
+                          shape.seq_len, enc_len=enc_len))
+
+
+def param_specs(cfg: ModelConfig, seed: int = 0):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: lm.init_lm(jax.random.key(seed), cfg))

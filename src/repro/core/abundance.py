@@ -1,0 +1,94 @@
+"""Demeter step 5: species-level relative abundance estimation.
+
+Two-phase scheme from paper §3.5:
+
+1. uniquely-mapped reads are assigned to their species directly;
+2. multi-mapped reads are split across their candidate species
+   proportionally to ``unique_count[s] / genome_length[s]`` (the unique-
+   coverage rate), falling back to a uniform split when no candidate has
+   unique support.
+
+This step runs on the host CPU in Acc-Demeter (paper §5.5) — here it is a
+small jit'd function; the heavy inputs (hit masks) stream from step 4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import classifier
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AbundanceResult:
+    abundance: jax.Array        # (S,) float32 — relative abundance (sums to 1 over mapped)
+    unique_counts: jax.Array    # (S,) int32
+    multi_counts: jax.Array     # (S,) float32 — fractional multi-mapped mass
+    unmapped_fraction: jax.Array  # () float32
+    multi_fraction: jax.Array     # () float32
+
+
+@jax.jit
+def estimate(hits: jax.Array, category: jax.Array,
+             genome_lengths: jax.Array) -> AbundanceResult:
+    """Estimate relative abundance from per-read hit masks.
+
+    Args:
+      hits: ``(R, S)`` bool hit mask from step 4.
+      category: ``(R,)`` int32 read category (UNMAPPED/UNIQUE/MULTI).
+      genome_lengths: ``(S,)`` int32 reference genome lengths.
+    """
+    r = hits.shape[0]
+    unique = (category == classifier.UNIQUE)[:, None] & hits
+    unique_counts = unique.sum(axis=0).astype(jnp.int32)
+
+    # Phase 2: proportional split of multi-mapped reads.
+    rate = unique_counts.astype(jnp.float32) / jnp.maximum(
+        genome_lengths.astype(jnp.float32), 1.0)
+    multi_rows = (category == classifier.MULTI)[:, None] & hits
+    w = multi_rows.astype(jnp.float32) * rate[None, :]
+    row_mass = w.sum(axis=-1, keepdims=True)
+    # Fallback: uniform split over hit species when no unique support.
+    uniform = multi_rows.astype(jnp.float32)
+    uniform = uniform / jnp.maximum(uniform.sum(axis=-1, keepdims=True), 1.0)
+    w = jnp.where(row_mass > 0, w / jnp.maximum(row_mass, 1e-30), uniform)
+    multi_counts = w.sum(axis=0)
+
+    mapped = unique_counts.astype(jnp.float32) + multi_counts
+    total_mapped = jnp.maximum(mapped.sum(), 1e-30)
+    return AbundanceResult(
+        abundance=mapped / total_mapped,
+        unique_counts=unique_counts,
+        multi_counts=multi_counts,
+        unmapped_fraction=(category == classifier.UNMAPPED).mean(),
+        multi_fraction=(category == classifier.MULTI).mean(),
+    )
+
+
+def merge(results: list[AbundanceResult],
+          genome_lengths: jax.Array) -> AbundanceResult:
+    """Merge per-batch abundance partials (streamed profiling).
+
+    Unique/multi counts are additive; the proportional split is recomputed
+    implicitly because each batch already applied its own weights — for
+    exact streaming semantics, callers should accumulate hit masks and call
+    :func:`estimate` once, which `profiler.Demeter.profile` does by
+    accumulating count vectors instead (cheap) and only re-splitting multi
+    mass at the end.
+    """
+    unique = sum(r.unique_counts for r in results)
+    multi = sum(r.multi_counts for r in results)
+    mapped = unique.astype(jnp.float32) + multi
+    total = jnp.maximum(mapped.sum(), 1e-30)
+    n = len(results)
+    return AbundanceResult(
+        abundance=mapped / total,
+        unique_counts=unique,
+        multi_counts=multi,
+        unmapped_fraction=sum(r.unmapped_fraction for r in results) / n,
+        multi_fraction=sum(r.multi_fraction for r in results) / n,
+    )

@@ -1,0 +1,143 @@
+"""Associative memory (AM): the HD reference database (HD-RefDB).
+
+Demeter step 2 builds one (or a few) *prototype* HD vectors per reference
+genome; we use windowed prototypes (one per genome window) because
+bundling signal decays as 1/sqrt(#grams) — a handful of window prototypes
+per species keeps read/prototype correlation detectable on real genome
+sizes while keeping the AM tiny (paper §3.2 "one (or few) prototype HD
+vector(s)").
+
+The AM is immutable after build (PCM write-once discipline, paper §5.4);
+``RefDB`` is a pytree so the query path jits/shards cleanly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops, encoder, item_memory
+from repro.core.hd_space import HDSpace
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RefDB:
+    """HD reference database (the content of Acc-Demeter's AM unit).
+
+    prototypes: ``(S, W)`` packed prototype HD vectors (S = total windows).
+    proto_species: ``(S,)`` int32 species index of each prototype.
+    genome_lengths: ``(num_species,)`` int32 reference lengths (abundance).
+    """
+    prototypes: jax.Array
+    proto_species: jax.Array
+    genome_lengths: jax.Array
+    num_species: int = dataclasses.field(metadata=dict(static=True))
+    species_names: tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_prototypes(self) -> int:
+        return self.prototypes.shape[0]
+
+    def memory_bytes(self) -> int:
+        """Size of the working data structure (paper Fig. 6 comparison)."""
+        return (self.prototypes.size * 4 + self.proto_species.size * 4
+                + self.genome_lengths.size * 4)
+
+
+def window_tokens(tokens: np.ndarray, window: int, stride: int) -> np.ndarray:
+    """Slice a genome token array into ``(num_windows, window)`` (padded)."""
+    length = len(tokens)
+    if length <= window:
+        out = np.zeros((1, window), np.int32)
+        out[0, :length] = tokens
+        return out, np.array([length], np.int32)
+    starts = np.arange(0, length - window + 1, stride)
+    if starts[-1] + window < length:  # tail window
+        starts = np.append(starts, length - window)
+    idx = starts[:, None] + np.arange(window)[None, :]
+    return tokens[idx].astype(np.int32), np.full(len(starts), window, np.int32)
+
+
+def build_refdb(genomes: dict[str, np.ndarray], space: HDSpace, *,
+                window: int = 8192, stride: int | None = None,
+                batch_size: int = 64) -> RefDB:
+    """Demeter step 2: encode every reference genome into the AM.
+
+    Windows are encoded in batches through the shared N-gram encoder; the
+    host loop only orchestrates (all math is jit'd). One prototype per
+    window, tagged with its species.
+    """
+    stride = stride or window
+    im = item_memory.make_item_memory(space)
+    tie = item_memory.make_tie_break(space)
+
+    all_protos: list[np.ndarray] = []
+    all_species: list[np.ndarray] = []
+    lengths = np.zeros(len(genomes), np.int32)
+    names = tuple(genomes.keys())
+
+    encode = jax.jit(lambda t, l: encoder.encode(t, l, im, tie, space))
+    for s, (name, toks) in enumerate(genomes.items()):
+        lengths[s] = len(toks)
+        wins, wlens = window_tokens(np.asarray(toks), window, stride)
+        for i in range(0, len(wins), batch_size):
+            batch, blen = wins[i:i + batch_size], wlens[i:i + batch_size]
+            protos = np.asarray(encode(jnp.asarray(batch), jnp.asarray(blen)))
+            all_protos.append(protos)
+            all_species.append(np.full(len(batch), s, np.int32))
+
+    return RefDB(
+        prototypes=jnp.asarray(np.concatenate(all_protos)),
+        proto_species=jnp.asarray(np.concatenate(all_species)),
+        genome_lengths=jnp.asarray(lengths),
+        num_species=len(genomes),
+        species_names=names,
+    )
+
+
+def agreement_matmul(queries: jax.Array, prototypes: jax.Array,
+                     dim: int) -> jax.Array:
+    """Agreement scores via the +-1 matmul identity (MXU formulation).
+
+    ``agreement = D - Ham(Q,P) = (D + Q_hat @ P_hat.T) / 2`` with
+    Q_hat = 2Q-1. This is the software twin of ``kernels/am_matmul``; on
+    CPU it maps to BLAS, on TPU the Pallas kernel takes over.
+    """
+    q = (2.0 * bitops.unpack_bits(queries).astype(jnp.float32) - 1.0)
+    p = (2.0 * bitops.unpack_bits(prototypes).astype(jnp.float32) - 1.0)
+    s = q @ p.T
+    return ((dim + s) / 2.0).astype(jnp.int32)
+
+
+def agreement_packed_chunked(queries: jax.Array, prototypes: jax.Array,
+                             dim: int, chunk: int = 128) -> jax.Array:
+    """Agreement via packed XOR+popcount, chunked over prototypes.
+
+    Bandwidth-optimal digital formulation (paper Eq. 2); used when the
+    prototype set is large and bf16 expansion would not pay off.
+    """
+    def one_chunk(p_chunk):
+        ham = bitops.popcount_words(
+            jnp.bitwise_xor(queries[:, None, :], p_chunk[None, :, :]))
+        return dim - ham  # (B, chunk)
+
+    s, w = prototypes.shape
+    pad = (-s) % chunk
+    padded = jnp.pad(prototypes, ((0, pad), (0, 0)))
+    chunks = padded.reshape(-1, chunk, w)
+    out = jax.lax.map(one_chunk, chunks)           # (nc, B, chunk)
+    out = jnp.moveaxis(out, 0, 1).reshape(queries.shape[0], -1)
+    return out[:, :s]
+
+
+def species_scores(agreement: jax.Array, proto_species: jax.Array,
+                   num_species: int) -> jax.Array:
+    """Max agreement per species over its window prototypes -> (B, S)."""
+    return jax.ops.segment_max(
+        agreement.T, proto_species, num_segments=num_species,
+        indices_are_sorted=True).T

@@ -1,0 +1,82 @@
+"""Packed-bit utilities for binary hyperdimensional vectors.
+
+A binary HD vector of dimension ``D`` (``D % 32 == 0``) is stored as a
+``uint32`` array of ``W = D // 32`` words, LSB-first within each word:
+bit ``d`` of the HD vector lives at ``words[d // 32] >> (d % 32) & 1``.
+
+The HDC permutation ``rho`` (the paper's free flip-flop shift) is realized
+as a rotation by whole 32-bit words — a pure relayout (``jnp.roll`` on the
+word axis), free on TPU. See DESIGN.md §2 for why a word-roll is an
+equally valid HDC permutation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+# (1, 2, 4, ..., 2**31) used to pack/unpack LSB-first.
+_BIT_WEIGHTS = (1 << np.arange(WORD_BITS, dtype=np.uint64)).astype(np.uint32)
+
+
+def num_words(dim: int) -> int:
+    """Number of uint32 words holding a ``dim``-bit HD vector."""
+    if dim % WORD_BITS != 0:
+        raise ValueError(f"HD dimension must be a multiple of {WORD_BITS}, got {dim}")
+    return dim // WORD_BITS
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack ``(..., D)`` {0,1} bits into ``(..., D//32)`` uint32 words."""
+    d = bits.shape[-1]
+    w = num_words(d)
+    grouped = bits.astype(jnp.uint32).reshape(*bits.shape[:-1], w, WORD_BITS)
+    weights = jnp.asarray(_BIT_WEIGHTS, dtype=jnp.uint32)
+    return (grouped * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array) -> jax.Array:
+    """Unpack ``(..., W)`` uint32 words into ``(..., W*32)`` uint8 bits."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS).astype(jnp.uint8)
+
+
+def popcount_words(words: jax.Array) -> jax.Array:
+    """Total number of set bits along the trailing word axis -> int32."""
+    return jnp.bitwise_count(words).astype(jnp.int32).sum(axis=-1)
+
+
+def rho(words: jax.Array, k: int = 1) -> jax.Array:
+    """Apply the HDC permutation ``rho**k`` (rotate by ``k`` words).
+
+    Equivalent to ``jnp.roll(bits, 32 * k)`` on the unpacked bit vector.
+    """
+    return jnp.roll(words, k, axis=-1)
+
+
+def hamming_packed(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Hamming distance between packed vectors, broadcasting leading dims."""
+    return popcount_words(jnp.bitwise_xor(a, b))
+
+
+def agreement_packed(a: jax.Array, b: jax.Array, dim: int) -> jax.Array:
+    """Number of agreeing bit positions (the paper's XNOR+popcount, Eq. 2)."""
+    return dim - hamming_packed(a, b)
+
+
+def random_packed(key: jax.Array, shape: tuple[int, ...], dim: int,
+                  density: float = 0.5) -> jax.Array:
+    """Random packed HD vectors with the given bit density.
+
+    ``density == 0.5`` (the paper's dense distributed representation) uses
+    raw PRNG words; other densities threshold per-bit uniforms and pack.
+    """
+    w = num_words(dim)
+    if density == 0.5:
+        return jax.random.bits(key, shape + (w,), dtype=jnp.uint32)
+    bits = (jax.random.uniform(key, shape + (dim,)) < density).astype(jnp.uint8)
+    return pack_bits(bits)

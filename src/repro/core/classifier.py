@@ -1,0 +1,65 @@
+"""Demeter step 4: multi-species classification per read.
+
+Unlike prior HDC systems (winner-take-all), a read may match one, many, or
+*no* species (paper §3.4) — the classifier returns the full hit mask plus
+a category per read:
+
+    0 = unmapped   (no species above threshold)
+    1 = unique     (exactly one)
+    2 = multi      (more than one)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import assoc_memory
+from repro.core.assoc_memory import RefDB
+from repro.core.hd_space import HDSpace
+
+UNMAPPED, UNIQUE, MULTI = 0, 1, 2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ReadClassification:
+    """Per-read classification outcome for a batch of R reads, S species."""
+    hits: jax.Array        # (R, S) bool — agreement >= T
+    scores: jax.Array      # (R, S) int32 — best agreement per species
+    category: jax.Array    # (R,) int32 — UNMAPPED / UNIQUE / MULTI
+
+    @property
+    def num_hits(self) -> jax.Array:
+        return self.hits.sum(axis=-1)
+
+
+def classify(queries: jax.Array, refdb: RefDB, space: HDSpace, *,
+             threshold_bits: float | None = None,
+             packed_path: bool = False) -> ReadClassification:
+    """Score query HD vectors against the AM and threshold (paper Eq. 2).
+
+    Args:
+      queries: ``(R, W)`` packed query HD vectors (Demeter step 3 output).
+      refdb: the HD-RefDB.
+      threshold_bits: absolute agreement threshold T; defaults to the HD
+        space's z-score-derived threshold.
+      packed_path: use the XOR+popcount formulation instead of the +-1
+        matmul one (identical results; different roofline).
+    """
+    t = space.threshold_bits if threshold_bits is None else threshold_bits
+    if packed_path:
+        agree = assoc_memory.agreement_packed_chunked(
+            queries, refdb.prototypes, space.dim)
+    else:
+        agree = assoc_memory.agreement_matmul(
+            queries, refdb.prototypes, space.dim)
+    scores = assoc_memory.species_scores(
+        agree, refdb.proto_species, refdb.num_species)
+    hits = scores >= jnp.asarray(t, scores.dtype)
+    n = hits.sum(axis=-1)
+    category = jnp.where(n == 0, UNMAPPED, jnp.where(n == 1, UNIQUE, MULTI))
+    return ReadClassification(hits=hits, scores=scores,
+                              category=category.astype(jnp.int32))

@@ -1,0 +1,130 @@
+"""N-gram HD encoder: binding (XOR + permutation) and bundling (majority).
+
+Implements paper Eq. 1:
+
+    gram_i = B[c_i]  XOR  rho(B[c_{i+1}])  XOR ... XOR  rho^{N-1}(B[c_{i+N-1}])
+
+followed by bundling: per-bit counters over all grams of a sequence, then
+a majority threshold (ties broken by a fixed random vector).
+
+Two formulations are provided, both exact:
+
+* ``encode_grams`` — gather-based, materializes all grams; used for short
+  reads and as the oracle for the Pallas kernel.
+* ``bundle_counts`` — rolling-gram recurrence
+  ``gram_{i+1} = rho^-1(gram_i ^ B[c_i]) ^ rho^{N-1}(B[c_{i+N}])``
+  inside a ``lax.fori_loop`` — O(1) work per position independent of N and
+  O(B*D) memory; this is the software form of Acc-Demeter's flip-flop
+  pipeline (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops, item_memory
+from repro.core.hd_space import HDSpace
+
+
+def num_grams(seq_len: int, n: int) -> int:
+    return max(seq_len - n + 1, 0)
+
+
+def encode_grams(tokens: jax.Array, im_rolled: jax.Array) -> jax.Array:
+    """All n-gram HD vectors of ``tokens``.
+
+    Args:
+      tokens: ``(..., L)`` int32 symbol ids in [0, alphabet).
+      im_rolled: ``(N, alphabet, W)`` from :func:`item_memory.rolled`.
+
+    Returns:
+      ``(..., L-N+1, W)`` packed gram vectors.
+    """
+    n = im_rolled.shape[0]
+    length = tokens.shape[-1]
+    g = num_grams(length, n)
+    acc = im_rolled[0][tokens[..., 0:g]]
+    for j in range(1, n):
+        acc = jnp.bitwise_xor(acc, im_rolled[j][tokens[..., j:j + g]])
+    return acc
+
+
+def _first_gram(tokens: jax.Array, im_rolled: jax.Array) -> jax.Array:
+    """gram_0 for the rolling recurrence: XOR_j rho^j(B[c_j])."""
+    n = im_rolled.shape[0]
+    acc = im_rolled[0][tokens[..., 0]]
+    for j in range(1, n):
+        acc = jnp.bitwise_xor(acc, im_rolled[j][tokens[..., j]])
+    return acc
+
+
+@partial(jax.jit, static_argnames=("n", "dim"))
+def bundle_counts(tokens: jax.Array, lengths: jax.Array, im: jax.Array,
+                  im_last: jax.Array, *, n: int, dim: int
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Per-bit bundling counters over all valid grams of each sequence.
+
+    Args:
+      tokens: ``(B, L)`` int32 padded symbol ids.
+      lengths: ``(B,)`` int32 true sequence lengths (<= L).
+      im: ``(alphabet, W)`` packed item memory.
+      im_last: ``rho^{N-1}(im)``, i.e. ``item_memory.rolled(im, n)[n-1]``.
+      n: n-gram size.
+      dim: HD dimension D.
+
+    Returns:
+      counts: ``(B, D)`` int32 per-bit counters.
+      m: ``(B,)`` int32 number of valid grams per sequence.
+    """
+    b, length = tokens.shape
+    g = num_grams(length, n)
+    m = jnp.maximum(lengths - n + 1, 0).astype(jnp.int32)
+    if g == 0:
+        return jnp.zeros((b, dim), jnp.int32), m
+
+    im_rolled = item_memory.rolled(im, n)
+    gram0 = _first_gram(tokens, im_rolled)
+    counts0 = jnp.zeros((b, dim), jnp.int32)
+
+    def body(i, carry):
+        gram, counts = carry
+        valid = (i < m)[:, None]
+        counts = counts + jnp.where(valid, bitops.unpack_bits(gram), 0)
+        # gram_{i+1} = rho^-1(gram_i ^ B[c_i]) ^ rho^{N-1}(B[c_{i+n}])
+        nxt_tok = tokens[:, jnp.minimum(i + n, length - 1)]
+        gram = jnp.bitwise_xor(
+            bitops.rho(jnp.bitwise_xor(gram, im[tokens[:, i]]), -1),
+            im_last[nxt_tok])
+        return gram, counts
+
+    _, counts = jax.lax.fori_loop(0, g, body, (gram0, counts0))
+    return counts, m
+
+
+def binarize_majority(counts: jax.Array, m: jax.Array,
+                      tie_break: jax.Array) -> jax.Array:
+    """Majority threshold over bundling counters -> packed HD vector.
+
+    bit = 1 if 2*count > m; exact ties (even m) take the tie-break bit.
+    """
+    tie_bits = bitops.unpack_bits(tie_break)
+    twice = 2 * counts
+    m_col = m[..., None]
+    bits = jnp.where(twice == m_col, tie_bits, (twice > m_col).astype(jnp.uint8))
+    return bitops.pack_bits(bits)
+
+
+def encode(tokens: jax.Array, lengths: jax.Array, im: jax.Array,
+           tie_break: jax.Array, space: HDSpace) -> jax.Array:
+    """Full encode of a batch of sequences -> ``(B, W)`` packed HD vectors.
+
+    This is Demeter step 3 (read conversion) and the inner loop of step 2
+    (reference construction runs it over genome windows).
+    """
+    im_last = bitops.rho(im, space.ngram - 1)
+    counts, m = bundle_counts(tokens, lengths, im, im_last,
+                              n=space.ngram, dim=space.dim)
+    return binarize_majority(counts, m, tie_break)

@@ -1,0 +1,41 @@
+"""Item memory (IM): the atomic HD vectors for the genome alphabet.
+
+Mirrors Acc-Demeter's IM unit (paper §5.2): generated once per HD space,
+then read-only.  On TPU the IM is tiny (alphabet_size x W words, ~20 KB at
+D=40,960) and lives in VMEM replicated per core, playing the role of the
+row-major PCM array that can be read in one cycle.
+
+``rolled`` precomputes ``rho**j(IM)`` for j in [0, N) so the Pallas encoder
+kernel can treat every word-block independently (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.core.hd_space import HDSpace
+
+
+def make_item_memory(space: HDSpace) -> jax.Array:
+    """Generate the ``(alphabet_size, W)`` packed atomic HD vectors."""
+    key = jax.random.key(space.seed)
+    return bitops.random_packed(
+        key, (space.alphabet_size,), space.dim, space.density)
+
+
+def make_tie_break(space: HDSpace) -> jax.Array:
+    """Fixed random packed vector used to break majority ties (even M)."""
+    key = jax.random.key(space.seed ^ 0x7EB4EA4)
+    return bitops.random_packed(key, (), space.dim, 0.5)
+
+
+def rolled(im: jax.Array, n: int) -> jax.Array:
+    """Stack ``rho**j(im)`` for j in [0, n) -> ``(n, alphabet, W)``.
+
+    The j-th character of an n-gram is bound through ``rho**j`` (paper
+    Eq. 1); precomputing the rolled copies turns every gram into a pure
+    gather+XOR with no cross-word traffic inside kernels.
+    """
+    return jnp.stack([bitops.rho(im, j) for j in range(n)], axis=0)

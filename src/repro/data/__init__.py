@@ -1,0 +1,5 @@
+"""Data pipelines: deterministic synthetic LM streams + genomics reads."""
+
+from repro.data.lm_data import DataConfig, batch_at
+
+__all__ = ["DataConfig", "batch_at"]

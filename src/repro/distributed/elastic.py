@@ -1,0 +1,64 @@
+"""Elastic scaling: move a training job between mesh sizes.
+
+Checkpoints store full host arrays (checkpoint/checkpointer.py), so
+elasticity reduces to (1) recomputing shardings for the new mesh and
+(2) rescaling schedule-coupled quantities.  ``reshard_plan`` validates
+that every parameter still divides the new mesh axes (the name-based
+rules drop non-dividing axes automatically) and reports what changed —
+at 1000+ nodes you want the delta logged, not silent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from jax.sharding import Mesh
+
+from repro.distributed import param_specs, sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ReshardReport:
+    n_leaves: int
+    changed: tuple[str, ...]          # leaves whose PartitionSpec changed
+    dropped_axes: tuple[str, ...]     # leaves that lost a sharded axis
+
+
+def reshard_plan(state_shapes, old_mesh: Mesh, new_mesh: Mesh,
+                 rules: sharding.Rules) -> tuple[object, ReshardReport]:
+    """New-mesh shardings for a TrainState + a human-readable delta report."""
+    import jax
+
+    old = param_specs.state_shardings(state_shapes, old_mesh, rules)
+    new = param_specs.state_shardings(state_shapes, new_mesh, rules)
+
+    changed, dropped = [], []
+    old_flat = jax.tree_util.tree_flatten_with_path(old)[0]
+    new_flat = jax.tree_util.tree_flatten_with_path(new)[0]
+    for (path, o), (_, n) in zip(old_flat, new_flat):
+        key = "/".join(str(getattr(e, "key", e)) for e in path)
+        if o.spec != n.spec:
+            changed.append(key)
+            o_axes = {a for part in o.spec if part
+                      for a in (part if isinstance(part, tuple) else (part,))}
+            n_axes = {a for part in n.spec if part
+                      for a in (part if isinstance(part, tuple) else (part,))}
+            if o_axes - n_axes:
+                dropped.append(key)
+    return new, ReshardReport(n_leaves=len(new_flat),
+                              changed=tuple(changed),
+                              dropped_axes=tuple(dropped))
+
+
+def rescale_batch(global_batch: int, old_data_shards: int,
+                  new_data_shards: int, *, keep_global: bool = True) -> int:
+    """Elastic batch policy: keep the global batch (preferred — optimizer
+    hyperparameters stay valid) as long as it divides the new data axis."""
+    if keep_global:
+        if global_batch % new_data_shards != 0:
+            raise ValueError(
+                f"global batch {global_batch} does not divide new data "
+                f"axis {new_data_shards}; pick a microbatch-compatible size")
+        return global_batch
+    per = global_batch // old_data_shards
+    return per * new_data_shards

@@ -1,0 +1,134 @@
+"""Name-based PartitionSpecs for parameter / optimizer / cache pytrees.
+
+Every model parameter has a stable leaf name (wq, w_in, e_out, ...); this
+module maps names to logical axes and resolves them against the active
+(mesh, rules) with divisibility checks, yielding NamedShardings for pjit
+in_shardings/out_shardings.  Stacked leading layer dims (from scan-stacked
+segments) are detected by rank and get a replicated prefix axis.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import Rules
+
+# logical axes per parameter leaf name (unstacked rank)
+PARAM_AXES: dict[str, tuple] = {
+    "tok_embed": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "wq": ("fsdp", "heads", None),
+    "wk": ("fsdp", "kv_heads", None),
+    "wv": ("fsdp", "kv_heads", None),
+    "wo": ("heads", None, "fsdp"),
+    "w_dkv": ("fsdp", None),
+    "w_kr": ("fsdp", None),
+    "w_uk": (None, "heads", None),
+    "w_uv": (None, "heads", None),
+    "w_in": ("fsdp", "ff"),
+    "w_gate": ("fsdp", "ff"),
+    "w_out": ("ff", "fsdp"),
+    "router": (None, None),
+    "e_in": ("experts", "fsdp", None),
+    "e_gate": ("experts", "fsdp", None),
+    "e_out": ("experts", None, "fsdp"),
+    "in_proj": ("fsdp", None),
+    "out_proj": (None, "fsdp"),
+    "conv_w": (None, None),
+    "conv_b": (None,),
+    "a_log": (None,),
+    "d_skip": (None,),
+    "dt_bias": (None,),
+    "scale": (None,),
+    "bias": (None,),
+    "branch_scale": (None,),
+}
+
+CACHE_AXES: dict[str, tuple] = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "c": ("batch", "kv_seq", None),
+    "kr": ("batch", "kv_seq", None),
+    "kpos": ("batch", "kv_seq"),
+    "xk": ("batch", "kv_seq", "kv_heads", None),
+    "xv": ("batch", "kv_seq", "kv_heads", None),
+    "xkpos": ("batch", "kv_seq"),
+    "conv": ("batch", None, None),
+    "state": ("batch", "ssm_heads", None, None),
+}
+
+
+def _axis_size(mesh: Mesh, target) -> int:
+    names = target if isinstance(target, tuple) else (target,)
+    size = 1
+    for n in names:
+        if n in mesh.axis_names:
+            size *= mesh.shape[n]
+    return size
+
+
+def _resolve_leaf(shape: tuple[int, ...], axes: tuple, mesh: Mesh,
+                  rules: Rules) -> P:
+    ndim = len(shape)
+    if ndim > len(axes):                 # stacked (scan) leading dims
+        axes = (None,) * (ndim - len(axes)) + tuple(axes)
+    axes = axes[:ndim]
+    out = []
+    for dim, ax in zip(shape, axes):
+        target = rules.get(ax) if ax else None
+        if isinstance(target, tuple):
+            target = tuple(t for t in target if t in mesh.axis_names) or None
+        elif target is not None and target not in mesh.axis_names:
+            target = None
+        if target is not None and dim % max(_axis_size(mesh, target), 1) == 0 \
+                and _axis_size(mesh, target) > 1:
+            out.append(target)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def tree_pspecs(tree, mesh: Mesh, rules: Rules, table: dict[str, tuple],
+                default: tuple = ()) -> object:
+    """Map a pytree of arrays/ShapeDtypeStructs to a pytree of NamedShardings."""
+    def one(path, leaf):
+        name = _leaf_name(path)
+        axes = table.get(name, default)
+        return NamedSharding(mesh, _resolve_leaf(tuple(leaf.shape), axes,
+                                                 mesh, rules))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def param_shardings(params, mesh: Mesh, rules: Rules):
+    return tree_pspecs(params, mesh, rules, PARAM_AXES)
+
+
+def state_shardings(state, mesh: Mesh, rules: Rules):
+    """TrainState {params, opt{m,v}, step} shardings (opt mirrors params)."""
+    return {
+        "params": param_shardings(state["params"], mesh, rules),
+        "opt": {"m": param_shardings(state["opt"]["m"], mesh, rules),
+                "v": param_shardings(state["opt"]["v"], mesh, rules)},
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def cache_shardings(caches, mesh: Mesh, rules: Rules):
+    return tree_pspecs(caches, mesh, rules, CACHE_AXES)
+
+
+def batch_shardings(batch, mesh: Mesh, rules: Rules):
+    """Input batches: first dim is batch, everything else replicated."""
+    def one(path, leaf):
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, _resolve_leaf(tuple(leaf.shape), axes,
+                                                 mesh, rules))
+    return jax.tree_util.tree_map_with_path(one, batch)

@@ -1,0 +1,5 @@
+"""Genomics data substrate: alphabet, synthetic communities, IO, k-mers."""
+
+from repro.genomics import alphabet, kmers, synth
+
+__all__ = ["alphabet", "kmers", "synth"]

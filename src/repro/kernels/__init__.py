@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for Demeter's compute hot-spots.
+
+* am_matmul     — AM similarity as +-1 MXU matmul (the PCM crossbar VMM).
+* hamming_am    — AM similarity as packed XOR+popcount (VPU, bandwidth-optimal).
+* hdc_encoder   — N-gram bind + bundle + majority, one grid cell per
+                  (read-block, word-block).
+
+``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel for the Demeter N-gram encoder (bind + bundle).
+
+TPU port of Acc-Demeter's encoder unit (paper §5.3).  Design notes:
+
+* **No gathers.** TPU Pallas has no efficient dynamic gather; the genome
+  alphabet has only 4 symbols, so the IM row lookup ``B[c]`` becomes 4
+  predicated selects — the VPU equivalent of the paper's one-cycle
+  row-major IM read.
+* **No runtime permutation.** The rolled item memories ``rho^j(IM)`` for
+  j < N are precomputed host-side (N*4*W words, KBs) so every word-block
+  of the HD space is fully independent -> embarrassingly parallel grid
+  over (batch, word-block), zero cross-block traffic.  This is the TPU
+  realization of the "free shift" flip-flop chain.
+* **Counters layout** ``(bb, 32, bw)``: the lane dimension stays the
+  word-block (multiple of 128); the 32 bit positions of each word sit in
+  sublanes.
+* Bundling majority (with tie-break vector) and re-packing happen in the
+  same kernel — one HBM write of W words per read, nothing else leaves.
+
+Grid: (B/bb, W/bw); the whole gram loop for a read runs inside one grid
+cell, mirroring the paper's streaming encoder.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pallas_compat import CompilerParams, VMEM, interpret_default
+
+WORD_BITS = 32
+
+
+def _unpack(words: jax.Array) -> jax.Array:
+    """(bb, bw) uint32 -> (bb, 32, bw) int32 bits (bit b in sublane b)."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, :, None]
+    return ((words[:, None, :] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+
+
+def _pack(bits: jax.Array) -> jax.Array:
+    """(bb, 32, bw) {0,1} -> (bb, bw) uint32."""
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    return (bits.astype(jnp.uint32) * weights[None, :, None]).sum(
+        axis=1, dtype=jnp.uint32)
+
+
+def _kernel(tokens_ref, len_ref, im_ref, tie_ref, o_ref, counts_ref,
+            *, n: int, alphabet: int, g: int):
+    toks = tokens_ref[...]                       # (bb, L) int32
+    m = jnp.maximum(len_ref[...] - (n - 1), 0)   # (bb, 1) valid grams
+    counts_ref[...] = jnp.zeros_like(counts_ref)
+    bw = o_ref.shape[-1]
+    bb = o_ref.shape[0]
+
+    if g > 0:
+        def body(i, _):
+            window = jax.lax.dynamic_slice(toks, (0, i), (bb, n))  # (bb, n)
+            gram = jnp.zeros((bb, bw), jnp.uint32)
+            for j in range(n):                    # bind: XOR of rho^j(B[c])
+                tok_j = window[:, j][:, None]     # (bb, 1)
+                for a in range(alphabet):         # gather-free IM lookup
+                    row = im_ref[j, a, :][None, :]
+                    gram = jnp.bitwise_xor(
+                        gram, jnp.where(tok_j == a, row, jnp.uint32(0)))
+            valid = (i < m[:, 0])[:, None, None]  # (bb, 1, 1)
+            counts_ref[...] += jnp.where(valid, _unpack(gram), 0)
+            return 0
+
+        jax.lax.fori_loop(0, g, body, 0)
+
+    # Bundle: majority with tie-break (paper's thresholded counters).
+    counts = counts_ref[...]                      # (bb, 32, bw)
+    twice = 2 * counts
+    m_b = m[:, 0][:, None, None]
+    tie_bits = _unpack(tie_ref[...])[0:1]         # (1, 32, bw)
+    bits = jnp.where(twice == m_b, tie_bits,
+                     (twice > m_b).astype(jnp.int32))
+    o_ref[...] = _pack(bits)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "alphabet", "bb", "bw",
+                                             "interpret"))
+def hdc_encode(tokens: jax.Array, lengths: jax.Array, im_rolled: jax.Array,
+               tie: jax.Array, *, n: int, alphabet: int = 4, bb: int = 8,
+               bw: int = 128, interpret: bool | None = None) -> jax.Array:
+    """Encode a batch of symbol sequences into packed query HD vectors.
+
+    Args:
+      tokens: ``(B, L)`` int32 symbol ids in [0, alphabet).
+      lengths: ``(B, 1)`` int32 true lengths.
+      im_rolled: ``(N, alphabet, W)`` uint32 — ``item_memory.rolled``.
+      tie: ``(1, W)`` uint32 tie-break vector.
+
+    Returns:
+      ``(B, W)`` uint32 packed HD vectors (majority-bundled n-grams).
+    """
+    b, length = tokens.shape
+    n_im, a_im, w = im_rolled.shape
+    assert n_im == n and a_im == alphabet
+    g = max(length - n + 1, 0)
+    bb, bw = min(bb, b), min(bw, w)
+    assert b % bb == 0 and w % bw == 0, (
+        f"(B={b}, W={w}) must tile by (bb={bb}, bw={bw}); pad upstream")
+    grid = (b // bb, w // bw)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, alphabet=alphabet, g=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, length), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, alphabet, bw), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((1, bw), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, w), jnp.uint32),
+        scratch_shapes=[VMEM((bb, WORD_BITS, bw), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret_default(interpret),
+    )(tokens, lengths, im_rolled, tie)

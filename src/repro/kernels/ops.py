@@ -1,0 +1,82 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle padding to block multiples, the packed<->+-1 conversions, and
+formulation selection, so callers (core.profiler, launch drivers) can stay
+shape-agnostic.  On CPU the kernels execute in interpret mode; the wrappers
+are the single switch point between the MXU and VPU formulations.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops, item_memory
+from repro.core.hd_space import HDSpace
+from repro.kernels import am_matmul as _am_matmul
+from repro.kernels import hamming_am as _hamming_am
+from repro.kernels import hdc_encoder as _hdc_encoder
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def to_pm1(packed: jax.Array) -> jax.Array:
+    """Packed bits -> {-1,+1} bf16 (the MXU encoding of the AM crossbar)."""
+    bits = bitops.unpack_bits(packed)
+    return (2.0 * bits.astype(jnp.bfloat16) - 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "formulation"))
+def am_agreement(queries: jax.Array, prototypes: jax.Array, dim: int,
+                 formulation: str = "matmul") -> jax.Array:
+    """Agreement (matching bits) of every query vs every prototype.
+
+    Args:
+      queries: ``(B, W)`` uint32 packed.
+      prototypes: ``(S, W)`` uint32 packed.
+      formulation: "matmul" (MXU, default) or "packed" (VPU popcount).
+
+    Returns:
+      ``(B, S)`` int32 agreement in [0, dim].
+    """
+    b, s = queries.shape[0], prototypes.shape[0]
+    if formulation == "matmul":
+        bk = min(512, dim)
+        q = _pad_to(_pad_to(to_pm1(queries), 0, 128), 1, bk)
+        p = _pad_to(_pad_to(to_pm1(prototypes), 0, 128), 1, bk)
+        out = _am_matmul.am_matmul(q, p, dim=dim, bk=bk)
+    elif formulation == "packed":
+        bw = min(256, dim // 32)
+        q = _pad_to(_pad_to(queries, 0, 8), 1, bw)
+        p = _pad_to(_pad_to(prototypes, 0, 128), 1, bw)
+        out = _hamming_am.hamming_am(q, p, dim=dim, bw=bw)
+    else:
+        raise ValueError(f"unknown formulation {formulation!r}")
+    return out[:b, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("space",))
+def hdc_encode(tokens: jax.Array, lengths: jax.Array, im: jax.Array,
+               tie: jax.Array, space: HDSpace) -> jax.Array:
+    """Kernel-backed Demeter read conversion (step 3).
+
+    Same contract as :func:`repro.core.encoder.encode`.
+    """
+    b = tokens.shape[0]
+    im_rolled = item_memory.rolled(im, space.ngram)
+    toks = _pad_to(tokens.astype(jnp.int32), 0, 8)
+    lens = _pad_to(lengths.astype(jnp.int32)[:, None], 0, 8)
+    bw = min(128, space.num_words)
+    out = _hdc_encoder.hdc_encode(
+        toks, lens, im_rolled, tie[None, :], n=space.ngram,
+        alphabet=space.alphabet_size, bw=bw)
+    return out[:b]

@@ -1,0 +1,34 @@
+"""Small compatibility shims for Pallas TPU across JAX versions.
+
+The repo targets TPU (pl.pallas_call + BlockSpec VMEM tiling) but runs its
+correctness suite on CPU via interpret mode; these helpers keep the
+kernels identical in both worlds.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.4.31 style
+    from jax.experimental.pallas import tpu as pltpu
+    VMEM = pltpu.VMEM
+
+    def CompilerParams(**kw):
+        if hasattr(pltpu, "CompilerParams"):
+            return pltpu.CompilerParams(**kw)
+        return pltpu.TPUCompilerParams(**kw)  # older spelling
+except ImportError:  # pragma: no cover - pallas-tpu always importable in CI
+    import jax.numpy as jnp
+
+    def VMEM(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    def CompilerParams(**kw):
+        return None
+
+
+def interpret_default(interpret: bool | None) -> bool:
+    """Kernels run natively on TPU, in interpret mode everywhere else."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"

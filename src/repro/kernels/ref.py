@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function computes exactly what its kernel computes, using only
+``jax.numpy`` on unblocked arrays.  The kernel test suite sweeps shapes
+and dtypes and asserts bit-exact equality (all outputs are integral).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops, encoder
+
+
+def am_matmul_ref(q_pm: jax.Array, p_pm: jax.Array) -> jax.Array:
+    """Agreement via +-1 matmul on unblocked fp32 arrays."""
+    d = q_pm.shape[-1]
+    s = q_pm.astype(jnp.float32) @ p_pm.astype(jnp.float32).T
+    return ((d + s) * 0.5).astype(jnp.int32)
+
+
+def hamming_am_ref(q_packed: jax.Array, p_packed: jax.Array) -> jax.Array:
+    """Agreement via packed XOR+popcount on unblocked arrays."""
+    dim = 32 * q_packed.shape[-1]
+    ham = bitops.popcount_words(
+        jnp.bitwise_xor(q_packed[:, None, :], p_packed[None, :, :]))
+    return dim - ham
+
+
+def hdc_encode_ref(tokens: jax.Array, lengths: jax.Array,
+                   im_rolled: jax.Array, tie: jax.Array) -> jax.Array:
+    """Encoder oracle: materialized grams + masked bundle + majority."""
+    n, _, w = im_rolled.shape
+    dim = 32 * w
+    grams = encoder.encode_grams(tokens, im_rolled)      # (B, G, W)
+    g = grams.shape[-2]
+    m = jnp.maximum(lengths - (n - 1), 0).astype(jnp.int32)  # (B,)
+    valid = (jnp.arange(g)[None, :] < m[:, None])
+    bits = bitops.unpack_bits(grams)                      # (B, G, D)
+    counts = (bits.astype(jnp.int32) * valid[..., None]).sum(axis=1)
+    return encoder.binarize_majority(counts, m, tie)

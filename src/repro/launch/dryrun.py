@@ -1,0 +1,405 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 host placeholder devices, lowers the real step
+function (train_step / prefill / decode) with production shardings,
+compiles it, and records memory_analysis / cost_analysis / the collective
+schedule parsed from the partitioned HLO.  Artifacts feed EXPERIMENTS.md
+§Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+
+# The placeholder-device flag MUST precede any jax initialization.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.configs import ALIASES, all_archs, get_config
+from repro.configs import shapes as shapes_mod
+from repro.distributed import param_specs, sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.serve import serve_step
+from repro.train import train_step as ts
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def _link_bytes(ctype: str, result_bytes: int, g: int) -> float:
+    """Per-device bytes over ICI links (ring algorithms), from result size.
+
+    all-gather: result is the gathered tensor; each device receives
+      (g-1)/g of it.  all-reduce: reduce-scatter + all-gather = 2(g-1)/g.
+    reduce-scatter: result is the scattered shard; sends (g-1) shards.
+    all-to-all: result-sized exchange, (g-1)/g leaves the device.
+    collective-permute: the whole result moves.
+    """
+    if g <= 1:
+        return 0.0
+    f = (g - 1) / g
+    return {
+        "all-gather": result_bytes * f,
+        "all-reduce": 2.0 * result_bytes * f,
+        "reduce-scatter": result_bytes * (g - 1),
+        "all-to-all": result_bytes * f,
+        "collective-permute": float(result_bytes),
+    }[ctype]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Collective schedule from the partitioned (per-device) module.
+
+    Result shapes in the partitioned module are per-device; we record raw
+    result bytes per collective type plus a ring-algorithm link-bytes
+    estimate (the §Roofline collective term numerator).
+    """
+    out = {c: {"count": 0, "result_bytes": 0, "link_bytes": 0.0}
+           for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        if not s.startswith("%") and not s.startswith("ROOT"):
+            continue
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 3:]
+        # result shapes sit between '=' and the op name
+        for c in _COLLECTIVES:
+            pos = rhs.find(f" {c}(")
+            if pos < 0:
+                pos = rhs.find(f" {c}-start(")
+            if pos < 0:
+                continue
+            if f"{c}-done" in rhs[:pos + len(c) + 7]:
+                break
+            result_sec = rhs[:pos]
+            shapes = [_shape_bytes(m) for m in _SHAPE_RE.finditer(result_sec)]
+            # tuple results (async start): take the largest component
+            byt = max(shapes) if shapes else 0
+            g = _group_size(line)
+            out[c]["count"] += 1
+            out[c]["result_bytes"] += byt
+            out[c]["link_bytes"] += _link_bytes(c, byt, g)
+            break
+    out["total_link_bytes"] = sum(
+        v["link_bytes"] for v in out.values() if isinstance(v, dict))
+    out["total_result_bytes"] = sum(
+        v["result_bytes"] for v in out.values() if isinstance(v, dict))
+    return out
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "transcendentals", "optimal_seconds")
+                or k.startswith("bytes accessed"))}
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    skip_reason: str = ""
+    error: str = ""
+    memory: dict = dataclasses.field(default_factory=dict)
+    cost: dict = dataclasses.field(default_factory=dict)
+    collectives: dict = dataclasses.field(default_factory=dict)
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+def _rules_for(kind: str) -> sharding.Rules:
+    return {"train": sharding.TRAIN_RULES,
+            "prefill": sharding.PREFILL_RULES,
+            "decode": sharding.DECODE_RULES}[kind]
+
+
+def lower_cell(cfg: ModelConfig, shape: shapes_mod.ShapeSpec, mesh,
+               *, microbatches: int = 1, cost_exact: bool = False):
+    """Lower the step function for one cell.
+
+    cost_exact: emit a loop-free program (unrolled segment scans,
+    straight-line attention tiles, single-chunk loss) so XLA's cost
+    analysis counts every FLOP — used by the two-point depth extrapolation.
+    The default (scan) form is what memory_analysis and the collective
+    schedule are read from.
+    """
+    rules = _rules_for(shape.kind)
+    # Cost-exact tiles are sized to keep per-op buffers reasonable while
+    # keeping loop trip counts == 1 wherever a loop would hide FLOPs.
+    qc = kvc = 2048 if cost_exact else 512
+    with sharding.use_rules(mesh, rules):
+        specs = shapes_mod.input_specs(cfg, shape)
+        batch_sh = param_specs.batch_shardings(specs, mesh, rules)
+
+        if shape.kind == "train":
+            tc = ts.TrainConfig(
+                microbatches=microbatches,
+                unroll=cost_exact,
+                loss_chunk=shape.seq_len if cost_exact else 512,
+                q_chunk=qc, kv_chunk=kvc if not cost_exact else 4096,
+                remat=True)  # cost mode stays remat-faithful: recompute FLOPs count
+            state_shapes = jax.eval_shape(functools.partial(
+                ts.init_train_state, cfg=cfg, tc=tc), jax.random.key(0))
+            state_sh = param_specs.state_shardings(state_shapes, mesh, rules)
+            step = ts.make_train_step(cfg, tc,
+                                      grad_shardings=state_sh["params"])
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=0)
+            return jitted.lower(state_shapes, specs)
+
+        params_shapes = shapes_mod.param_specs(cfg)
+        param_sh = param_specs.param_shardings(params_shapes, mesh, rules)
+
+        if shape.kind == "prefill":
+            fn = serve_step.make_prefill_step(
+                cfg, max_len=shape.seq_len, unroll=cost_exact,
+                q_chunk=qc, kv_chunk=4096 if cost_exact else 1024)
+            cache_shapes = jax.eval_shape(
+                lambda p, t, **kw: fn(p, t, **kw)[1], params_shapes,
+                specs["tokens"],
+                **{k: v for k, v in specs.items() if k != "tokens"})
+            cache_sh = param_specs.cache_shardings(
+                cache_shapes, mesh, sharding.DECODE_RULES)
+            logits_sh = NamedSharding(mesh, param_specs._resolve_leaf(
+                (shape.global_batch, cfg.vocab), ("batch", "vocab"),
+                mesh, rules))
+            kw_names = [k for k in specs if k != "tokens"]
+            jitted = jax.jit(
+                lambda p, t, **kw: fn(p, t, **kw),
+                in_shardings=(param_sh, batch_sh["tokens"]),
+                out_shardings=(logits_sh, cache_sh))
+            if kw_names:
+                jitted = jax.jit(
+                    fn, in_shardings=(param_sh, batch_sh["tokens"]) + tuple(
+                        batch_sh[k] for k in kw_names),
+                    out_shardings=(logits_sh, cache_sh))
+                return jitted.lower(params_shapes, specs["tokens"],
+                                    *[specs[k] for k in kw_names])
+            return jitted.lower(params_shapes, specs["tokens"])
+
+        # decode
+        cache_shapes = shapes_mod.cache_specs(cfg, shape)
+        cache_sh = param_specs.cache_shardings(cache_shapes, mesh, rules)
+        logits_sh = NamedSharding(mesh, param_specs._resolve_leaf(
+            (shape.global_batch, cfg.vocab), ("batch", "vocab"), mesh, rules))
+        decode = serve_step.make_decode_step(cfg, unroll=cost_exact)
+        jitted = jax.jit(
+            decode,
+            in_shardings=(param_sh, batch_sh["token"], cache_sh,
+                          NamedSharding(mesh, P())),
+            out_shardings=(logits_sh, cache_sh),
+            donate_argnums=2)
+        return jitted.lower(params_shapes, specs["token"], cache_shapes,
+                            specs["cur_pos"])
+
+
+def _with_layers(cfg: ModelConfig, k: int) -> ModelConfig:
+    kw = {"n_layers": k}
+    if cfg.is_encdec:
+        kw["n_enc_layers"] = k
+    if cfg.n_dense_layers:
+        kw["n_dense_layers"] = 1
+    return dataclasses.replace(cfg, **kw)
+
+
+def _layer_points(cfg: ModelConfig) -> tuple[int, int]:
+    """Two reduced depths whose delta isolates one (scannable) layer."""
+    if cfg.family == "hybrid":
+        return 5, 7          # 3 globals fixed; delta = 2 SWA layers
+    if cfg.moe is not None and cfg.n_dense_layers:
+        return 2, 3          # dense prefix fixed; delta = 1 MoE layer
+    return 1, 2
+
+
+def _roofline_metrics(compiled) -> dict:
+    cost = _cost_dict(compiled)
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "transcendentals": cost.get("transcendentals", 0.0),
+        "link_bytes": coll["total_link_bytes"],
+        "coll_counts": {c: coll[c]["count"] for c in _COLLECTIVES},
+        "coll_link": {c: coll[c]["link_bytes"] for c in _COLLECTIVES},
+    }
+
+
+def extrapolated_roofline(cfg: ModelConfig, shape, mesh) -> dict:
+    """Layer-exact roofline numerators via two-point depth extrapolation.
+
+    XLA's cost analysis counts a while-loop (scan) body once, so the
+    full-depth compile undercounts per-layer work by the trip count.  We
+    compile the same cell at two reduced depths; the difference is exactly
+    one layer's cost, scaled back to full depth.
+    """
+    k1, k2 = _layer_points(cfg)
+    m = {}
+    for k in (k1, k2):
+        lowered = lower_cell(_with_layers(cfg, k), shape, mesh,
+                             cost_exact=True)
+        m[k] = _roofline_metrics(lowered.compile())
+
+    def combine(a, b):
+        if isinstance(a, dict):
+            return {kk: combine(a[kk], b[kk]) for kk in a}
+        per_layer = (b - a) / (k2 - k1)
+        return a + per_layer * (cfg.n_layers - k1)
+
+    out = combine(m[k1], m[k2])
+    out["per_layer_flops"] = (m[k2]["flops"] - m[k1]["flops"]) / (k2 - k1)
+    out["depth_points"] = [k1, k2]
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, parse_hlo: bool = True) -> CellResult:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    shape = shapes_mod.SHAPES[shape_name]
+    cfg = get_config(arch)
+    t0 = time.time()
+    runs, reason = shapes_mod.applicable(cfg, shape)
+    if not runs:
+        return CellResult(arch, shape_name, mesh_name, ok=True, seconds=0.0,
+                          skip_reason=reason)
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered = lower_cell(cfg, shape, mesh)
+        compiled = lowered.compile()
+        res = CellResult(
+            arch, shape_name, mesh_name, ok=True, seconds=time.time() - t0,
+            memory=_mem_dict(compiled), cost=_cost_dict(compiled),
+            collectives=(parse_collectives(compiled.as_text())
+                         if parse_hlo else {}),
+        )
+        res.extra["model_flops_6nd"] = 6 * cfg.active_param_count() * (
+            shape.global_batch * shape.seq_len if shape.kind == "train"
+            else (shape.global_batch * shape.seq_len
+                  if shape.kind == "prefill" else shape.global_batch))
+        if shape.kind != "train":   # decode/prefill: 2ND forward-only
+            res.extra["model_flops_6nd"] //= 3
+        if parse_hlo:
+            res.extra["roofline"] = extrapolated_roofline(cfg, shape, mesh)
+        return res
+    except Exception as e:
+        return CellResult(arch, shape_name, mesh_name, ok=False,
+                          seconds=time.time() - t0,
+                          error=f"{type(e).__name__}: {e}\n"
+                                + traceback.format_exc(limit=8))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    archs = list(all_archs()) if (args.all or not args.arch) else [args.arch]
+    shapes = (list(shapes_mod.SHAPES) if (args.all or not args.shape)
+              else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                res = run_cell(arch, shape_name, mp)
+                tag = f"{res.arch}.{res.shape}.{res.mesh}"
+                path = outdir / f"{tag}.json"
+                path.write_text(json.dumps(dataclasses.asdict(res), indent=1))
+                status = ("SKIP " + res.skip_reason[:40] if res.skip_reason
+                          else ("OK" if res.ok else "FAIL " + res.error[:120]))
+                flops = res.cost.get("flops", 0)
+                print(f"[{tag:55s}] {status}  compile={res.seconds:6.1f}s "
+                      f"flops/dev={flops:.3e}", flush=True)
+                n_fail += (not res.ok)
+    print(f"dry-run complete, failures={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Production training driver: mesh + pjit + checkpoint/restart + monitoring.
+
+    python -m repro.launch.train --arch stablelm-3b --steps 100 \
+        --global-batch 32 --seq-len 256 [--smoke] [--ckpt-dir ckpt/]
+
+On the CPU container this runs reduced configs end-to-end (the examples
+use it); on a real pod the same driver runs the full mesh (--mesh prod).
+Fault tolerance: async checkpoints every --ckpt-every steps, deterministic
+data replay from the step index, restart-safe (see
+distributed/fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.checkpoint import checkpointer as ck
+from repro.data import lm_data
+from repro.distributed import fault_tolerance as ft
+from repro.distributed import param_specs, sharding
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.train import train_step as ts
+from repro.train.optimizer import OptConfig
+
+
+def make_batch_fn(cfg, dc: lm_data.DataConfig):
+    rng = np.random.default_rng(dc.seed + 17)
+
+    def at(step: int) -> dict:
+        batch = lm_data.batch_at(dc, step)
+        b = dc.global_batch
+        if cfg.family == "audio":
+            batch["enc_embeds"] = rng.normal(
+                size=(b, dc.seq_len, cfg.d_model)).astype(np.float32)
+        if cfg.family == "vlm":
+            batch["prefix_embeds"] = rng.normal(
+                size=(b, cfg.vlm_prefix, cfg.d_model)).astype(np.float32)
+        return jax.tree.map(jnp.asarray, batch)
+
+    return at
+
+
+def train(arch: str, *, steps: int, global_batch: int, seq_len: int,
+          smoke: bool = True, mesh_kind: str = "host",
+          ckpt_dir: str | None = None, ckpt_every: int = 50,
+          peak_lr: float = 3e-3, log_every: int = 10) -> dict:
+    cfg = get_config(arch, smoke=smoke)
+    tc = ts.TrainConfig(
+        opt=OptConfig(peak_lr=peak_lr, warmup_steps=max(steps // 20, 5),
+                      total_steps=steps),
+        loss_chunk=min(512, seq_len),
+        q_chunk=min(512, seq_len), kv_chunk=min(512, seq_len))
+    dc = lm_data.DataConfig(vocab=cfg.vocab, seq_len=seq_len,
+                            global_batch=global_batch)
+    batch_at = make_batch_fn(cfg, dc)
+
+    mesh = None
+    if mesh_kind == "prod":
+        mesh = make_production_mesh()
+    elif mesh_kind == "host" and len(jax.devices()) > 1:
+        mesh = make_host_mesh()
+
+    step_fn = ts.make_train_step(cfg, tc)
+    rules = sharding.TRAIN_RULES
+    monitor = ft.StragglerMonitor()
+    acp = ck.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+
+    def init_state():
+        state = ts.init_train_state(jax.random.key(0), cfg, tc)
+        if mesh is not None:
+            st_sh = param_specs.state_shardings(state, mesh, rules)
+            state = jax.device_put(state, st_sh)
+        return state
+
+    state = None
+    start = 0
+    if acp and ck.latest_step(ckpt_dir) is not None:
+        target = jax.eval_shape(lambda: ts.init_train_state(
+            jax.random.key(0), cfg, tc))
+        sh = (param_specs.state_shardings(target, mesh, rules)
+              if mesh is not None else None)
+        state, start = ck.restore(ckpt_dir, target, shardings=sh)
+        print(f"resumed from step {start}")
+    if state is None:
+        state = init_state()
+
+    ctx = sharding.use_rules(mesh, rules) if mesh is not None else None
+    if ctx:
+        ctx.__enter__()
+    try:
+        jitted = jax.jit(step_fn, donate_argnums=0)
+        losses = []
+        for i in range(start, steps):
+            t0 = time.perf_counter()
+            state, metrics = jitted(state, batch_at(i))
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.perf_counter() - t0
+            monitor.observe("worker0", i, dt)
+            if i % log_every == 0 or i == steps - 1:
+                print(f"step {i:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} {dt * 1e3:.0f}ms",
+                      flush=True)
+            if acp and (i + 1) % ckpt_every == 0:
+                acp.save(state, i + 1)
+        if acp:
+            acp.save(state, steps)
+            acp.wait()
+    finally:
+        if ctx:
+            ctx.__exit__(None, None, None)
+    return {"final_loss": losses[-1], "losses": losses}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-smoke) config — pod scale only")
+    ap.add_argument("--mesh", default="host", choices=["host", "prod", "none"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+    train(args.arch, steps=args.steps, global_batch=args.global_batch,
+          seq_len=args.seq_len, smoke=not args.full, mesh_kind=args.mesh,
+          ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+          peak_lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

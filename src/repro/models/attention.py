@@ -1,0 +1,330 @@
+"""Attention: GQA/MQA, MLA (DeepSeek-V2), sliding-window, prefix-LM.
+
+The workhorse is :func:`blockwise_attention` — a chunked online-softmax
+(flash-style) attention in pure JAX: the (Sq, Skv) logit matrix is never
+materialized beyond a (q_chunk, kv_chunk) tile, which is what makes the
+32k-prefill shapes fit per-chip HBM.  Cost-model note: the kernel computes
+the *full* rectangle with masking (no causal early-exit), so HLO FLOPs
+count full S^2 attention; EXPERIMENTS.md uses the same convention for
+MODEL_FLOPS.
+
+MLA follows arXiv:2405.04434: queries carry per-head no-PE + shared-RoPE
+parts; K/V are up-projected from a compressed latent c (kv_lora wide) that
+is also what the decode cache stores (serve/decode_attn.py uses the
+absorbed form).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import AttnConfig, ModelConfig
+from repro.distributed import sharding
+from repro.models import layers
+
+Params = dict
+NEG_INF = -1e30
+
+
+# -- init ----------------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg: ModelConfig, a: AttnConfig,
+                   kv_d_model: int | None = None) -> Params:
+    """GQA/MQA/MLA projection params. kv_d_model: cross-attn KV source width."""
+    d = cfg.d_model
+    dkv = kv_d_model or d
+    dt = jnp.dtype(cfg.param_dtype)
+    std = d ** -0.5
+    ks = jax.random.split(key, 8)
+    if a.kind == "mla":
+        qk = a.head_dim + a.rope_head_dim
+        p = {
+            "wq": (jax.random.normal(ks[0], (d, a.num_heads, qk)) * std).astype(dt),
+            "w_dkv": (jax.random.normal(ks[1], (d, a.kv_lora)) * std).astype(dt),
+            "w_kr": (jax.random.normal(ks[2], (d, a.rope_head_dim)) * std).astype(dt),
+            "w_uk": (jax.random.normal(ks[3], (a.kv_lora, a.num_heads, a.head_dim))
+                     * a.kv_lora ** -0.5).astype(dt),
+            "w_uv": (jax.random.normal(ks[4], (a.kv_lora, a.num_heads, a.vdim))
+                     * a.kv_lora ** -0.5).astype(dt),
+            "wo": (jax.random.normal(ks[5], (a.num_heads, a.vdim, d))
+                   * (a.num_heads * a.vdim) ** -0.5).astype(dt),
+            "c_norm": {"scale": jnp.ones((a.kv_lora,), jnp.float32)},
+        }
+        return p
+    return {
+        "wq": (jax.random.normal(ks[0], (d, a.num_heads, a.head_dim)) * std).astype(dt),
+        "wk": (jax.random.normal(ks[1], (dkv, a.num_kv_heads, a.head_dim))
+               * dkv ** -0.5).astype(dt),
+        "wv": (jax.random.normal(ks[2], (dkv, a.num_kv_heads, a.vdim))
+               * dkv ** -0.5).astype(dt),
+        "wo": (jax.random.normal(ks[3], (a.num_heads, a.vdim, d))
+               * (a.num_heads * a.vdim) ** -0.5).astype(dt),
+    }
+
+
+# -- head padding (TP divisibility) ----------------------------------------------
+
+def head_padding_plan(h: int, kv: int, tp: int, *,
+                      pad_kv: bool = True) -> tuple | None:
+    """Plan q/kv head padding so the q-head dim divides the TP axis.
+
+    Without this, a head count like 36 (starcoder2) or 25 (hymba) on a
+    16-way model axis makes GSPMD *replicate* the whole attention — 16x
+    wasted FLOPs and an all-reduce per einsum (§Perf H1).  Padding to the
+    nearest (tp, kv)-compatible head count costs only hp/h extra compute.
+
+    Returns (hp, kvp, slots) — q head i moves to slot[i] in the padded
+    layout (grouped under its original kv head); None = no padding needed
+    or padding would not beat replication.
+    """
+    if tp <= 1 or h % tp == 0:
+        return None
+    g0 = max(h // kv, 1)
+    best = None
+    kvp_range = range(kv, 4 * tp + 1) if pad_kv else (kv,)
+    for kvp in kvp_range:
+        l = math.lcm(kvp, tp)
+        hp = -(-max(h, g0 * kvp) // l) * l
+        while hp // kvp < g0:
+            hp += l
+        if best is None or (hp, kvp) < best:
+            best = (hp, kvp)
+    hp, kvp = best
+    if hp / h >= tp:          # padding waste would exceed replication
+        return None
+    g = hp // kvp
+    slots = np.asarray([(i // g0) * g + (i % g0) for i in range(h)])
+    return hp, kvp, slots
+
+
+def pad_heads(q: jax.Array, k: jax.Array | None, v: jax.Array | None,
+              plan: tuple):
+    """Scatter real heads into the padded layout (zeros elsewhere)."""
+    hp, kvp, slots = plan
+    qp = jnp.zeros(q.shape[:-2] + (hp, q.shape[-1]), q.dtype)
+    qp = qp.at[..., slots, :].set(q)
+    def padkv(t):
+        if t is None or t.shape[-2] == kvp:
+            return t
+        pad = [(0, 0)] * t.ndim
+        pad[-2] = (0, kvp - t.shape[-2])
+        return jnp.pad(t, pad)
+    return qp, padkv(k), padkv(v)
+
+
+def unpad_heads(out: jax.Array, plan: tuple) -> jax.Array:
+    return out[..., plan[2], :]
+
+
+# -- chunked online-softmax attention ------------------------------------------
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        q_pos0: int | jax.Array = 0,
+                        kv_valid: jax.Array | None = None,
+                        causal: bool = True,
+                        window: int | None = None,
+                        prefix_len: int = 0,
+                        q_chunk: int = 512, kv_chunk: int = 512,
+                        unroll: bool = False) -> jax.Array:
+    """Memory-bounded attention.
+
+    Args:
+      q: ``(B, Sq, H, dh)``; k: ``(B, Skv, KV, dh)``; v: ``(B, Skv, KV, dv)``.
+      q_pos0: absolute position of q[0] (continuation chunks / decode).
+      kv_valid: ``(B,)`` valid KV length (padding mask).
+      causal: causal masking (q_pos >= kv_pos).
+      window: sliding-window width (only kv in [q_pos-window, q_pos]).
+      prefix_len: kv positions < prefix_len are visible to every query
+        (PaliGemma prefix-LM).
+
+    Returns:
+      ``(B, Sq, H, dv)``.
+    """
+    b, sq, h, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    dv = v.shape[-1]
+    scale = dh ** -0.5
+
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    qp = _pad_axis(q, 1, qc)
+    kp = _pad_axis(k, 1, kc)
+    vp = _pad_axis(v, 1, kc)
+    sq_p, skv_p = qp.shape[1], kp.shape[1]
+    nq, nk = sq_p // qc, skv_p // kc
+
+    qp = qp.reshape(b, nq, qc, kv, g, dh)
+    kp = kp.reshape(b, nk, kc, kv, dh)
+    vp = vp.reshape(b, nk, kc, kv, dv)
+    kv_valid_ = (jnp.full((b,), skv, jnp.int32) if kv_valid is None
+                 else kv_valid.astype(jnp.int32))
+
+    def q_step(qi, q_blk):
+        q_positions = q_pos0 + qi * qc + jnp.arange(qc)          # (qc,)
+
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            k_blk, v_blk, ki = blk
+            kv_positions = ki * kc + jnp.arange(kc)              # (kc,)
+            # bf16 dot, fp32 upcast AFTER: with preferred_element_type
+            # =f32 here, GSPMD reshards the *converted fp32* operands and
+            # cotangents — 2x collective width (§Perf H3 iteration 3).
+            logits = jnp.einsum("bqkgd,bskd->bqkgs", q_blk,
+                                k_blk).astype(jnp.float32) * scale
+            mask = (kv_positions[None, :] < kv_valid_[:, None])  # (b, kc)
+            mask = mask[:, None, :]                              # (b, 1, kc)
+            rel = q_positions[:, None] - kv_positions[None, :]   # (qc, kc)
+            vis = jnp.ones_like(rel, bool)
+            if causal:
+                vis &= rel >= 0
+            if window is not None:
+                vis &= rel < window
+            if prefix_len:
+                vis |= kv_positions[None, :] < prefix_len
+            mask = mask & vis[None, :, :]                        # (b, qc, kc)
+            logits = jnp.where(mask[:, :, None, None, :], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgs,bskv->bqkgv", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, qc, kv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, qc, kv, g), jnp.float32)
+        a0 = jnp.zeros((b, qc, kv, g, dv), jnp.float32)
+        if unroll:
+            # straight-line tiles (dry-run cost-exact mode: while-loop
+            # bodies are cost-counted once, so loops must disappear)
+            carry = (m0, l0, a0)
+            for ki in range(nk):
+                carry, _ = kv_step(carry, (kp[:, ki], vp[:, ki],
+                                           jnp.int32(ki)))
+            m, l, acc = carry
+        else:
+            # Flash-style backward: recompute each (q, kv) tile's logits in
+            # the backward pass instead of saving them (checkpointed body).
+            (m, l, acc), _ = jax.lax.scan(
+                jax.checkpoint(kv_step), (m0, l0, a0),
+                (jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0),
+                 jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)
+
+    if unroll:
+        outs = jnp.stack([q_step(jnp.int32(qi), qp[:, qi])
+                          for qi in range(nq)])
+    else:
+        outs = jax.lax.map(lambda args: jax.checkpoint(q_step)(*args),
+                           (jnp.arange(nq), jnp.moveaxis(qp, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq_p, h, dv)
+    return out[:, :sq]
+
+
+# -- GQA forward ---------------------------------------------------------------
+
+def gqa_forward(p: Params, x: jax.Array, a: AttnConfig, *,
+                positions: jax.Array, causal: bool = True,
+                window: int | None = None, prefix_len: int = 0,
+                kv_x: jax.Array | None = None,
+                kv_valid: jax.Array | None = None,
+                q_chunk: int = 512, kv_chunk: int = 512,
+                unroll: bool = False,
+                return_kv: bool = False):
+    """Standard multi/grouped-query attention over ``x`` (B, S, d).
+
+    kv_x: cross-attention source (defaults to x). positions: (S,) absolute.
+    """
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    q = sharding.constrain_safe(q, ("batch", "seq", "heads", None))
+    k = sharding.constrain_safe(k, ("batch", "kv_seq", "kv_heads", None))
+    v = sharding.constrain_safe(v, ("batch", "kv_seq", "kv_heads", None))
+
+    rot = int(a.head_dim * a.rope_fraction)
+    if rot and kv_x is None:
+        cos, sin = layers.rope_angles(positions, rot, a.rope_theta)
+        q = layers.apply_rope(q, cos[None], sin[None], rot)
+        k = layers.apply_rope(k, cos[None], sin[None], rot)
+
+    # TP-divisibility head padding (§Perf H1). The cache (return_kv) keeps
+    # the ORIGINAL kv heads; padding is purely an attention-compute layout.
+    plan = head_padding_plan(a.num_heads, a.num_kv_heads,
+                             sharding.axis_size("heads"))
+    k_orig, v_orig = k, v
+    if plan is not None:
+        q, k, v = pad_heads(q, k, v, plan)
+        q = sharding.constrain_safe(q, ("batch", "seq", "heads", None))
+
+    q_pos0 = positions[0] if positions.ndim else positions
+    out = blockwise_attention(
+        q, k, v, q_pos0=0 if kv_x is not None else q_pos0,
+        kv_valid=kv_valid, causal=causal and kv_x is None,
+        window=window, prefix_len=prefix_len,
+        q_chunk=q_chunk, kv_chunk=kv_chunk, unroll=unroll)
+    if plan is not None:
+        out = unpad_heads(out, plan)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    if return_kv:
+        return y, (k_orig, v_orig)
+    return y
+
+
+# -- MLA forward ---------------------------------------------------------------
+
+def mla_forward(p: Params, x: jax.Array, a: AttnConfig, *,
+                positions: jax.Array, norm_kind: str = "rmsnorm",
+                kv_valid: jax.Array | None = None,
+                q_chunk: int = 512, kv_chunk: int = 512,
+                unroll: bool = False,
+                return_cache: bool = False):
+    """Multi-head latent attention (training/prefill form).
+
+    Cache content is the compressed latent (c, k_rope) — the point of MLA.
+    """
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])     # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., :a.head_dim], q[..., a.head_dim:]
+
+    c = layers.apply_norm(p["c_norm"], x @ p["w_dkv"], norm_kind)
+    c = c.astype(x.dtype)                            # (B,S,kv_lora)
+    k_rope = (x @ p["w_kr"])[:, :, None, :]          # (B,S,1,rope_dim)
+
+    cos, sin = layers.rope_angles(positions, a.rope_head_dim, a.rope_theta)
+    q_rope = layers.apply_rope(q_rope, cos[None], sin[None], a.rope_head_dim)
+    k_rope = layers.apply_rope(k_rope, cos[None], sin[None], a.rope_head_dim)
+
+    k_nope = jnp.einsum("bsc,chk->bshk", c, p["w_uk"])
+    vv = jnp.einsum("bsc,chk->bshk", c, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, a.num_heads, a.rope_head_dim))],
+        axis=-1)
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qq = sharding.constrain_safe(qq, ("batch", "seq", "heads", None))
+
+    out = blockwise_attention(qq, k, vv, q_pos0=positions[0],
+                              kv_valid=kv_valid, causal=True,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              unroll=unroll)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    if return_cache:
+        return y, (c, k_rope[:, :, 0, :])
+    return y

@@ -1,0 +1,339 @@
+"""Transformer/SSM/hybrid blocks + per-block decode steps with caches.
+
+Block kinds (config.segments() plans a model as homogeneous runs of):
+  dense          attn + MLP
+  moe            attn + MoE FFN
+  ssm            Mamba-2 only (mamba2-1.3b has no MLP)
+  hybrid_global  (attn ∥ mamba) heads, full attention, + MLP   (hymba)
+  hybrid_swa     (attn ∥ mamba) heads, sliding window, + MLP   (hymba)
+  enc            bidirectional attn + MLP                       (whisper enc)
+  dec            causal self-attn + cross-attn + MLP            (whisper dec)
+
+Decode caches are uniform dicts:
+  attention: {k, v, kpos} — kpos holds the absolute position stored in each
+  slot (-1 = empty), which makes full, sliding-window (ring-buffer) and
+  prefix caches share one masking rule.
+  MLA: {c, kr, kpos} (compressed latent — the MLA memory win).
+  SSM: {conv, state}.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed import sharding
+from repro.models import attention, layers, moe as moe_mod, ssm as ssm_mod
+
+Params = dict
+NEG_INF = -1e30
+
+
+# -- init ----------------------------------------------------------------------
+
+def init_block(key: jax.Array, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {}
+    if kind in ("dense", "moe", "enc", "dec", "hybrid_global", "hybrid_swa"):
+        p["ln1"] = layers.init_norm(cfg, cfg.d_model)
+        p["attn"] = attention.init_attention(ks[0], cfg, cfg.attn)
+    if kind in ("hybrid_global", "hybrid_swa"):
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg, cfg.ssm)
+        p["attn_norm"] = layers.init_norm(cfg, cfg.d_model)
+        p["ssm_norm"] = layers.init_norm(cfg, cfg.d_model)
+        p["branch_scale"] = jnp.ones((2,), jnp.float32)
+    if kind == "ssm":
+        p["ln1"] = layers.init_norm(cfg, cfg.d_model)
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg, cfg.ssm)
+        return p
+    if kind == "dec":
+        p["ln_x"] = layers.init_norm(cfg, cfg.d_model)
+        p["xattn"] = attention.init_attention(ks[2], cfg, cfg.attn)
+    # FFN
+    p["ln2"] = layers.init_norm(cfg, cfg.d_model)
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(ks[3], cfg, cfg.moe)
+    else:
+        d_ff = cfg.dense_d_ff if (kind == "dense" and cfg.dense_d_ff) else cfg.d_ff
+        p["mlp"] = layers.init_mlp(ks[3], cfg, d_ff)
+    return p
+
+
+# -- full-sequence forward (train / prefill) ------------------------------------
+
+def block_forward(p: Params, x: jax.Array, cfg: ModelConfig, kind: str, *,
+                  positions: jax.Array, prefix_len: int = 0,
+                  kv_valid: jax.Array | None = None,
+                  enc_out: jax.Array | None = None,
+                  enc_valid: jax.Array | None = None,
+                  q_chunk: int = 512, kv_chunk: int = 512,
+                  unroll: bool = False,
+                  return_cache: bool = False):
+    """Returns (x, aux_loss, cache_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    a = cfg.attn
+    window = a.window if (a and kind == "hybrid_swa") else None
+    causal = kind != "enc"
+    # Sequence-parallel residual stream (no-op outside a mesh / at decode).
+    x = sharding.constrain_safe(x, ("batch", "residual_seq", None))
+
+    if kind == "ssm":
+        h = layers.apply_norm(p["ln1"], x, cfg.norm)
+        if return_cache:
+            y, cache = ssm_forward_with_state(p["ssm"], h, cfg)
+        else:
+            y = ssm_mod.ssm_forward(p["ssm"], h, cfg, cfg.ssm)
+        out = sharding.constrain_safe(x + y, ("batch", "residual_seq", None))
+        return out, aux, cache
+
+    h = layers.apply_norm(p["ln1"], x, cfg.norm)
+    if a.kind == "mla":
+        if return_cache:
+            y, mla_cache = attention.mla_forward(
+                p["attn"], h, a, positions=positions, norm_kind=cfg.norm,
+                kv_valid=kv_valid, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                unroll=unroll, return_cache=True)
+            cache = {"c": mla_cache[0], "kr": mla_cache[1]}
+        else:
+            y = attention.mla_forward(
+                p["attn"], h, a, positions=positions, norm_kind=cfg.norm,
+                kv_valid=kv_valid, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                unroll=unroll)
+    else:
+        out = attention.gqa_forward(
+            p["attn"], h, a, positions=positions, causal=causal,
+            window=window, prefix_len=prefix_len, kv_valid=kv_valid,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, unroll=unroll,
+            return_kv=return_cache)
+        if return_cache:
+            y, (k, v) = out
+            cache = {"k": k, "v": v}
+        else:
+            y = out
+
+    if kind in ("hybrid_global", "hybrid_swa"):
+        y_ssm = ssm_mod.ssm_forward(p["ssm"], h, cfg, cfg.ssm) \
+            if not return_cache else None
+        if return_cache:
+            y_ssm, ssm_cache = ssm_forward_with_state(p["ssm"], h, cfg)
+            cache = {"attn": cache, "ssm": ssm_cache}
+        b = p["branch_scale"]
+        y = 0.5 * (b[0] * layers.apply_norm(p["attn_norm"], y, cfg.norm)
+                   + b[1] * layers.apply_norm(p["ssm_norm"], y_ssm, cfg.norm))
+        y = y.astype(x.dtype)
+
+    x = x + y
+
+    if kind == "dec":
+        h = layers.apply_norm(p["ln_x"], x, cfg.norm)
+        y = attention.gqa_forward(
+            p["xattn"], h, a, positions=positions, causal=False,
+            kv_x=enc_out, kv_valid=enc_valid,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, unroll=unroll)
+        x = x + y
+
+    h = layers.apply_norm(p["ln2"], x, cfg.norm)
+    if kind == "moe":
+        y, aux = moe_mod.moe_forward(p["moe"], h, cfg, cfg.moe)
+    else:
+        y = layers.apply_mlp(p["mlp"], h, cfg)
+    # Pin the block output back to the sequence-sharded residual layout so
+    # wo/w_out contractions lower to reduce-scatter, not full all-reduce
+    # (§Perf H1 iteration 2: 35 x ~4GB all-reduces -> scattered).
+    out = sharding.constrain_safe(x + y, ("batch", "residual_seq", None))
+    return out, aux, cache
+
+
+def ssm_forward_with_state(p: Params, h: jax.Array, cfg: ModelConfig):
+    """SSD forward that also returns the decode cache (prefill path)."""
+    s = cfg.ssm
+    y = ssm_mod.ssm_forward(p, h, cfg, s)
+    # Recompute the final state cheaply via the decode recurrence over the
+    # last chunk is wasteful; instead run the chunked state recurrence.
+    cache = _ssm_prefill_state(p, h, cfg)
+    return y, cache
+
+
+def _ssm_prefill_state(p: Params, h: jax.Array, cfg: ModelConfig) -> dict:
+    """Final (conv, ssm) state after consuming h (B, L, d)."""
+    s = cfg.ssm
+    dd = ssm_mod.dims(cfg, s)
+    bsz, l, _ = h.shape
+    z, xbc_raw, dt_raw, d_in, nh, gn = ssm_mod._split(p, h, cfg, s)
+    # conv cache: last d_conv-1 raw xbc inputs
+    w = s.d_conv
+    pad = max(w - 1 - l, 0)
+    conv_cache = jnp.pad(xbc_raw, ((0, 0), (pad, 0), (0, 0)))[:, -(w - 1):, :]
+
+    xbc = ssm_mod._causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_in].reshape(bsz, l, nh, s.head_dim)
+    bmat = xbc[..., d_in:d_in + gn].reshape(bsz, l, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    adt = dt * a                                           # (B, L, H)
+    hpg = nh // s.n_groups
+    bh = jnp.repeat(bmat, hpg, axis=2)                     # (B, L, H, N)
+    xdt = xs * dt[..., None]
+
+    # state = sum_t exp(sum_{k>t} adt_k) * dt_t * B_t x_t^T
+    acs = jnp.cumsum(adt, axis=1)
+    decay = jnp.exp(acs[:, -1:, :] - acs)                  # (B, L, H)
+    state = jnp.einsum("blhn,blh,blhp->bhpn",
+                       bh.astype(jnp.float32), decay,
+                       xdt.astype(jnp.float32))
+    return {"conv": conv_cache, "state": state}
+
+
+# -- decode step -----------------------------------------------------------------
+
+def cached_attention(q: jax.Array, cache: dict, cur_pos: jax.Array,
+                     window: int | None) -> jax.Array:
+    """Single-token attention over a position-tagged cache.
+
+    q: (B, H, dh); cache k/v: (B, S, KV, dh/dv); kpos: (B, S) int32.
+    """
+    k, v, kpos = cache["k"], cache["v"], cache["kpos"]
+    b, s, kv, dh = k.shape
+    g = q.shape[1] // kv
+    qg = q.reshape(b, kv, g, q.shape[-1])
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits *= q.shape[-1] ** -0.5
+    valid = (kpos >= 0) & (kpos <= cur_pos)
+    if window is not None:
+        valid &= kpos > cur_pos - window
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskv->bkgv", w.astype(v.dtype), v)
+    return out.reshape(b, q.shape[1], v.shape[-1])
+
+
+def _store(cache: dict, names: tuple[str, ...], values: tuple[jax.Array, ...],
+           cur_pos: jax.Array, ring: int | None) -> dict:
+    """Insert one token's cache entries at slot (pos or pos % ring)."""
+    s = cache[names[0]].shape[1]
+    slot = cur_pos % ring if ring else cur_pos
+    new = dict(cache)
+    for name, val in zip(names, values):
+        new[name] = jax.lax.dynamic_update_slice_in_dim(
+            cache[name], val.astype(cache[name].dtype), slot, axis=1)
+    new["kpos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["kpos"], jnp.full((cache["kpos"].shape[0], 1), cur_pos,
+                                jnp.int32), slot, axis=1)
+    return new
+
+
+def block_decode(p: Params, x: jax.Array, cache: dict, cfg: ModelConfig,
+                 kind: str, cur_pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One-token decode: x (B, 1, d) -> (x, new_cache)."""
+    a = cfg.attn
+    new_cache = dict(cache) if cache is not None else None
+
+    if kind == "ssm":
+        h = layers.apply_norm(p["ln1"], x, cfg.norm)
+        y, new_cache = ssm_mod.ssm_decode_step(p["ssm"], h, cache, cfg, cfg.ssm)
+        return x + y, new_cache
+
+    window = a.window if kind == "hybrid_swa" else None
+    ring = cache["attn"]["k"].shape[1] if kind in ("hybrid_global", "hybrid_swa") \
+        and window is not None else None
+    attn_cache = cache["attn"] if "attn" in cache else cache
+
+    h = layers.apply_norm(p["ln1"], x, cfg.norm)
+    b = h.shape[0]
+
+    if a.kind == "mla":
+        y, attn_cache = _mla_decode(p["attn"], h, attn_cache, cfg, cur_pos)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])[:, 0]
+        k1 = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"])[:, 0]
+        v1 = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"])[:, 0]
+        rot = int(a.head_dim * a.rope_fraction)
+        if rot:
+            cos, sin = layers.rope_angles(cur_pos[None], rot, a.rope_theta)
+            q = layers.apply_rope(q[:, None], cos[None], sin[None], rot)[:, 0]
+            k1 = layers.apply_rope(k1[:, None], cos[None], sin[None], rot)[:, 0]
+        attn_cache = _store(attn_cache, ("k", "v"),
+                            (k1[:, None], v1[:, None]), cur_pos,
+                            ring if window is not None else None)
+        # q-side head padding (cache keeps original kv heads) — §Perf H1
+        plan = attention.head_padding_plan(
+            a.num_heads, a.num_kv_heads, sharding.axis_size("heads"),
+            pad_kv=False)
+        if plan is not None:
+            qp, _, _ = attention.pad_heads(q[:, None], None, None, plan)
+            out = cached_attention(qp[:, 0], attn_cache, cur_pos, window)
+            out = attention.unpad_heads(out, plan)
+        else:
+            out = cached_attention(q, attn_cache, cur_pos, window)
+        y = jnp.einsum("bhv,hvd->bd", out, p["attn"]["wo"])[:, None]
+
+    if kind in ("hybrid_global", "hybrid_swa"):
+        y_ssm, ssm_cache = ssm_mod.ssm_decode_step(
+            p["ssm"], h, cache["ssm"], cfg, cfg.ssm)
+        bsc = p["branch_scale"]
+        y = 0.5 * (bsc[0] * layers.apply_norm(p["attn_norm"], y, cfg.norm)
+                   + bsc[1] * layers.apply_norm(p["ssm_norm"], y_ssm, cfg.norm))
+        y = y.astype(x.dtype)
+        new_cache = {"attn": attn_cache, "ssm": ssm_cache}
+    else:
+        new_cache = attn_cache
+
+    x = x + y
+
+    if kind == "dec":                      # cross-attn over precomputed enc KV
+        h = layers.apply_norm(p["ln_x"], x, cfg.norm)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["xattn"]["wq"])[:, 0]
+        xc = {"k": cache["xk"], "v": cache["xv"], "kpos": cache["xkpos"]}
+        out = cached_attention(q, xc, jnp.int32(2**30), None)
+        y = jnp.einsum("bhv,hvd->bd", out, p["xattn"]["wo"])[:, None]
+        x = x + y
+        new_cache = dict(new_cache, xk=cache["xk"], xv=cache["xv"],
+                         xkpos=cache["xkpos"])
+
+    h = layers.apply_norm(p["ln2"], x, cfg.norm)
+    if kind == "moe":
+        y, _ = moe_mod.moe_forward(p["moe"], h, cfg, cfg.moe)
+    else:
+        y = layers.apply_mlp(p["mlp"], h, cfg)
+    return x + y, new_cache
+
+
+def _mla_decode(p: Params, h: jax.Array, cache: dict, cfg: ModelConfig,
+                cur_pos: jax.Array) -> tuple[jax.Array, dict]:
+    """Absorbed-form MLA decode: attention in the compressed latent space.
+
+    scores = (q_nope W_uk) . c  +  q_rope . k_rope ; ctx = w . c ; out = W_uv ctx.
+    Never materializes per-head K/V — the whole point of caching latents.
+    """
+    a = cfg.attn
+    b = h.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])[:, 0]      # (B,H,nope+rope)
+    q_nope, q_rope = q[..., :a.head_dim], q[..., a.head_dim:]
+    c1 = layers.apply_norm(p["c_norm"], h @ p["w_dkv"], cfg.norm)[:, 0]
+    kr1 = (h @ p["w_kr"])[:, 0]                            # (B, rope)
+
+    cos, sin = layers.rope_angles(cur_pos[None], a.rope_head_dim, a.rope_theta)
+    q_rope = layers.apply_rope(q_rope[:, None], cos[None], sin[None],
+                               a.rope_head_dim)[:, 0]
+    kr1 = layers.apply_rope(kr1[:, None, None], cos[None], sin[None],
+                            a.rope_head_dim)[:, 0, 0]
+
+    cache = _store(cache, ("c", "kr"),
+                   (c1[:, None].astype(cache["c"].dtype),
+                    kr1[:, None].astype(cache["kr"].dtype)), cur_pos, None)
+
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope, p["w_uk"])  # (B,H,lora)
+    scale = (a.head_dim + a.rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bhl,bsl->bhs", q_abs, cache["c"])
+              + jnp.einsum("bhr,bsr->bhs", q_rope, cache["kr"])
+              ).astype(jnp.float32) * scale
+    valid = (cache["kpos"] >= 0) & (cache["kpos"] <= cur_pos)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", w.astype(cache["c"].dtype), cache["c"])
+    out = jnp.einsum("bhl,lhv->bhv", ctx, p["w_uv"])
+    y = jnp.einsum("bhv,hvd->bd", out, p["wo"])[:, None]
+    return y, cache

@@ -1,0 +1,137 @@
+"""Shared model layers: norms, MLPs, embeddings, RoPE (pure-pytree style).
+
+Every module is an (init, apply) pair over plain nested-dict params — no
+framework dependency.  Compute runs in bf16 with fp32 norm/softmax
+internals; params are created in ``cfg.param_dtype``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+Params = dict
+
+
+def _norm_dtype(x: jax.Array) -> jax.Array:
+    return x.astype(jnp.float32)
+
+
+# -- Norms -------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = _norm_dtype(x)
+    if kind == "rmsnorm":
+        rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf * rms * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# -- Activations --------------------------------------------------------------
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":                      # Nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# -- Dense MLP ----------------------------------------------------------------
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int) -> Params:
+    d, dt = cfg.d_model, jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = d ** -0.5
+    p = {
+        "w_in": (jax.random.normal(k1, (d, d_ff)) * std).astype(dt),
+        "w_out": (jax.random.normal(k2, (d_ff, d)) * d_ff ** -0.5).astype(dt),
+    }
+    if cfg.glu:
+        p["w_gate"] = (jax.random.normal(k3, (d, d_ff)) * std).astype(dt)
+    return p
+
+
+def apply_mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    from repro.distributed import sharding
+    act = act_fn(cfg.act)
+    h = x @ p["w_in"]
+    if cfg.glu:
+        h = act(x @ p["w_gate"]) * h
+    else:
+        h = act(h)
+    h = sharding.constrain_safe(h, ("batch", "seq", "ff"))
+    return h @ p["w_out"]
+
+
+# -- Embeddings ---------------------------------------------------------------
+
+def init_embed(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"tok_embed": (jax.random.normal(k1, (cfg.vocab, cfg.d_model)) * 0.02
+                       ).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(k2, (cfg.d_model, cfg.vocab))
+                        * cfg.d_model ** -0.5).astype(dt)
+    return p
+
+
+def embed_tokens(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return p["tok_embed"][tokens].astype(jnp.dtype(cfg.param_dtype))
+
+
+def lm_logits(p: Params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return (h @ p["tok_embed"].T.astype(h.dtype)).astype(jnp.float32)
+    return (h @ p["lm_head"]).astype(jnp.float32)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, rot_dim: int, theta: float
+                ) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables: positions (...,) -> (..., rot_dim//2)."""
+    freqs = theta ** (-jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               rot_dim: int) -> jax.Array:
+    """Rotate the first ``rot_dim`` features of ``x`` (..., S, H, dh).
+
+    cos/sin are (..., S, rot_dim//2) and broadcast over heads.
+    """
+    if rot_dim == 0:
+        return x
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    c, s = cos[..., None, :], sin[..., None, :]       # add head axis
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    rotated = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rotated, xp], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_embed(positions: jax.Array, d: int) -> jax.Array:
+    """Absolute sinusoidal position embeddings (whisper-style stub)."""
+    half = d // 2
+    freqs = 10_000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,319 @@
+"""Full language models: segment-planned stacks with scan + remat.
+
+A model is a sequence of *segments* — homogeneous runs of one block kind —
+so heterogeneous stacks (DeepSeek-V2's dense first layer, Hymba's three
+global-attention layers) still compile as a handful of `lax.scan`s over
+stacked params instead of L unrolled layers (small HLO, fast compiles,
+friendly to the XLA latency-hiding scheduler).
+
+Entry points:
+  init_lm / forward           training + prefill (optionally returns caches)
+  init_cache / prefill        decode-cache construction
+  decode_step                 one-token decode across all segments
+  encode_audio                whisper encoder over stub frame embeddings
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed import sharding
+from repro.models import attention, blocks, layers, ssm as ssm_mod
+
+Params = dict
+
+
+def segments(cfg: ModelConfig) -> tuple[tuple[str, int], ...]:
+    """Plan the layer stack as (kind, count) runs."""
+    if cfg.family == "ssm":
+        return (("ssm", cfg.n_layers),)
+    if cfg.family == "hybrid":
+        n = cfg.n_layers  # global full-attention at layers {0, n//2, n-1}
+        return (("hybrid_global", 1), ("hybrid_swa", n // 2 - 1),
+                ("hybrid_global", 1), ("hybrid_swa", n - n // 2 - 2),
+                ("hybrid_global", 1))
+    if cfg.family == "audio":
+        return (("dec", cfg.n_layers),)
+    if cfg.moe is not None:
+        if cfg.n_dense_layers:
+            return (("dense", cfg.n_dense_layers),
+                    ("moe", cfg.n_layers - cfg.n_dense_layers))
+        return (("moe", cfg.n_layers),)
+    return (("dense", cfg.n_layers),)
+
+
+def _stack_init(key: jax.Array, cfg: ModelConfig, kind: str, count: int
+                ) -> Params:
+    return jax.vmap(lambda k: blocks.init_block(k, cfg, kind))(
+        jax.random.split(key, count))
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4 + len(segments(cfg)))
+    p: Params = {
+        "embed": layers.init_embed(ks[0], cfg),
+        "final_norm": layers.init_norm(cfg, cfg.d_model),
+        "segments": tuple(
+            _stack_init(ks[3 + i], cfg, kind, count)
+            for i, (kind, count) in enumerate(segments(cfg))),
+    }
+    if cfg.is_encdec:
+        p["enc_segments"] = (_stack_init(ks[1], cfg, "enc", cfg.n_enc_layers),)
+        p["enc_norm"] = layers.init_norm(cfg, cfg.d_model)
+    return p
+
+
+def encode_audio(params: Params, frame_embeds: jax.Array, cfg: ModelConfig,
+                 enc_valid: jax.Array | None = None,
+                 q_chunk: int = 512, kv_chunk: int = 512,
+                 remat: bool = True, unroll: bool = False) -> jax.Array:
+    """Whisper encoder over stub conv-frontend frame embeddings (B, S, d)."""
+    s = frame_embeds.shape[1]
+    pos = jnp.arange(s)
+    h = frame_embeds + layers.sinusoidal_embed(pos, cfg.d_model)[None]
+    h = h.astype(jnp.dtype(cfg.param_dtype))
+
+    def body(h, lp):
+        h2, _, _ = blocks.block_forward(
+            lp, h, cfg, "enc", positions=pos, kv_valid=enc_valid,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, unroll=unroll)
+        return h2, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, h, params["enc_segments"][0],
+                        unroll=unroll)
+    return layers.apply_norm(params["enc_norm"], h, cfg.norm).astype(h.dtype)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
+            pos0: int = 0,
+            prefix_embeds: jax.Array | None = None,
+            enc_embeds: jax.Array | None = None,
+            enc_valid: jax.Array | None = None,
+            kv_valid: jax.Array | None = None,
+            return_caches: bool = False,
+            return_hidden: bool = False,
+            remat: bool = True, unroll: bool = False,
+            q_chunk: int = 512, kv_chunk: int = 512):
+    """Full-sequence forward.
+
+    Returns (logits (B, S_total, vocab), aux_loss, caches_per_segment);
+    with ``return_hidden`` the first element is the final hidden state
+    instead (callers run their own chunked loss over it — see
+    train.train_step.chunked_ce_loss).
+    ``prefix_embeds``: VLM patch embeddings prepended (prefix-LM mask).
+    ``enc_embeds``: whisper encoder frame embeddings (enc-dec only).
+    """
+    h = layers.embed_tokens(params["embed"], tokens, cfg)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        prefix_len = prefix_embeds.shape[1]
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    s_total = h.shape[1]
+    positions = pos0 + jnp.arange(s_total)
+    if cfg.pos == "sinusoidal":
+        h = h + layers.sinusoidal_embed(positions, cfg.d_model)[None].astype(h.dtype)
+    h = sharding.constrain_safe(h, ("batch", "seq", None))
+
+    enc_out = None
+    if cfg.is_encdec:
+        assert enc_embeds is not None, "enc-dec model needs enc_embeds"
+        enc_out = encode_audio(params, enc_embeds, cfg, enc_valid,
+                               q_chunk, kv_chunk, remat=remat, unroll=unroll)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+    for seg_params, (kind, count) in zip(params["segments"], segments(cfg)):
+        def body(h, lp, kind=kind):
+            h2, aux, cache = blocks.block_forward(
+                lp, h, cfg, kind, positions=positions, prefix_len=prefix_len,
+                kv_valid=kv_valid, enc_out=enc_out, enc_valid=enc_valid,
+                q_chunk=q_chunk, kv_chunk=kv_chunk, unroll=unroll,
+                return_cache=return_caches)
+            if kind == "dec" and return_caches:
+                cache = dict(cache,
+                             xk=jnp.einsum("bsd,dhk->bshk", enc_out,
+                                           lp["xattn"]["wk"]),
+                             xv=jnp.einsum("bsd,dhk->bshk", enc_out,
+                                           lp["xattn"]["wv"]))
+            return h2, (aux, cache)
+
+        body_fn = jax.checkpoint(body) if (remat and not return_caches) else body
+        h, (auxs, cache) = jax.lax.scan(body_fn, h, seg_params, unroll=unroll)
+        aux_total = aux_total + auxs.sum()
+        caches.append(cache)
+
+    h = layers.apply_norm(params["final_norm"], h, cfg.norm).astype(h.dtype)
+    if return_hidden:
+        return h, aux_total, caches
+    logits = layers.lm_logits(params["embed"], h, cfg)
+    logits = sharding.constrain_safe(logits, ("batch", "seq", "vocab"))
+    return logits, aux_total, caches
+
+
+# -- decode caches ---------------------------------------------------------------
+
+def _attn_cache_shape(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      dtype) -> dict:
+    a = cfg.attn
+    length = max_len
+    if kind == "hybrid_swa" and a.window is not None:
+        length = min(a.window, max_len)
+    if a.kind == "mla":
+        return {
+            "c": jnp.zeros((batch, length, a.kv_lora), dtype),
+            "kr": jnp.zeros((batch, length, a.rope_head_dim), dtype),
+            "kpos": jnp.full((batch, length), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, length, a.num_kv_heads, a.head_dim), dtype),
+        "v": jnp.zeros((batch, length, a.num_kv_heads, a.vdim), dtype),
+        "kpos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               enc_len: int = 0, dtype=jnp.bfloat16) -> list:
+    """Zeroed decode caches, one stacked pytree per segment."""
+    caches = []
+    for kind, count in segments(cfg):
+        def one(_key=None, kind=kind):
+            if kind == "ssm":
+                return ssm_mod.init_ssm_cache(batch, cfg, cfg.ssm, dtype)
+            c = _attn_cache_shape(cfg, kind, batch, max_len, dtype)
+            if kind in ("hybrid_global", "hybrid_swa"):
+                return {"attn": c,
+                        "ssm": ssm_mod.init_ssm_cache(batch, cfg, cfg.ssm,
+                                                      dtype)}
+            if kind == "dec":
+                a = cfg.attn
+                c = dict(c,
+                         xk=jnp.zeros((batch, enc_len, a.num_kv_heads,
+                                       a.head_dim), dtype),
+                         xv=jnp.zeros((batch, enc_len, a.num_kv_heads,
+                                       a.vdim), dtype),
+                         xkpos=jnp.tile(jnp.arange(enc_len, dtype=jnp.int32)[None],
+                                        (batch, 1)))
+            return c
+        unit = one()
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (count,) + x.shape), unit))
+    return caches
+
+
+def decode_step(params: Params, token: jax.Array, caches: list,
+                cur_pos: jax.Array, cfg: ModelConfig, *,
+                unroll: bool = False):
+    """One-token decode. token: (B,) int32; cur_pos: scalar int32.
+
+    Returns (logits (B, vocab) fp32, new_caches).
+    """
+    h = layers.embed_tokens(params["embed"], token[:, None], cfg)
+    if cfg.pos == "sinusoidal":
+        h = h + layers.sinusoidal_embed(
+            cur_pos[None][None], cfg.d_model).astype(h.dtype)
+    h = sharding.constrain_safe(h, ("batch", None, None))
+
+    new_caches = []
+    for seg_params, seg_cache, (kind, count) in zip(
+            params["segments"], caches, segments(cfg)):
+        # The cache rides in the scan CARRY with per-layer in-place
+        # dynamic updates (not xs->ys), so XLA aliases one buffer instead
+        # of double-buffering the full multi-GB cache (§Perf H2a iter 2).
+        def body(carry, xs, kind=kind):
+            h, cache_full = carry
+            lp, i = xs
+            lc = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, i, 0,
+                                                       keepdims=False),
+                cache_full)
+            h2, nc = blocks.block_decode(lp, h, lc, cfg, kind, cur_pos)
+            cache_full = jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), i, 0), cache_full, nc)
+            return (h2, cache_full), None
+
+        (h, new_cache), _ = jax.lax.scan(
+            body, (h, seg_cache), (seg_params, jnp.arange(count)),
+            unroll=unroll)
+        new_caches.append(new_cache)
+
+    h = layers.apply_norm(params["final_norm"], h, cfg.norm).astype(h.dtype)
+    logits = layers.lm_logits(params["embed"], h, cfg)[:, 0]
+    return logits, new_caches
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, max_len: int,
+            *, prefix_embeds=None, enc_embeds=None, enc_valid=None,
+            kv_valid=None, q_chunk: int = 512, kv_chunk: int = 512):
+    """Run the prompt and build decode caches padded to ``max_len``.
+
+    Returns (logits, caches, s_prompt).
+    """
+    logits, _, seg_caches = forward(
+        params, tokens, cfg, prefix_embeds=prefix_embeds,
+        enc_embeds=enc_embeds, enc_valid=enc_valid, kv_valid=kv_valid,
+        return_caches=True, remat=False, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    b = tokens.shape[0]
+    s = logits.shape[1]
+    out_caches = []
+    for (kind, count), cache in zip(segments(cfg), seg_caches):
+        out_caches.append(_assemble_cache(cache, cfg, kind, b, s, max_len))
+    return logits, out_caches, s
+
+
+def _assemble_cache(cache, cfg: ModelConfig, kind: str, b: int, s: int,
+                    max_len: int):
+    """Pad/ring-place prefill caches into decode layout (adds kpos)."""
+    if kind == "ssm":
+        return cache
+    a = cfg.attn
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def place(x, length):
+        # x: (count, B, s, ...) -> (count, B, length, ...) at slot pos%length
+        pad = [(0, 0)] * x.ndim
+        if s <= length:
+            pad[2] = (0, length - s)
+            return jnp.pad(x, pad)
+        # ring placement of the last `length` positions
+        tail = x[:, :, s - length:]
+        slots = (pos[s - length:]) % length
+        order = jnp.argsort(slots)
+        return tail[:, :, order]
+
+    def build(attn_cache, length):
+        out = {}
+        if a.kind == "mla":
+            out["c"] = place(attn_cache["c"], length)
+            out["kr"] = place(attn_cache["kr"], length)
+        else:
+            out["k"] = place(attn_cache["k"], length)
+            out["v"] = place(attn_cache["v"], length)
+        count = next(iter(out.values())).shape[0]
+        if s <= length:
+            kp = jnp.concatenate([pos, jnp.full((length - s,), -1, jnp.int32)])
+        else:
+            tailp = pos[s - length:]
+            kp = tailp[jnp.argsort(tailp % length)]
+        out["kpos"] = jnp.broadcast_to(kp[None, None], (count, b, length))
+        return out
+
+    if kind in ("hybrid_global", "hybrid_swa"):
+        length = max_len if kind == "hybrid_global" else min(
+            a.window or max_len, max_len)
+        return {"attn": build(cache["attn"], length), "ssm": cache["ssm"]}
+    if kind == "dec":
+        out = build({k: cache[k] for k in ("k", "v")}, max_len)
+        enc_len = cache["xk"].shape[2]
+        count = cache["xk"].shape[0]
+        out["xk"], out["xv"] = cache["xk"], cache["xv"]
+        out["xkpos"] = jnp.broadcast_to(
+            jnp.arange(enc_len, dtype=jnp.int32)[None, None],
+            (count, b, enc_len))
+        return out
+    return build(cache, max_len)

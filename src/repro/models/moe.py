@@ -1,0 +1,122 @@
+"""Mixture-of-Experts: top-k routing with grouped, capacity-bounded dispatch.
+
+GShard-style einsum dispatch: tokens are split into groups of
+``group_size``; within each group every token picks top-k experts, gets a
+position-in-expert by cumulative sum, and is dropped beyond the capacity
+``C = ceil(group_size * k / E * capacity_factor)``.  Dispatch/combine are
+one-hot einsums so that, under pjit with experts sharded over 'model' and
+groups over ('pod','data'), XLA lowers token exchange to all-to-alls — the
+production EP pattern.  Shared (always-on) experts are a fused dense MLP.
+
+Router runs in fp32; top-k weights renormalize to sum to 1 (DeepSeek
+convention) when ``router_scale``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, MoEConfig
+from repro.distributed import sharding
+from repro.models import layers
+
+Params = dict
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, m: MoEConfig) -> Params:
+    d, dt = cfg.d_model, jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    std = d ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, m.num_experts)) * std,  # fp32
+        "e_in": (jax.random.normal(ks[1], (m.num_experts, d, m.d_expert))
+                 * std).astype(dt),
+        "e_out": (jax.random.normal(ks[2], (m.num_experts, m.d_expert, d))
+                  * m.d_expert ** -0.5).astype(dt),
+    }
+    if cfg.glu:
+        p["e_gate"] = (jax.random.normal(ks[3], (m.num_experts, d, m.d_expert))
+                       * std).astype(dt)
+    if m.num_shared:
+        shared_cfg = cfg  # same act/glu
+        p["shared"] = layers.init_mlp(ks[4], shared_cfg,
+                                      m.num_shared * m.d_expert)
+    return p
+
+
+def capacity(m: MoEConfig) -> int:
+    c = math.ceil(m.group_size * m.top_k * m.capacity_factor / m.num_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_forward(p: Params, x: jax.Array, cfg: ModelConfig, m: MoEConfig
+                ) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,d), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    gs = min(m.group_size, t)
+    pad = (-t) % gs
+    xt = x.reshape(t, d)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    g = xt.shape[0] // gs
+    xg = xt.reshape(g, gs, d)
+    xg = sharding.constrain_safe(xg, ("expert_group", None, None))
+
+    # Router: bf16 operands, fp32 accumulation. Converting xg to fp32
+    # before the matmul looks harmless but XLA fuses the convert BEFORE
+    # the seq->group reshard, doubling the all-gather width (§Perf H3
+    # iteration 3 — the dominant collective in the MoE train cells).
+    logits = jnp.einsum("gtd,de->gte", xg,
+                        p["router"].astype(xg.dtype),
+                        preferred_element_type=jnp.float32)  # (G, gs, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, m.top_k)             # (G, gs, k)
+    if m.router_scale:
+        weights = weights / jnp.maximum(
+            weights.sum(axis=-1, keepdims=True), 1e-9)
+
+    e = m.num_experts
+    c = capacity(m)
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.float32)           # (G, gs, k, E)
+    # Position of each (token, k) slot within its expert queue (group-local).
+    flat = oh.reshape(g, gs * m.top_k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(g, gs, m.top_k, e)
+    keep = (pos < c) & (oh > 0)
+    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), c, dtype=jnp.float32)
+    cap_oh = cap_oh * keep[..., None].astype(jnp.float32)    # (G,gs,k,E,C)
+
+    # bf16 one-hot dispatch/combine, pinned expert-sharded at creation —
+    # fp32 combine tensors resharded between fwd/bwd were the dominant
+    # all-gather traffic in the MoE train cells (§Perf H3 iteration 2).
+    combine = jnp.einsum("gtk,gtkec->gtec", weights, cap_oh)  # (G,gs,E,C)
+    combine = sharding.constrain_safe(
+        combine.astype(jnp.bfloat16), ("expert_group", None, "experts", None))
+    dispatch = (combine > 0).astype(x.dtype)
+
+    # Token exchange (all-to-all under EP sharding) + expert FFN.
+    ein = jnp.einsum("gtec,gtd->gecd", dispatch, xg)          # (G,E,C,d)
+    ein = sharding.constrain_safe(ein, ("expert_group", "experts", None, None))
+    h = jnp.einsum("gecd,edf->gecf", ein, p["e_in"])
+    if cfg.glu:
+        h = layers.act_fn(cfg.act)(
+            jnp.einsum("gecd,edf->gecf", ein, p["e_gate"])) * h
+    else:
+        h = layers.act_fn(cfg.act)(h)
+    eout = jnp.einsum("gecf,efd->gecd", h, p["e_out"])        # (G,E,C,d)
+    eout = sharding.constrain_safe(eout, ("expert_group", "experts", None, None))
+    y = jnp.einsum("gecd,gtec->gtd", eout.astype(x.dtype),
+                   combine.astype(x.dtype))
+
+    y = y.reshape(-1, d)[:t].reshape(b, s, d)
+    if m.num_shared:
+        y = y + layers.apply_mlp(p["shared"], x, cfg)
+
+    # Switch-style load-balancing aux loss.
+    frac_tokens = oh.sum(axis=2).mean(axis=(0, 1))            # (E,)
+    frac_probs = probs.mean(axis=(0, 1))                      # (E,)
+    aux = (frac_tokens * frac_probs).sum() * e * m.aux_loss_coef
+    return y, aux

@@ -1,0 +1,191 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked scan + decode step.
+
+Follows arXiv:2405.21060's minimal SSD formulation: within chunks of
+length Q the quadratic "attention-like" form runs on the MXU; across
+chunks a linear recurrence carries the (H, P, N) state.  The decode path
+is the O(1) recurrent update.  Includes the depthwise causal conv on
+(x, B, C), the gated RMSNorm, and the z-gate, matching mamba2's block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.distributed import sharding
+from repro.models import layers
+
+Params = dict
+
+
+def dims(cfg: ModelConfig, s: SSMConfig) -> dict:
+    d_in = s.expand * cfg.d_model
+    return dict(
+        d_in=d_in,
+        n_heads=d_in // s.head_dim,
+        conv_dim=d_in + 2 * s.n_groups * s.d_state,
+    )
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig, s: SSMConfig) -> Params:
+    d, dt_ = cfg.d_model, jnp.dtype(cfg.param_dtype)
+    dd = dims(cfg, s)
+    d_in, h, conv_dim = dd["d_in"], dd["n_heads"], dd["conv_dim"]
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    # in_proj emits [z (d_in), xBC (conv_dim), dt (H)]
+    proj_out = d_in + conv_dim + h
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * std).astype(dt_),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim)) * 0.1
+                   ).astype(dt_),
+        "conv_b": jnp.zeros((conv_dim,), dt_),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, h))).astype(jnp.float32),
+        "gate_norm": {"scale": jnp.ones((d_in,), jnp.float32)},
+        "out_proj": (jax.random.normal(ks[2], (d_in, d)) * d_in ** -0.5
+                     ).astype(dt_),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width d_conv: (B, L, C) -> (B, L, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(..., Q) -> (..., Q, Q): S[i,j] = sum_{k in (j, i]} a_k, -inf above diag."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _split(p: Params, x: jax.Array, cfg: ModelConfig, s: SSMConfig):
+    dd = dims(cfg, s)
+    d_in, h = dd["d_in"], dd["n_heads"]
+    gn = s.n_groups * s.d_state
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + dd["conv_dim"]]
+    dt_raw = zxbcdt[..., d_in + dd["conv_dim"]:]
+    return z, xbc, dt_raw, d_in, h, gn
+
+
+def ssm_forward(p: Params, x: jax.Array, cfg: ModelConfig, s: SSMConfig,
+                ) -> jax.Array:
+    """Full-sequence SSD: (B, L, d) -> (B, L, d)."""
+    bsz, l, _ = x.shape
+    z, xbc, dt_raw, d_in, h, gn = _split(p, x, cfg, s)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_in].reshape(bsz, l, h, s.head_dim)
+    bmat = xbc[..., d_in:d_in + gn].reshape(bsz, l, s.n_groups, s.d_state)
+    cmat = xbc[..., d_in + gn:].reshape(bsz, l, s.n_groups, s.d_state)
+    xs = sharding.constrain_safe(xs, ("batch", "seq", "ssm_heads", None))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    a = -jnp.exp(p["a_log"])                                         # (H,)
+    # heads per group for broadcasting B/C
+    hpg = h // s.n_groups
+
+    q = min(s.chunk, l)
+    pad = (-l) % q
+    def padl(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+    xs_, b_, c_, dt_ = map(padl, (xs, bmat, cmat, dt))
+    lp = xs_.shape[1]
+    nc = lp // q
+    xs_ = xs_.reshape(bsz, nc, q, h, s.head_dim)
+    b_ = b_.reshape(bsz, nc, q, s.n_groups, s.d_state)
+    c_ = c_.reshape(bsz, nc, q, s.n_groups, s.d_state)
+    dt_ = dt_.reshape(bsz, nc, q, h)
+
+    adt = dt_ * a                                          # (B,nc,Q,H)
+    acs = jnp.cumsum(adt, axis=2)                          # (B,nc,Q,H)
+    xdt = xs_ * dt_[..., None]
+
+    # Intra-chunk (quadratic) term.
+    lmat = jnp.exp(_segsum(jnp.moveaxis(adt, -1, 2)))      # (B,nc,H,Q,Q)
+    bh = jnp.repeat(b_, hpg, axis=3)                       # (B,nc,Q,H,N)
+    ch = jnp.repeat(c_, hpg, axis=3)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", ch, bh)      # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp",
+                        scores * lmat, xdt)
+
+    # Chunk states + inter-chunk recurrence.
+    decay_states = jnp.exp(acs[:, :, -1:, :] - acs)        # (B,nc,Q,H)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn",
+                        bh, decay_states, xdt)             # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(acs[:, :, -1, :])                # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                   # emit state BEFORE chunk
+
+    init = jnp.zeros((bsz, h, s.head_dim, s.d_state), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (B,nc,H,P,N)
+
+    state_decay = jnp.exp(acs)                             # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       ch, prev_states.astype(ch.dtype), state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, lp, h, s.head_dim)[:, :l]
+    y = y + xs * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, d_in)
+
+    y = layers.apply_norm(p["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    return y.astype(x.dtype) @ p["out_proj"]
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, s: SSMConfig,
+                   dtype=jnp.float32) -> dict:
+    dd = dims(cfg, s)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, dd["conv_dim"]), dtype),
+        "state": jnp.zeros((batch, dd["n_heads"], s.head_dim, s.d_state),
+                           jnp.float32),
+    }
+
+
+def ssm_decode_step(p: Params, x: jax.Array, cache: dict, cfg: ModelConfig,
+                    s: SSMConfig) -> tuple[jax.Array, dict]:
+    """One-token recurrent update: x (B, 1, d) -> (y (B, 1, d), new cache)."""
+    bsz = x.shape[0]
+    z, xbc, dt_raw, d_in, h, gn = _split(p, x, cfg, s)
+    # conv over [cached w-1 inputs, current]
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)     # (B, w, C)
+    conv_out = (win * p["conv_w"][None]).sum(axis=1, keepdims=True)
+    xbc1 = jax.nn.silu(conv_out + p["conv_b"])              # (B,1,C)
+    new_conv = win[:, 1:, :]
+
+    xs = xbc1[..., :d_in].reshape(bsz, h, s.head_dim)
+    bvec = xbc1[..., d_in:d_in + gn].reshape(bsz, s.n_groups, s.d_state)
+    cvec = xbc1[..., d_in + gn:].reshape(bsz, s.n_groups, s.d_state)
+    hpg = h // s.n_groups
+    bh = jnp.repeat(bvec, hpg, axis=1)                      # (B,H,N)
+    chh = jnp.repeat(cvec, hpg, axis=1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)                                 # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, xs.astype(jnp.float32),
+                     bh.astype(jnp.float32))
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", chh.astype(jnp.float32), state)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_in)
+    y = layers.apply_norm(p["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,1 @@
+"""Serving substrate: prefill/decode steps, sampling, request batching."""

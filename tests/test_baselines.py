@@ -1,0 +1,60 @@
+"""Baseline profilers: correctness on an easy community + memory ordering."""
+
+import numpy as np
+import pytest
+
+from repro.baselines import ClarkLike, Kraken2Like, MetaCacheLike, bracken_like
+from repro.core import HDSpace, Demeter, batch_reads
+from repro.eval import read_level_accuracy, score_profile
+from repro.genomics import synth
+
+SPEC = synth.CommunitySpec(num_species=6, genome_len=20_000,
+                           homology_fraction=0.0, strain_snp_rate=0.0,
+                           read_error_rate=0.0, seed=11)
+
+
+@pytest.fixture(scope="module")
+def community():
+    return synth.make_sample(SPEC, num_reads=300, present=[0, 2, 4])
+
+
+@pytest.mark.parametrize("baseline", [Kraken2Like(k=21), MetaCacheLike(),
+                                      ClarkLike(k=21)])
+def test_baseline_profile_accuracy(community, baseline):
+    genomes, toks, lens, truth, true_ab = community
+    glens = np.array([len(g) for g in genomes.values()])
+    baseline.build(genomes)
+    hits, cat = baseline.classify_reads(toks, lens)
+    assert read_level_accuracy(hits, cat, truth) > 0.9
+    res = bracken_like.estimate_abundance(hits, cat, glens)
+    m = score_profile(np.asarray(res.abundance), true_ab)
+    assert m.precision == 1.0 and m.recall == 1.0, m.row()
+
+
+def test_clark_discards_shared_kmers():
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 4, 2000).astype(np.int32)
+    g = {"a": shared, "b": shared.copy()}   # fully homologous
+    c = ClarkLike(k=21).build(g)
+    assert len(c.table.hashes) == 0         # nothing is discriminative
+
+
+def test_memory_ordering_demeter_smallest(community):
+    genomes, *_ = community
+    k = Kraken2Like(k=21).build(genomes)
+    m = MetaCacheLike().build(genomes)
+    dm = Demeter(HDSpace(dim=4096, ngram=16), window=4096)
+    db = dm.build_refdb(genomes)
+    assert db.memory_bytes() < m.memory_bytes() < k.memory_bytes()
+    # paper's headline: order-of-magnitude+ vs kraken-like tables
+    assert k.memory_bytes() / db.memory_bytes() > 10
+
+
+def test_demeter_beats_threshold_on_easy_community(community):
+    genomes, toks, lens, truth, true_ab = community
+    dm = Demeter(HDSpace(dim=8192, ngram=16, z_threshold=5.0), window=4096)
+    db = dm.build_refdb(genomes)
+    rep = dm.profile(db, batch_reads(toks, lens, 64))
+    m = score_profile(rep.abundance, true_ab)
+    assert m.precision == 1.0 and m.recall == 1.0, m.row()
+    assert m.l1_error < 0.15

@@ -1,0 +1,59 @@
+"""Packed-bit substrate: pack/unpack, popcount, the word-roll permutation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(32, 256))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip(seed, dim):
+    dim = (dim // 32) * 32
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (3, dim)).astype(np.uint8)
+    packed = bitops.pack_bits(jnp.asarray(bits))
+    assert packed.dtype == jnp.uint32
+    back = bitops.unpack_bits(packed)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+def test_popcount_matches_numpy():
+    rng = np.random.default_rng(0)
+    w = rng.integers(0, 2**32, (5, 16), dtype=np.uint32)
+    got = np.asarray(bitops.popcount_words(jnp.asarray(w)))
+    want = np.array([bin(int(x)).count("1") for x in w.reshape(-1)]
+                    ).reshape(5, 16).sum(-1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_rho_is_32bit_roll_in_bitspace():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.integers(0, 2**32, (8,), dtype=np.uint32))
+    rolled = bitops.rho(w, 1)
+    bits = np.asarray(bitops.unpack_bits(w))
+    want = np.roll(bits, 32)
+    np.testing.assert_array_equal(np.asarray(bitops.unpack_bits(rolled)), want)
+
+
+def test_rho_preserves_hamming_distance():
+    key = jax.random.key(0)
+    a = bitops.random_packed(key, (4,), 512)
+    b = bitops.random_packed(jax.random.key(1), (4,), 512)
+    d0 = bitops.hamming_packed(a, b)
+    d1 = bitops.hamming_packed(bitops.rho(a, 3), bitops.rho(b, 3))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_random_packed_density():
+    v = bitops.random_packed(jax.random.key(0), (16,), 4096, density=0.25)
+    frac = float(bitops.popcount_words(v).sum()) / (16 * 4096)
+    assert 0.22 < frac < 0.28
+
+
+def test_dim_must_be_multiple_of_32():
+    with pytest.raises(ValueError):
+        bitops.num_words(100)

@@ -1,0 +1,82 @@
+"""Config fidelity: parameter counts match the published model sizes."""
+
+import pytest
+
+from repro.configs import ALIASES, all_archs, get_config
+from repro.configs import shapes as shapes_mod
+
+# (arch, expected TOTAL params, tolerance) — active counts for MoE noted.
+EXPECTED_ACTIVE = {
+    "deepseek_67b": (67e9, 0.10),
+    "starcoder2_7b": (7e9, 0.15),
+    "nemotron4_15b": (15e9, 0.20),
+    "stablelm_3b": (3e9, 0.25),
+    "mamba2_1_3b": (1.3e9, 0.15),
+    "hymba_1_5b": (1.5e9, 0.35),
+    "paligemma_3b": (3e9, 0.25),     # backbone (SigLIP tower is stubbed)
+    "phi35_moe": (6.6e9, 0.25),      # active (a6.6b)
+    "deepseek_v2_lite": (2.4e9, 0.40),  # active ~2.4B
+    "whisper_tiny": (39e6, 0.60),    # tiny enc-dec
+}
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_config_loads_and_validates(arch):
+    cfg = get_config(arch)
+    assert cfg.n_layers > 0 and cfg.d_model > 0 and cfg.vocab > 0
+    smoke = get_config(arch, smoke=True)
+    assert smoke.family == cfg.family
+    assert smoke.d_model <= 128, "smoke configs must be tiny"
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED_ACTIVE))
+def test_active_param_count_fidelity(arch):
+    cfg = get_config(arch)
+    want, tol = EXPECTED_ACTIVE[arch]
+    got = cfg.active_param_count()
+    assert abs(got - want) / want < tol, \
+        f"{arch}: active params {got/1e9:.2f}B vs published {want/1e9:.2f}B"
+
+
+def test_aliases_cover_assignment_ids():
+    for assignment_id in ("deepseek-v2-lite-16b", "phi3.5-moe-42b-a6.6b",
+                          "starcoder2-7b", "deepseek-67b", "nemotron-4-15b",
+                          "stablelm-3b", "whisper-tiny", "hymba-1.5b",
+                          "mamba2-1.3b", "paligemma-3b"):
+        assert get_config(assignment_id) is not None
+
+
+def test_shape_applicability_skips():
+    long = shapes_mod.SHAPES["long_500k"]
+    runs, _ = shapes_mod.applicable(get_config("mamba2_1_3b"), long)
+    assert runs
+    runs, reason = shapes_mod.applicable(get_config("deepseek_67b"), long)
+    assert not runs and "full-attention" in reason
+    runs, _ = shapes_mod.applicable(get_config("hymba_1_5b"), long)
+    assert runs
+
+
+def test_input_specs_shapes():
+    cfg = get_config("paligemma_3b")
+    spec = shapes_mod.input_specs(cfg, shapes_mod.SHAPES["train_4k"])
+    # image prefix + text = 4096 total
+    assert spec["prefix_embeds"].shape == (256, 256, 2048)
+    assert spec["tokens"].shape == (256, 4096 - 256)
+
+    wcfg = get_config("whisper_tiny")
+    spec = shapes_mod.input_specs(wcfg, shapes_mod.SHAPES["prefill_32k"])
+    assert spec["enc_embeds"].shape == (32, 32768, 384)
+
+    dcfg = get_config("deepseek_67b")
+    spec = shapes_mod.input_specs(dcfg, shapes_mod.SHAPES["decode_32k"])
+    assert spec["token"].shape == (128,)
+
+
+def test_cache_specs_no_allocation():
+    cfg = get_config("deepseek_67b")
+    caches = shapes_mod.cache_specs(cfg, shapes_mod.SHAPES["decode_32k"])
+    import jax
+    leaves = jax.tree.leaves(caches)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    # KV cache shape: (layers, batch, seq, kv_heads, head_dim)
+    assert caches[0]["k"].shape == (95, 128, 32768, 8, 128)

@@ -1,0 +1,122 @@
+"""HDC core: encoder equivalences, classifier semantics, abundance math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (HDSpace, abundance, assoc_memory, bitops, classifier,
+                        encoder, item_memory)
+from repro.core import UNMAPPED, UNIQUE, MULTI
+
+
+SP = HDSpace(dim=1024, ngram=6, z_threshold=3.0)
+
+
+def _im():
+    return item_memory.make_item_memory(SP), item_memory.make_tie_break(SP)
+
+
+def test_rolling_encoder_matches_gather_encoder():
+    """The O(1)-per-position recurrence == direct Eq.1 evaluation."""
+    im, tie = _im()
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, 4, (5, 40)), jnp.int32)
+    lens = jnp.asarray([40, 40, 17, 6, 40], jnp.int32)
+
+    im_rolled = item_memory.rolled(im, SP.ngram)
+    grams = encoder.encode_grams(toks, im_rolled)
+    m = np.maximum(np.asarray(lens) - SP.ngram + 1, 0)
+    bits = np.asarray(bitops.unpack_bits(grams)).astype(np.int64)
+    counts_want = np.zeros((5, SP.dim), np.int64)
+    for b in range(5):
+        counts_want[b] = bits[b, :m[b]].sum(axis=0)
+
+    im_last = bitops.rho(im, SP.ngram - 1)
+    counts, mm = encoder.bundle_counts(toks, lens, im, im_last,
+                                       n=SP.ngram, dim=SP.dim)
+    np.testing.assert_array_equal(np.asarray(mm), m)
+    np.testing.assert_array_equal(np.asarray(counts), counts_want)
+
+
+def test_gram_equals_eq1_binding():
+    """gram_0 == B[c0] ^ rho(B[c1]) ^ ... ^ rho^{n-1}(B[c_{n-1}])."""
+    im, _ = _im()
+    toks = jnp.asarray([[0, 1, 2, 3, 2, 1]], jnp.int32)
+    im_rolled = item_memory.rolled(im, 6)
+    gram = encoder.encode_grams(toks, im_rolled)[0, 0]
+    want = im[0]
+    for j in range(1, 6):
+        want = jnp.bitwise_xor(want, bitops.rho(im[toks[0, j]], j))
+    np.testing.assert_array_equal(np.asarray(gram), np.asarray(want))
+
+
+def test_majority_tie_break():
+    counts = jnp.asarray([[0, 1, 2, 1]], jnp.int32)  # m=2: 0<1, 1==tie, 2>1
+    tie = bitops.pack_bits(jnp.asarray([[1, 0, 1, 1] + [0] * 28], jnp.uint8))[0]
+    m = jnp.asarray([2], jnp.int32)
+    packed = encoder.binarize_majority(
+        jnp.pad(counts, ((0, 0), (0, 28))), m, tie)
+    bits = np.asarray(bitops.unpack_bits(packed))[0, :4]
+    np.testing.assert_array_equal(bits, [0, 0, 1, 1])
+
+
+def test_agreement_formulations_match():
+    key = jax.random.key(2)
+    q = bitops.random_packed(key, (6,), SP.dim)
+    p = bitops.random_packed(jax.random.key(3), (9,), SP.dim)
+    a1 = assoc_memory.agreement_matmul(q, p, SP.dim)
+    a2 = assoc_memory.agreement_packed_chunked(q, p, SP.dim, chunk=4)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_classifier_categories():
+    """Unique / multi / unmapped reads are assigned the right category."""
+    from repro.core.assoc_memory import RefDB
+    key = jax.random.key(4)
+    protos = bitops.random_packed(key, (3,), SP.dim)
+    db = RefDB(prototypes=protos,
+               proto_species=jnp.asarray([0, 1, 2]),
+               genome_lengths=jnp.asarray([1000, 1000, 1000]),
+               num_species=3, species_names=("a", "b", "c"))
+    # query 0 == prototype 0 (unique); query 1 == p1 with p2 duplicated
+    # below; query 2 random (unmapped)
+    db_multi = RefDB(prototypes=jnp.concatenate([protos, protos[1:2]]),
+                     proto_species=jnp.asarray([0, 1, 2, 2]),
+                     genome_lengths=db.genome_lengths, num_species=3,
+                     species_names=db.species_names)
+    q = jnp.stack([protos[0], protos[1],
+                   bitops.random_packed(jax.random.key(99), (), SP.dim)])
+    res = classifier.classify(q, db_multi, SP)
+    cat = np.asarray(res.category)
+    assert cat[0] == UNIQUE
+    assert cat[1] == MULTI        # species 1 and 2 share the prototype
+    assert cat[2] == UNMAPPED
+
+
+def test_abundance_proportional_split():
+    # 3 species; 4 unique reads on s0, 2 on s1; 2 multi reads {s0, s1}.
+    hits = np.zeros((8, 3), bool)
+    hits[0:4, 0] = True
+    hits[4:6, 1] = True
+    hits[6:8, [0]] = True
+    hits[6:8, [1]] = True
+    cat = np.array([UNIQUE] * 6 + [MULTI] * 2, np.int32)
+    lens = np.array([100, 100, 100])
+    res = abundance.estimate(jnp.asarray(hits), jnp.asarray(cat),
+                             jnp.asarray(lens))
+    # rates: s0 = 4/100, s1 = 2/100 -> multi splits 2/3 vs 1/3
+    want0 = (4 + 2 * (4 / 6)) / 8
+    want1 = (2 + 2 * (2 / 6)) / 8
+    np.testing.assert_allclose(np.asarray(res.abundance),
+                               [want0, want1, 0.0], atol=1e-6)
+    assert float(res.unmapped_fraction) == 0.0
+
+
+def test_abundance_uniform_fallback():
+    # multi read over species with zero unique support -> uniform split
+    hits = np.zeros((1, 2), bool)
+    hits[0] = [True, True]
+    cat = np.array([MULTI], np.int32)
+    res = abundance.estimate(jnp.asarray(hits), jnp.asarray(cat),
+                             jnp.asarray([50, 50]))
+    np.testing.assert_allclose(np.asarray(res.abundance), [0.5, 0.5])

@@ -1,0 +1,91 @@
+"""Property-based tests (hypothesis) for HDC system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HDSpace, bitops, encoder, item_memory
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_xor_binding_is_self_inverse(seed):
+    """bind(bind(x, b), b) == x — XOR binding is an involution."""
+    a = bitops.random_packed(jax.random.key(seed), (), 512)
+    b = bitops.random_packed(jax.random.key(seed + 1), (), 512)
+    back = jnp.bitwise_xor(jnp.bitwise_xor(a, b), b)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(a))
+
+
+@given(st.integers(0, 500), st.integers(1, 15))
+@settings(max_examples=20, deadline=None)
+def test_permutation_preserves_distances(seed, k):
+    a = bitops.random_packed(jax.random.key(seed), (), 512)
+    b = bitops.random_packed(jax.random.key(seed + 7), (), 512)
+    d0 = int(bitops.hamming_packed(a, b))
+    d1 = int(bitops.hamming_packed(bitops.rho(a, k), bitops.rho(b, k)))
+    assert d0 == d1
+
+
+@given(st.integers(0, 200))
+@settings(max_examples=15, deadline=None)
+def test_random_vectors_are_quasi_orthogonal(seed):
+    """Agreement of random HD vectors concentrates around D/2 (±5 sigma)."""
+    dim = 4096
+    a = bitops.random_packed(jax.random.key(seed), (), dim)
+    b = bitops.random_packed(jax.random.key(seed + 1), (), dim)
+    agree = dim - int(bitops.hamming_packed(a, b))
+    sigma = (dim ** 0.5) / 2
+    assert abs(agree - dim / 2) < 5 * sigma
+
+
+@given(st.integers(0, 100), st.integers(2, 8))
+@settings(max_examples=10, deadline=None)
+def test_encode_is_deterministic(seed, n):
+    sp = HDSpace(dim=512, ngram=n)
+    im = item_memory.make_item_memory(sp)
+    tie = item_memory.make_tie_break(sp)
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, 4, (2, 20)), jnp.int32)
+    lens = jnp.full((2,), 20, jnp.int32)
+    h1 = encoder.encode(toks, lens, im, tie, sp)
+    h2 = encoder.encode(toks, lens, im, tie, sp)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_similar_sequences_have_similar_encodings(seed):
+    """One substitution moves the HD vector less than a fresh random read."""
+    sp = HDSpace(dim=2048, ngram=6)
+    im = item_memory.make_item_memory(sp)
+    tie = item_memory.make_tie_break(sp)
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, 4, 60)
+    mut = base.copy()
+    mut[30] = (mut[30] + 1) % 4
+    rand = rng.integers(0, 4, 60)
+    toks = jnp.asarray(np.stack([base, mut, rand]), jnp.int32)
+    lens = jnp.full((3,), 60, jnp.int32)
+    hv = encoder.encode(toks, lens, im, tie, sp)
+    d_mut = int(bitops.hamming_packed(hv[0], hv[1]))
+    d_rand = int(bitops.hamming_packed(hv[0], hv[2]))
+    assert d_mut < d_rand
+
+
+def test_bundle_majority_recovers_members():
+    """A bundled vector stays closer to its members than to noise."""
+    sp = HDSpace(dim=4096, ngram=4)
+    im = item_memory.make_item_memory(sp)
+    tie = item_memory.make_tie_break(sp)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, 4, (1, 40)), jnp.int32)
+    lens = jnp.full((1,), 40, jnp.int32)
+    hv = encoder.encode(toks, lens, im, tie, sp)[0]
+    im_rolled = item_memory.rolled(im, sp.ngram)
+    grams = encoder.encode_grams(toks, im_rolled)[0]
+    member_d = int(bitops.hamming_packed(hv, grams[0]))
+    noise = bitops.random_packed(jax.random.key(5), (), sp.dim)
+    noise_d = int(bitops.hamming_packed(hv, noise))
+    assert member_d < noise_d

@@ -1,0 +1,51 @@
+"""End-to-end training: loss decreases on structured synthetic data."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import lm_data
+from repro.train import train_step as ts
+from repro.train.optimizer import OptConfig, lr_at
+
+
+def test_lr_schedule_shape():
+    oc = OptConfig(peak_lr=1e-3, warmup_steps=10, total_steps=100,
+                   min_lr_frac=0.1)
+    assert float(lr_at(jnp.int32(0), oc)) == 0.0
+    assert abs(float(lr_at(jnp.int32(10), oc)) - 1e-3) < 1e-9
+    assert float(lr_at(jnp.int32(55), oc)) < 1e-3
+    assert float(lr_at(jnp.int32(100), oc)) >= 0.1e-3 - 1e-9
+
+
+def test_loss_decreases_on_structured_data():
+    cfg = dataclasses.replace(get_config("stablelm_3b", smoke=True),
+                              vocab=64, n_layers=2, param_dtype="float32")
+    dc = lm_data.DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8,
+                            seed=1)
+    tc = ts.TrainConfig(opt=OptConfig(peak_lr=1e-2, warmup_steps=5,
+                                      total_steps=100, weight_decay=0.0),
+                        loss_chunk=32, q_chunk=32, kv_chunk=32, z_loss=0.0)
+    state = ts.init_train_state(jax.random.key(0), cfg, tc)
+    step = jax.jit(ts.make_train_step(cfg, tc))
+    losses = []
+    for i in range(100):
+        batch = jax.tree.map(jnp.asarray, lm_data.batch_at(dc, i))
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first * 0.85, f"no learning: {first:.3f} -> {last:.3f}"
+    assert np.isfinite(losses).all()
+
+
+def test_data_pipeline_deterministic():
+    dc = lm_data.DataConfig(vocab=64, seq_len=16, global_batch=4, seed=9)
+    b1, b2 = lm_data.batch_at(dc, 123), lm_data.batch_at(dc, 123)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = lm_data.batch_at(dc, 124)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
