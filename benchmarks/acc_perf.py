@@ -41,15 +41,17 @@ def stage_times(read_len: int, n: int, dim: int, num_protos: int,
 
 def run(community=None, emit=common.emit, software_query=None) -> dict:
     community = community or common.afs_small()
-    sp = common.PROD_SPACE
-    # prototype count at production window size (8192) for this community
-    num_protos = int(sum(-(-len(g) // 8192)
+    cfg = common.PROD_CONFIG      # the accelerated deployment config
+    sp = cfg.space
+    # prototype count at the production window size for this community
+    num_protos = int(sum(-(-len(g) // cfg.window)
                          for g in community.genomes.values()))
-    st = stage_times(150, sp.ngram, sp.dim, max(num_protos, 128))
-    emit("acc.model.encode_us_per_read", st["encode_s"] / 4096 * 1e6,
-         "VPU-bound")
-    emit("acc.model.search_us_per_read", st["search_s"] / 4096 * 1e6,
-         "MXU")
+    st = stage_times(150, sp.ngram, sp.dim, max(num_protos, 128),
+                     batch=cfg.batch_size)
+    emit("acc.model.encode_us_per_read",
+         st["encode_s"] / cfg.batch_size * 1e6, "VPU-bound")
+    emit("acc.model.search_us_per_read",
+         st["search_s"] / cfg.batch_size * 1e6, "MXU")
     emit("acc.model.query_us_per_read", st["per_read_us"],
          f"{st['reads_per_s'] * 60 / 1e6:.2f}Mreads/min")
     bottleneck = "encoder" if st["encode_s"] >= st["search_s"] else "search"

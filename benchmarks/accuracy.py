@@ -10,8 +10,9 @@ import numpy as np
 
 from benchmarks import common
 from repro.baselines import bracken_like
-from repro.core import batch_reads
+from repro.core import UNIQUE
 from repro.eval import score_profile
+from repro.pipeline import ArraySource
 
 
 def run(community=None, emit=common.emit) -> dict:
@@ -25,15 +26,17 @@ def run(community=None, emit=common.emit) -> dict:
             prof.build(community.genomes)
         for sname, (toks, lens, truth, true_ab) in community.samples.items():
             if pname == "demeter":
-                rep = prof.profile(db, batch_reads(toks, lens, 256))
+                rep = prof.profile(ArraySource(toks, lens), refdb=db)
                 est = rep.abundance
             else:
                 hits, cat = prof.classify_reads(toks, lens)
                 if pname == "kraken2":
-                    # plain kraken2: unique assignments only (no
-                    # redistribution), multi reads count fractionally
-                    est = np.asarray(bracken_like.estimate_abundance(
-                        hits, cat, glens).abundance)
+                    # plain kraken2: species abundance from unique
+                    # assignments only — multi-mapped reads stay at the
+                    # ambiguous rank until bracken redistributes them
+                    uniq = np.asarray(hits)[np.asarray(cat) == UNIQUE]
+                    counts = uniq.sum(axis=0).astype(np.float64)
+                    est = counts / max(counts.sum(), 1e-30)
                 else:
                     est = np.asarray(bracken_like.estimate_abundance(
                         hits, cat, glens).abundance)

@@ -1,4 +1,9 @@
-"""Fig. 11 analogue: reference-database build time per profiler."""
+"""Fig. 11 analogue: reference-database build time per profiler.
+
+Demeter builds through a ProfilingSession (``benchmarks.common``'s
+BENCH_CONFIG), so the timed path is the same backend-routed encode the
+query benchmarks use.
+"""
 
 from __future__ import annotations
 

@@ -20,13 +20,20 @@ from typing import Callable
 import numpy as np
 
 from repro.baselines import ClarkLike, Kraken2Like, MetaCacheLike
-from repro.core import HDSpace, Demeter
+from repro.core import HDSpace
 from repro.genomics import synth
+from repro.pipeline import ProfilerConfig, ProfilingSession
 
 # Demeter production HD space (paper: D=40,000; ours is 128-lane aligned).
 PROD_SPACE = HDSpace(dim=40960, ngram=16, z_threshold=5.0)
 # CPU-sized space used by the software benchmarks (keeps run.py < minutes).
 BENCH_SPACE = HDSpace(dim=8192, ngram=16, z_threshold=5.0)
+
+# The same two setups as full profiling configs (window/batch/backend named).
+PROD_CONFIG = ProfilerConfig(space=PROD_SPACE, window=8192, batch_size=4096,
+                             backend="pallas_matmul")
+BENCH_CONFIG = ProfilerConfig(space=BENCH_SPACE, window=4096, batch_size=256,
+                              backend="reference")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,10 +78,12 @@ def afs_large() -> BenchCommunity:
                           reads_per_sample=2_000, seed=31)
 
 
-def make_profilers() -> dict:
-    """The paper's lineup: Demeter vs 4 SOTA baselines."""
+def make_profilers(backend: str | None = None) -> dict:
+    """The paper's lineup: Demeter (a ProfilingSession) vs 4 SOTA baselines."""
+    config = (BENCH_CONFIG if backend is None
+              else dataclasses.replace(BENCH_CONFIG, backend=backend))
     return {
-        "demeter": Demeter(BENCH_SPACE, window=4096, batch_size=256),
+        "demeter": ProfilingSession(config),
         "kraken2": Kraken2Like(k=21),
         "kraken2+bracken": Kraken2Like(k=21),   # + bracken redistribution
         "metacache": MetaCacheLike(),

@@ -1,18 +1,17 @@
 """Fig. 4/5 analogue: software query time per read + throughput (Mreads/min).
 
-C-Demeter's role is played by the pure-JAX CPU path (jit'd, batched);
-baselines run their numpy hash pipelines.  The paper's observation to
-reproduce: the *software* Demeter is memory-bound and does NOT beat
-Kraken2 on CPU — that gap is the motivation for Acc-Demeter
-(benchmarks/acc_perf.py projects the accelerated version).
+C-Demeter's role is played by the "reference" backend of a
+ProfilingSession (jit'd, batched); baselines run their numpy hash
+pipelines.  The paper's observation to reproduce: the *software* Demeter
+is memory-bound and does NOT beat Kraken2 on CPU — that gap is the
+motivation for Acc-Demeter (benchmarks/acc_perf.py projects the
+accelerated version).
 """
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import common
-from repro.core import batch_reads
+from repro.pipeline import ArraySource
 
 
 def run(community=None, emit=common.emit, sample: str = "kylo") -> dict:
@@ -24,15 +23,15 @@ def run(community=None, emit=common.emit, sample: str = "kylo") -> dict:
             continue                      # same classify path as kraken2
         if pname == "demeter":
             db = prof.build_refdb(community.genomes)
+            batch = prof.config.batch_size
             # warmup (compile)
-            q = prof.encode_reads(toks[:256], lens[:256])
-            prof.classify_batch(db, q).scores.block_until_ready()
+            q = prof.encode_reads(toks[:batch], lens[:batch])
+            prof.classify_batch(q, db).scores.block_until_ready()
 
             def job():
-                for bt, bl in batch_reads(toks, lens, 256):
-                    import jax.numpy as jnp
-                    q = prof.encode_reads(jnp.asarray(bt), jnp.asarray(bl))
-                    prof.classify_batch(db, q).scores.block_until_ready()
+                for b in ArraySource(toks, lens).batches(batch):
+                    q = prof.encode_reads(b.tokens, b.lengths)
+                    prof.classify_batch(q, db).scores.block_until_ready()
             secs, _ = common.timeit(job)
         else:
             prof.build(community.genomes)

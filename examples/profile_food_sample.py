@@ -2,7 +2,8 @@
 
 Writes a synthetic community to disk as FASTA/FASTQ, then runs the
 production profiling driver on the files — the full five-step pipeline
-with RefDB caching, exactly as a lab would use it.
+through a ProfilingSession with a named backend and fingerprint-keyed
+RefDB caching, exactly as a lab would use it.
 
     PYTHONPATH=src python examples/profile_food_sample.py
 """
@@ -10,15 +11,18 @@ with RefDB caching, exactly as a lab would use it.
 import pathlib
 import tempfile
 
-import numpy as np
-
+from repro.core import HDSpace
 from repro.genomics import fasta, synth
 from repro.launch import profile_run
-from repro.core import HDSpace
+from repro.pipeline import FastqSource, ProfilerConfig
 
 spec = synth.CommunitySpec(num_species=8, genome_len=40_000, seed=3)
 genomes, reads, lengths, truth, true_ab = synth.make_sample(
     spec, num_reads=1_000, present=[1, 4, 6])
+
+config = ProfilerConfig(
+    space=HDSpace(dim=8192, ngram=16, z_threshold=5.0),
+    window=4096, batch_size=256, backend="reference")
 
 with tempfile.TemporaryDirectory() as d:
     ref = pathlib.Path(d) / "ref.fasta"
@@ -27,10 +31,8 @@ with tempfile.TemporaryDirectory() as d:
     fasta.write_fastq(sample, reads, lengths)
 
     g = fasta.read_fasta(ref)
-    t, l = fasta.read_fastq(sample, spec.read_len)
     profile_run.profile(
-        g, t, l, space=HDSpace(dim=8192, ngram=16, z_threshold=5.0),
-        window=4096, batch_size=256, cache_dir=d)
+        g, FastqSource(sample, spec.read_len), config=config, cache_dir=d)
 
 print("\ntrue composition:")
 for i, name in enumerate(genomes):

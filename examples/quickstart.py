@@ -3,27 +3,28 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
-from repro.core import HDSpace, Demeter, batch_reads
+from repro.core import HDSpace
 from repro.genomics import synth
+from repro.pipeline import ProfilerConfig, ProfilingSession, SyntheticSource
 
-# 1. define the HD space (paper step 1)
-space = HDSpace(dim=4096, ngram=16, z_threshold=5.0)
+# 1. one frozen config: HD space (paper step 1), windowing, named backend
+config = ProfilerConfig(
+    space=HDSpace(dim=4096, ngram=16, z_threshold=5.0),
+    window=4096, batch_size=128, backend="reference")
 
-# 2. a tiny synthetic reference database + food sample
-spec = synth.CommunitySpec(num_species=6, genome_len=30_000)
-genomes, reads, lengths, truth, true_ab = synth.make_sample(
-    spec, num_reads=500, present=[0, 2, 4])
+# 2. a tiny synthetic reference database + food sample (with ground truth)
+sample = SyntheticSource(
+    synth.CommunitySpec(num_species=6, genome_len=30_000),
+    num_reads=500, present=[0, 2, 4])
 
 # 3. build the HD reference DB (step 2) and profile (steps 3-5)
-demeter = Demeter(space, window=4096)
-refdb = demeter.build_refdb(genomes)
-report = demeter.profile(refdb, batch_reads(reads, lengths, 128))
+session = ProfilingSession(config)
+refdb = session.build_refdb(sample.genomes)
+report = session.profile(sample)
 
 print(f"AM size: {refdb.memory_bytes() / 1e3:.0f} KB "
       f"({refdb.num_prototypes} prototypes)")
 print("estimated abundance vs truth:")
 for i, name in enumerate(report.species_names):
     print(f"  {name:14s} est {100 * report.abundance[i]:6.2f}%   "
-          f"true {100 * true_ab[i]:6.2f}%")
+          f"true {100 * sample.true_abundance[i]:6.2f}%")

@@ -3,22 +3,29 @@
 Five-step pipeline (paper Fig. 1):
   1. HD space        -> hd_space.HDSpace
   2. HD-RefDB build  -> assoc_memory.build_refdb
-  3. read conversion -> encoder.encode / profiler.Demeter.encode_reads
-  4. classification  -> classifier.classify
+  3. read conversion -> encoder.encode
+  4. classification  -> classifier.classify / classifier.from_agreement
   5. abundance       -> abundance.estimate
 
 Packed-bit substrate in bitops; the TPU-accelerated twins of encode and
 classify live in repro.kernels.
+
+These are the *algorithmic* building blocks.  The public entry point is
+the unified API in :mod:`repro.pipeline` — ``ProfilerConfig`` + the
+backend registry + ``ReadSource`` + ``ProfilingSession`` — which selects
+among the substrates by name (see docs/API.md).  ``Demeter`` and
+``batch_reads`` remain as deprecation shims over that API.
 """
 
 from repro.core.hd_space import HDSpace
 from repro.core.assoc_memory import RefDB, build_refdb
-from repro.core.classifier import ReadClassification, classify, UNMAPPED, UNIQUE, MULTI
+from repro.core.classifier import (ReadClassification, classify,
+                                   from_agreement, UNMAPPED, UNIQUE, MULTI)
 from repro.core.abundance import AbundanceResult, estimate
 from repro.core.profiler import Demeter, ProfileReport, batch_reads
 
 __all__ = [
     "HDSpace", "RefDB", "build_refdb", "ReadClassification", "classify",
-    "UNMAPPED", "UNIQUE", "MULTI", "AbundanceResult", "estimate",
-    "Demeter", "ProfileReport", "batch_reads",
+    "from_agreement", "UNMAPPED", "UNIQUE", "MULTI", "AbundanceResult",
+    "estimate", "Demeter", "ProfileReport", "batch_reads",
 ]

@@ -65,23 +65,31 @@ def window_tokens(tokens: np.ndarray, window: int, stride: int) -> np.ndarray:
 
 def build_refdb(genomes: dict[str, np.ndarray], space: HDSpace, *,
                 window: int = 8192, stride: int | None = None,
-                batch_size: int = 64) -> RefDB:
+                batch_size: int = 64, encode_fn=None) -> RefDB:
     """Demeter step 2: encode every reference genome into the AM.
 
     Windows are encoded in batches through the shared N-gram encoder; the
     host loop only orchestrates (all math is jit'd). One prototype per
     window, tagged with its species.
+
+    Args:
+      encode_fn: ``(tokens, lengths) -> (B, W)`` packed encoder; defaults
+        to the jit'd reference encoder.  Execution backends pass their own
+        so the RefDB is built on the same substrate that queries it.
     """
     stride = stride or window
-    im = item_memory.make_item_memory(space)
-    tie = item_memory.make_tie_break(space)
 
     all_protos: list[np.ndarray] = []
     all_species: list[np.ndarray] = []
     lengths = np.zeros(len(genomes), np.int32)
     names = tuple(genomes.keys())
 
-    encode = jax.jit(lambda t, l: encoder.encode(t, l, im, tie, space))
+    if encode_fn is None:
+        im = item_memory.make_item_memory(space)
+        tie = item_memory.make_tie_break(space)
+        encode = jax.jit(lambda t, l: encoder.encode(t, l, im, tie, space))
+    else:
+        encode = encode_fn
     for s, (name, toks) in enumerate(genomes.items()):
         lengths[s] = len(toks)
         wins, wlens = window_tokens(np.asarray(toks), window, stride)

@@ -36,30 +36,41 @@ class ReadClassification:
         return self.hits.sum(axis=-1)
 
 
+def from_agreement(agreement: jax.Array, proto_species: jax.Array,
+                   num_species: int, threshold_bits: float
+                   ) -> ReadClassification:
+    """Classify from a precomputed ``(R, S_protos)`` agreement matrix.
+
+    The substrate-independent tail of step 4: reduce per-prototype
+    agreement to per-species scores, threshold (paper Eq. 2), categorize.
+    Execution backends (:mod:`repro.pipeline.backend`) produce the
+    agreement matrix; this is shared by all of them.
+    """
+    scores = assoc_memory.species_scores(agreement, proto_species,
+                                         num_species)
+    hits = scores >= jnp.asarray(threshold_bits, scores.dtype)
+    n = hits.sum(axis=-1)
+    category = jnp.where(n == 0, UNMAPPED, jnp.where(n == 1, UNIQUE, MULTI))
+    return ReadClassification(hits=hits, scores=scores,
+                              category=category.astype(jnp.int32))
+
+
 def classify(queries: jax.Array, refdb: RefDB, space: HDSpace, *,
-             threshold_bits: float | None = None,
-             packed_path: bool = False) -> ReadClassification:
+             threshold_bits: float | None = None) -> ReadClassification:
     """Score query HD vectors against the AM and threshold (paper Eq. 2).
+
+    Uses the ±1 matmul agreement formulation; alternative substrates
+    (packed popcount, Pallas kernels) are selected by *name* through the
+    backend registry in :mod:`repro.pipeline.backend`, which routes their
+    agreement matrices through :func:`from_agreement`.
 
     Args:
       queries: ``(R, W)`` packed query HD vectors (Demeter step 3 output).
       refdb: the HD-RefDB.
       threshold_bits: absolute agreement threshold T; defaults to the HD
         space's z-score-derived threshold.
-      packed_path: use the XOR+popcount formulation instead of the +-1
-        matmul one (identical results; different roofline).
     """
     t = space.threshold_bits if threshold_bits is None else threshold_bits
-    if packed_path:
-        agree = assoc_memory.agreement_packed_chunked(
-            queries, refdb.prototypes, space.dim)
-    else:
-        agree = assoc_memory.agreement_matmul(
-            queries, refdb.prototypes, space.dim)
-    scores = assoc_memory.species_scores(
-        agree, refdb.proto_species, refdb.num_species)
-    hits = scores >= jnp.asarray(t, scores.dtype)
-    n = hits.sum(axis=-1)
-    category = jnp.where(n == 0, UNMAPPED, jnp.where(n == 1, UNIQUE, MULTI))
-    return ReadClassification(hits=hits, scores=scores,
-                              category=category.astype(jnp.int32))
+    agree = assoc_memory.agreement_matmul(queries, refdb.prototypes,
+                                          space.dim)
+    return from_agreement(agree, refdb.proto_species, refdb.num_species, t)

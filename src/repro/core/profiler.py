@@ -1,161 +1,110 @@
-"""The five-step Demeter pipeline (paper Fig. 1), orchestrated.
+"""Legacy profiler entry point — a deprecation shim over `repro.pipeline`.
 
-Step 1  define HD space            -> :class:`repro.core.hd_space.HDSpace`
-Step 2  build HD-RefDB             -> :func:`build_refdb`
-Step 3  read conversion            -> :meth:`Demeter.encode_reads`
-Step 4  multi-species classify     -> :meth:`Demeter.classify_batch`
-Step 5  abundance estimation       -> :meth:`Demeter.profile`
+The five-step Demeter pipeline is now driven through the unified API in
+:mod:`repro.pipeline`:
 
-Steps 3+4 stream batch-by-batch (the paper pipelines them in hardware; we
-rely on XLA async dispatch to overlap the encode of batch i+1 with the
-classification of batch i).  Step 5 is exact-streaming: unique counts
-accumulate online, multi-read hit masks are retained compactly and split
-once at the end with the *global* unique-coverage rates.
+  * :class:`repro.pipeline.ProfilerConfig` — one frozen record of the run
+    (HD space, windowing, batching, backend name).
+  * the backend registry — ``reference`` / ``reference_packed`` /
+    ``pallas_matmul`` / ``pallas_packed`` replace the old
+    ``use_kernels`` / ``packed_path`` boolean switches.
+  * :class:`repro.pipeline.ReadSource` — streaming read input, replacing
+    hand-rolled ``batch_reads`` loops.
+  * :class:`repro.pipeline.ProfilingSession` — the facade running
+    steps 2-5.
+
+:class:`Demeter` remains for existing callers and delegates everything to
+a :class:`~repro.pipeline.session.ProfilingSession`; it emits a
+``DeprecationWarning`` on construction.  ``ProfileReport`` is re-exported
+from its new home in :mod:`repro.pipeline.report`.  See ``docs/API.md``
+for the migration table.
 """
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Iterable, Iterator
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import abundance, assoc_memory, classifier, encoder, item_memory
-from repro.core.assoc_memory import RefDB, build_refdb
+from repro.core.assoc_memory import RefDB
 from repro.core.hd_space import HDSpace
-
-
-@dataclasses.dataclass(frozen=True)
-class ProfileReport:
-    """Final output of a profiling run."""
-    species_names: tuple[str, ...]
-    abundance: np.ndarray          # (S,) relative abundance over mapped reads
-    unique_counts: np.ndarray      # (S,)
-    multi_counts: np.ndarray       # (S,) fractional
-    total_reads: int
-    unmapped_reads: int
-    multi_reads: int
-
-    def top(self, k: int = 10) -> list[tuple[str, float]]:
-        order = np.argsort(-self.abundance)[:k]
-        return [(self.species_names[i], float(self.abundance[i])) for i in order]
+from repro.pipeline.report import ProfileReport  # noqa: F401  (re-export)
 
 
 class Demeter:
-    """Platform-independent Demeter profiler (the paper's framework).
+    """Deprecated facade; use :class:`repro.pipeline.ProfilingSession`.
 
-    The same object backs the pure-JAX CPU path, the Pallas TPU kernels
-    (``use_kernels=True`` routes encode/similarity through
-    ``repro.kernels.ops``) and the distributed pjit path
-    (``repro.launch.profile_run``).
+    The legacy boolean switches map onto named backends:
+
+      ``Demeter(space)``                        -> ``backend="reference"``
+      ``Demeter(space, packed_path=True)``      -> ``backend="reference_packed"``
+      ``Demeter(space, use_kernels=True)``      -> ``backend="pallas_matmul"``
     """
 
     def __init__(self, space: HDSpace, *, window: int = 8192,
                  stride: int | None = None, batch_size: int = 256,
                  packed_path: bool = False, use_kernels: bool = False):
-        self.space = space
-        self.window = window
-        self.stride = stride or window
-        self.batch_size = batch_size
-        self.packed_path = packed_path
-        self.use_kernels = use_kernels
-        self.im = item_memory.make_item_memory(space)
-        self.tie = item_memory.make_tie_break(space)
-        self._encode = jax.jit(self._encode_impl)
-        self._classify = jax.jit(self._classify_impl)
+        warnings.warn(
+            "Demeter is deprecated; use repro.pipeline.ProfilingSession with "
+            "a ProfilerConfig naming a backend (see docs/API.md)",
+            DeprecationWarning, stacklevel=2)
+        from repro.pipeline import ProfilerConfig, ProfilingSession
+        if use_kernels:
+            backend = "pallas_matmul"
+        elif packed_path:
+            backend = "reference_packed"
+        else:
+            backend = "reference"
+        self._session = ProfilingSession(ProfilerConfig(
+            space=space, window=window, stride=stride,
+            batch_size=batch_size, backend=backend))
+
+    @property
+    def space(self) -> HDSpace:
+        return self._session.space
+
+    @property
+    def window(self) -> int:
+        return self._session.config.window
+
+    @property
+    def stride(self) -> int:
+        return self._session.config.effective_stride
+
+    @property
+    def batch_size(self) -> int:
+        return self._session.config.batch_size
 
     # -- Step 2 ------------------------------------------------------------
     def build_refdb(self, genomes: dict[str, np.ndarray]) -> RefDB:
-        return build_refdb(genomes, self.space, window=self.window,
-                           stride=self.stride, batch_size=self.batch_size)
+        return self._session.build_refdb(genomes)
 
     # -- Step 3 ------------------------------------------------------------
-    def _encode_impl(self, tokens: jax.Array, lengths: jax.Array) -> jax.Array:
-        if self.use_kernels:
-            from repro.kernels import ops
-            return ops.hdc_encode(tokens, lengths, self.im, self.tie, self.space)
-        return encoder.encode(tokens, lengths, self.im, self.tie, self.space)
-
     def encode_reads(self, tokens: jax.Array, lengths: jax.Array) -> jax.Array:
         """Convert a read batch ``(B, L)`` into query HD vectors ``(B, W)``."""
-        return self._encode(tokens, lengths)
+        return self._session.encode_reads(tokens, lengths)
 
     # -- Step 4 ------------------------------------------------------------
-    def _classify_impl(self, queries: jax.Array, refdb: RefDB
-                       ) -> classifier.ReadClassification:
-        if self.use_kernels:
-            from repro.kernels import ops
-            agree = ops.am_agreement(queries, refdb.prototypes, self.space.dim)
-            scores = assoc_memory.species_scores(
-                agree, refdb.proto_species, refdb.num_species)
-            hits = scores >= jnp.asarray(self.space.threshold_bits, scores.dtype)
-            n = hits.sum(axis=-1)
-            cat = jnp.where(n == 0, classifier.UNMAPPED,
-                            jnp.where(n == 1, classifier.UNIQUE, classifier.MULTI))
-            return classifier.ReadClassification(
-                hits=hits, scores=scores, category=cat.astype(jnp.int32))
-        return classifier.classify(queries, refdb, self.space,
-                                   packed_path=self.packed_path)
-
-    def classify_batch(self, refdb: RefDB, queries: jax.Array
-                       ) -> classifier.ReadClassification:
-        return self._classify(queries, refdb)
+    def classify_batch(self, refdb: RefDB, queries: jax.Array):
+        return self._session.classify_batch(queries, refdb)
 
     # -- Steps 3+4+5 streamed ----------------------------------------------
     def profile(self, refdb: RefDB,
                 read_batches: Iterable[tuple[np.ndarray, np.ndarray]]
                 ) -> ProfileReport:
         """Profile a food sample given an iterator of (tokens, lengths) batches."""
-        s = refdb.num_species
-        unique_counts = np.zeros(s, np.int64)
-        multi_hit_rows: list[np.ndarray] = []
-        total = unmapped = multi_n = 0
-
-        for tokens, lengths in read_batches:
-            q = self.encode_reads(jnp.asarray(tokens), jnp.asarray(lengths))
-            res = self.classify_batch(refdb, q)
-            hits = np.asarray(res.hits)
-            cat = np.asarray(res.category)
-            total += len(cat)
-            unmapped += int((cat == classifier.UNMAPPED).sum())
-            uniq = hits[cat == classifier.UNIQUE]
-            if len(uniq):
-                unique_counts += uniq.sum(axis=0)
-            m = hits[cat == classifier.MULTI]
-            if len(m):
-                multi_hit_rows.append(np.packbits(m, axis=-1))
-                multi_n += len(m)
-
-        # Step 5 with global unique-coverage rates.
-        lens = np.maximum(np.asarray(refdb.genome_lengths, np.float64), 1.0)
-        rate = unique_counts / lens
-        multi_counts = np.zeros(s, np.float64)
-        for packed in multi_hit_rows:
-            m = np.unpackbits(packed, axis=-1, count=s).astype(bool)
-            w = m * rate[None, :]
-            mass = w.sum(axis=-1, keepdims=True)
-            uniform = m / np.maximum(m.sum(axis=-1, keepdims=True), 1)
-            w = np.where(mass > 0, w / np.maximum(mass, 1e-30), uniform)
-            multi_counts += w.sum(axis=0)
-
-        mapped = unique_counts + multi_counts
-        denom = max(mapped.sum(), 1e-30)
-        return ProfileReport(
-            species_names=refdb.species_names,
-            abundance=(mapped / denom).astype(np.float64),
-            unique_counts=unique_counts.astype(np.int64),
-            multi_counts=multi_counts,
-            total_reads=total,
-            unmapped_reads=unmapped,
-            multi_reads=multi_n,
-        )
+        return self._session.profile(read_batches, refdb=refdb)
 
 
 def batch_reads(tokens: np.ndarray, lengths: np.ndarray,
                 batch_size: int) -> Iterator[tuple[np.ndarray, np.ndarray]]:
-    """Yield fixed-size (padded) read batches from a read set."""
+    """Yield fixed-size (padded) read batches from a read set.
+
+    Deprecated alongside :class:`Demeter`: new code streams through a
+    :class:`repro.pipeline.ReadSource` instead.
+    """
     n = len(tokens)
     for i in range(0, n, batch_size):
         t, l = tokens[i:i + batch_size], lengths[i:i + batch_size]

@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import io
 import pathlib
+from typing import Iterator
 
 import numpy as np
 
@@ -40,23 +41,35 @@ def write_fasta(path: str | pathlib.Path, genomes: dict[str, np.ndarray],
                 f.write(seq[i:i + width] + "\n")
 
 
-def read_fastq(path: str | pathlib.Path, read_len: int
-               ) -> tuple[np.ndarray, np.ndarray]:
-    """FASTQ -> (tokens (R, read_len) padded/truncated, lengths (R,))."""
-    toks, lens = [], []
+def iter_fastq(path: str | pathlib.Path, read_len: int
+               ) -> "Iterator[tuple[np.ndarray, int]]":
+    """Lazily yield FASTQ records as (tokens (read_len,), length).
+
+    Sequences are truncated/zero-padded to ``read_len``.  The single
+    FASTQ-parsing loop: both the eager :func:`read_fastq` and the
+    streaming ``repro.pipeline.FastqSource`` consume it.
+    """
     with open(path) as f:
         while True:
             header = f.readline()
             if not header:
-                break
+                return
             seq = f.readline().strip()
             f.readline()  # '+'
             f.readline()  # quals
             t = alphabet.seq_to_tokens(seq)[:read_len]
             row = np.zeros(read_len, np.int32)
             row[:len(t)] = t
-            toks.append(row)
-            lens.append(len(t))
+            yield row, len(t)
+
+
+def read_fastq(path: str | pathlib.Path, read_len: int
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """FASTQ -> (tokens (R, read_len) padded/truncated, lengths (R,))."""
+    toks, lens = [], []
+    for row, n in iter_fastq(path, read_len):
+        toks.append(row)
+        lens.append(n)
     return (np.stack(toks) if toks else np.empty((0, read_len), np.int32),
             np.asarray(lens, np.int32))
 

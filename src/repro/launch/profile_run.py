@@ -1,55 +1,47 @@
 """End-to-end Demeter profiling driver (the paper's production entry point).
 
     python -m repro.launch.profile_run --ref ref.fasta --sample reads.fastq
-    python -m repro.launch.profile_run --synthetic     # no files needed
+    python -m repro.launch.profile_run --synthetic --backend pallas_matmul
 
-Runs the five-step pipeline: HD space (step 1, from flags), HD-RefDB build
-(step 2, cached by space fingerprint like the paper's config check),
-streamed read conversion + classification (steps 3-4), abundance (step 5).
+Runs the five-step pipeline through the unified API: one
+:class:`~repro.pipeline.config.ProfilerConfig` (step 1 from flags) drives
+a :class:`~repro.pipeline.session.ProfilingSession` — RefDB build or load
+(step 2, cached by the config's content fingerprint plus a genome digest,
+so neither a changed space/window/stride nor a swapped reference FASTA
+can reuse a stale database), streamed
+read conversion + classification (steps 3-4), abundance (step 5).
 """
 
 from __future__ import annotations
 
 import argparse
-import pathlib
-import pickle
 import time
 
-import numpy as np
-
-from repro.core import HDSpace, Demeter, batch_reads
+from repro.core import HDSpace
 from repro.eval import score_profile
 from repro.genomics import fasta, synth
+from repro.pipeline import (ArraySource, FastqSource, ProfilerConfig,
+                            ProfilingSession, ReadSource, available_backends)
 
 
-def profile(genomes: dict, tokens: np.ndarray, lengths: np.ndarray, *,
-            space: HDSpace, window: int, batch_size: int,
-            cache_dir: str | None, use_kernels: bool = False):
-    dm = Demeter(space, window=window, batch_size=batch_size,
-                 use_kernels=use_kernels)
+def profile(genomes: dict, source: ReadSource | tuple, *,
+            config: ProfilerConfig, cache_dir: str | None = None):
+    """Build-or-load the RefDB for ``config`` and profile ``source``."""
+    session = ProfilingSession(config)
 
-    db = None
-    cache = None
-    if cache_dir:
-        cache = (pathlib.Path(cache_dir)
-                 / f"refdb_{space.fingerprint()}_{window}.pkl")
-        if cache.exists():                       # paper's step-1 config check
-            db = pickle.loads(cache.read_bytes())
-            print(f"loaded HD-RefDB from {cache}")
     t0 = time.perf_counter()
-    if db is None:
-        db = dm.build_refdb(genomes)
-        if cache:
-            cache.parent.mkdir(parents=True, exist_ok=True)
-            cache.write_bytes(pickle.dumps(db))
+    db = session.build_or_load_refdb(genomes, cache_dir=cache_dir)
     t_build = time.perf_counter() - t0
+    if session.refdb_loaded_from_cache:
+        print(f"loaded HD-RefDB from {session.refdb_cache_file}")
 
     t0 = time.perf_counter()
-    rep = dm.profile(db, batch_reads(tokens, lengths, batch_size))
+    rep = session.profile(source)
     t_query = time.perf_counter() - t0
 
-    print(f"\nbuild {t_build:.2f}s | query {t_query:.2f}s "
-          f"({len(tokens) / max(t_query, 1e-9):.0f} reads/s) | "
+    print(f"\nbackend {config.backend} | build {t_build:.2f}s | "
+          f"query {t_query:.2f}s "
+          f"({rep.total_reads / max(t_query, 1e-9):.0f} reads/s) | "
           f"AM {db.memory_bytes() / 1e6:.2f} MB "
           f"({db.num_prototypes} prototypes)")
     print(f"reads: {rep.total_reads}  unmapped: {rep.unmapped_reads}  "
@@ -70,30 +62,35 @@ def main() -> None:
     ap.add_argument("--ngram", type=int, default=16)
     ap.add_argument("--z-threshold", type=float, default=5.0)
     ap.add_argument("--window", type=int, default=4096)
+    ap.add_argument("--stride", type=int, default=None,
+                    help="window stride (default: non-overlapping)")
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--read-len", type=int, default=150)
     ap.add_argument("--cache-dir", default=None)
-    ap.add_argument("--use-kernels", action="store_true",
-                    help="route through the Pallas kernels (interpret on CPU)")
+    ap.add_argument("--backend", default="reference",
+                    choices=available_backends(),
+                    help="execution backend (Pallas backends run in "
+                         "interpret mode on CPU)")
     args = ap.parse_args()
 
-    space = HDSpace(dim=args.dim, ngram=args.ngram,
-                    z_threshold=args.z_threshold)
+    config = ProfilerConfig(
+        space=HDSpace(dim=args.dim, ngram=args.ngram,
+                      z_threshold=args.z_threshold),
+        window=args.window, stride=args.stride,
+        batch_size=args.batch_size, backend=args.backend)
+
     if args.synthetic or not args.ref:
         spec = synth.CommunitySpec(num_species=10, genome_len=60_000)
         genomes, toks, lens, truth, true_ab = synth.make_sample(
             spec, num_reads=2_000)
-        rep = profile(genomes, toks, lens, space=space, window=args.window,
-                      batch_size=args.batch_size, cache_dir=args.cache_dir,
-                      use_kernels=args.use_kernels)
+        rep = profile(genomes, ArraySource(toks, lens), config=config,
+                      cache_dir=args.cache_dir)
         m = score_profile(rep.abundance, true_ab)
         print(f"\nvs ground truth: {m.row()}")
         return
     genomes = fasta.read_fasta(args.ref)
-    toks, lens = fasta.read_fastq(args.sample, args.read_len)
-    profile(genomes, toks, lens, space=space, window=args.window,
-            batch_size=args.batch_size, cache_dir=args.cache_dir,
-            use_kernels=args.use_kernels)
+    profile(genomes, FastqSource(args.sample, args.read_len),
+            config=config, cache_dir=args.cache_dir)
 
 
 if __name__ == "__main__":

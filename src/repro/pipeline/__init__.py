@@ -1,0 +1,37 @@
+"""The unified profiling API (the repo's public entry point).
+
+Three concepts compose every profiling run:
+
+  :class:`~repro.pipeline.config.ProfilerConfig`
+      one frozen, JSON-round-trippable record of the run (HD space,
+      windowing, batching, backend name); its content fingerprint plus a
+      genome digest forms the complete RefDB cache key.
+  :class:`~repro.pipeline.backend.Backend` (+ registry)
+      named, substrate-specific implementations of the two hot primitives
+      ``encode`` / ``agreement`` — ``reference``, ``reference_packed``,
+      ``pallas_matmul``, ``pallas_packed`` (all bit-exact twins).
+  :class:`~repro.pipeline.source.ReadSource`
+      streaming read input (FASTA/FASTQ file, synthetic community,
+      in-memory arrays) with host-side prefetch.
+
+:class:`~repro.pipeline.session.ProfilingSession` is the facade that ties
+them together; see ``docs/API.md`` for the full guide and the migration
+table from the legacy ``Demeter(...)`` flags.
+"""
+
+from repro.pipeline.report import ProfileAccumulator, ProfileReport
+from repro.pipeline.config import ProfilerConfig
+from repro.pipeline.backend import (Backend, available_backends,
+                                    register_backend, resolve_backend)
+from repro.pipeline.source import (ArraySource, FastqSource, IterableSource,
+                                   ReadBatch, ReadSource, SyntheticSource,
+                                   as_source, prefetch)
+from repro.pipeline.session import BatchResult, ProfilingSession
+
+__all__ = [
+    "ProfileAccumulator", "ProfileReport", "ProfilerConfig",
+    "Backend", "available_backends", "register_backend", "resolve_backend",
+    "ArraySource", "FastqSource", "IterableSource", "ReadBatch",
+    "ReadSource", "SyntheticSource", "as_source", "prefetch",
+    "BatchResult", "ProfilingSession",
+]

@@ -1,0 +1,172 @@
+"""Execution backends: named, registered implementations of the hot path.
+
+Demeter's platform-independence claim (paper §3) is that the same
+five-step algorithm runs on any substrate — software, Acc-Demeter's PCM
+crossbar, a TPU.  A :class:`Backend` is the seam where the substrate
+plugs in: it owns exactly the two bit-exact primitives that differ per
+platform,
+
+  ``encode(tokens, lengths) -> (B, W)``   packed query HD vectors (step 3)
+  ``agreement(queries, prototypes) -> (B, S)``  matching-bit counts (step 4)
+
+while everything around them (windowing, thresholding, species reduction,
+abundance) is substrate-independent and lives in ``repro.core`` /
+:mod:`repro.pipeline.session`.
+
+Backends are discovered by name through a registry::
+
+    session = ProfilingSession(ProfilerConfig(backend="pallas_matmul"))
+    available_backends()   # ("pallas_matmul", "pallas_packed", ...)
+
+Registered backends:
+
+  reference        pure-jnp encoder + ±1 matmul agreement (BLAS on CPU).
+  reference_packed pure-jnp encoder + packed XOR+popcount agreement.
+  pallas_matmul    Pallas encoder kernel + MXU ±1 matmul kernel.
+  pallas_packed    Pallas encoder kernel + VPU popcount kernel.
+
+All four are bit-exact twins (enforced by ``tests/test_pipeline.py``); a
+future ``sharded`` backend built on ``repro.distributed.sharding`` plugs
+into the same registry without touching any caller.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Protocol, runtime_checkable
+
+import jax
+
+from repro.core import assoc_memory, encoder, item_memory
+from repro.core.hd_space import HDSpace
+from repro.pipeline.config import ProfilerConfig
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """The two substrate-dependent primitives of the pipeline."""
+
+    name: str
+    space: HDSpace
+
+    def encode(self, tokens: jax.Array, lengths: jax.Array) -> jax.Array:
+        """Read conversion (step 3): ``(B, L)`` tokens -> ``(B, W)`` packed."""
+        ...
+
+    def agreement(self, queries: jax.Array, prototypes: jax.Array
+                  ) -> jax.Array:
+        """AM search (step 4): ``(B, W) x (S, W)`` -> ``(B, S)`` int32
+        matching-bit counts in ``[0, dim]``."""
+        ...
+
+
+BackendFactory = Callable[[ProfilerConfig], Backend]
+
+_REGISTRY: dict[str, BackendFactory] = {}
+
+
+def register_backend(name: str) -> Callable[[BackendFactory], BackendFactory]:
+    """Decorator: register a ``ProfilerConfig -> Backend`` factory by name."""
+    def deco(factory: BackendFactory) -> BackendFactory:
+        if name in _REGISTRY:
+            raise ValueError(f"backend {name!r} already registered")
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available_backends() -> tuple[str, ...]:
+    """Names of every registered backend, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend(name: str, config: ProfilerConfig) -> Backend:
+    """Instantiate the backend registered under ``name`` for ``config``."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {available_backends()}"
+        ) from None
+    return factory(config)
+
+
+class _BackendBase:
+    """Shared state: the per-space item memory and tie-break vector."""
+
+    name = "abstract"
+
+    def __init__(self, config: ProfilerConfig):
+        self.config = config
+        self.space = config.space
+        self.im = item_memory.make_item_memory(self.space)
+        self.tie = item_memory.make_tie_break(self.space)
+
+
+@register_backend("reference")
+class ReferenceBackend(_BackendBase):
+    """Pure-jnp software path: rolling-gram encoder + ±1 matmul agreement.
+
+    The numerical oracle every other backend must match bit-exactly.  On
+    CPU the agreement matmul maps to BLAS; on TPU XLA lowers it to the MXU.
+    """
+
+    name = "reference"
+
+    def __init__(self, config: ProfilerConfig):
+        super().__init__(config)
+        self._encode = jax.jit(
+            lambda t, l: encoder.encode(t, l, self.im, self.tie, self.space))
+        self._agreement = jax.jit(functools.partial(
+            assoc_memory.agreement_matmul, dim=self.space.dim))
+
+    def encode(self, tokens: jax.Array, lengths: jax.Array) -> jax.Array:
+        return self._encode(tokens, lengths)
+
+    def agreement(self, queries: jax.Array, prototypes: jax.Array
+                  ) -> jax.Array:
+        return self._agreement(queries, prototypes)
+
+
+@register_backend("reference_packed")
+class ReferencePackedBackend(ReferenceBackend):
+    """Software path with the bandwidth-optimal XOR+popcount agreement."""
+
+    name = "reference_packed"
+
+    def __init__(self, config: ProfilerConfig):
+        super().__init__(config)
+        self._agreement = jax.jit(functools.partial(
+            assoc_memory.agreement_packed_chunked, dim=self.space.dim))
+
+
+class _PallasBackendBase(_BackendBase):
+    """Pallas kernel path (interpret mode on CPU, real kernels on TPU)."""
+
+    formulation = "matmul"
+
+    def encode(self, tokens: jax.Array, lengths: jax.Array) -> jax.Array:
+        from repro.kernels import ops
+        return ops.hdc_encode(tokens, lengths, self.im, self.tie, self.space)
+
+    def agreement(self, queries: jax.Array, prototypes: jax.Array
+                  ) -> jax.Array:
+        from repro.kernels import ops
+        return ops.am_agreement(queries, prototypes, self.space.dim,
+                                self.formulation)
+
+
+@register_backend("pallas_matmul")
+class PallasMatmulBackend(_PallasBackendBase):
+    """Pallas encoder kernel + MXU ±1 matmul AM-search kernel."""
+
+    name = "pallas_matmul"
+    formulation = "matmul"
+
+
+@register_backend("pallas_packed")
+class PallasPackedBackend(_PallasBackendBase):
+    """Pallas encoder kernel + VPU packed-popcount AM-search kernel."""
+
+    name = "pallas_packed"
+    formulation = "packed"

@@ -1,0 +1,101 @@
+"""`ProfilerConfig`: the single frozen record of a profiling run's setup.
+
+One config names everything a run depends on — the HD space (step 1), the
+RefDB windowing (step 2), the batch shape of the streamed query path
+(steps 3-4), and the *backend* that executes encode/agreement.  It is a
+frozen dataclass in the style of :class:`repro.config.ModelConfig`:
+hashable (usable as a jit static argument) and JSON round-trippable.
+:meth:`~ProfilerConfig.fingerprint` covers every field (the config's
+identity); :meth:`~ProfilerConfig.refdb_fingerprint` covers exactly the
+fields that determine RefDB content, so two configs that could produce
+different prototypes can never collide on one cache entry (the session
+joins it with a digest of the reference genomes to form the full key).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+from repro.core.hd_space import HDSpace
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfilerConfig:
+    """Frozen configuration of a Demeter profiling run.
+
+    Attributes:
+      space: the HD space (step 1) — dimension, n-gram, threshold, seed.
+      window: reference-genome window length (one AM prototype per window).
+      stride: window stride; ``None`` means non-overlapping (= window).
+      batch_size: read batch size of the streamed query path.
+      backend: registered backend name executing encode/agreement
+        (see :mod:`repro.pipeline.backend`); validated at session
+        construction so configs may name backends registered later.
+    """
+
+    space: HDSpace = HDSpace()
+    window: int = 8192
+    stride: int | None = None
+    batch_size: int = 256
+    backend: str = "reference"
+
+    def __post_init__(self) -> None:
+        if self.window < 1:
+            raise ValueError("window must be >= 1")
+        if self.stride is not None and self.stride < 1:
+            raise ValueError("stride must be >= 1 (or None for = window)")
+        if self.batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        if not self.backend or not isinstance(self.backend, str):
+            raise ValueError("backend must be a non-empty backend name")
+
+    @property
+    def effective_stride(self) -> int:
+        """The stride actually used: ``stride`` or (if None) ``window``."""
+        return self.stride if self.stride is not None else self.window
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)  # recurses into the HDSpace field
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ProfilerConfig":
+        d = dict(d)
+        d["space"] = HDSpace(**d["space"])
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ProfilerConfig":
+        return cls.from_dict(json.loads(s))
+
+    # -- identity -----------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Stable hash over *every* field (the config's full identity).
+
+        ``stride`` is canonicalized to :attr:`effective_stride` first, so
+        ``stride=None`` and ``stride=window`` hash the same.
+        """
+        d = self.to_dict()
+        d["stride"] = self.effective_stride
+        payload = json.dumps(d, sort_keys=True)
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+    def refdb_fingerprint(self) -> str:
+        """Stable hash over the fields that determine RefDB *content*.
+
+        Covers space, window and canonicalized stride — everything that
+        can change the built prototypes (the old cache key ignored stride
+        and silently served wrong databases).  ``batch_size`` (a host
+        batching knob) and ``backend`` (bit-exact twins, enforced by the
+        parity tests) are deliberately excluded so tuning either reuses
+        the cached database instead of forcing a full rebuild.
+        """
+        d = {"space": dataclasses.asdict(self.space), "window": self.window,
+             "stride": self.effective_stride}
+        payload = json.dumps(d, sort_keys=True)
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]

@@ -1,0 +1,95 @@
+"""Profiling output: :class:`ProfileReport` and its streaming accumulator.
+
+Step 5 of the pipeline (abundance estimation) is exact-streaming: unique
+counts accumulate online, multi-read hit masks are retained compactly
+(packed bits) and split once at the end with the *global* unique-coverage
+rates.  :class:`ProfileAccumulator` owns that state so any driver — the
+:class:`~repro.pipeline.session.ProfilingSession` facade, a serving loop,
+a future sharded reducer — can feed it batch classifications and finalize
+once.
+
+This module is dependency-light (numpy only) on purpose: it is imported
+by both ``repro.core`` and ``repro.pipeline`` without creating a cycle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileReport:
+    """Final output of a profiling run."""
+    species_names: tuple[str, ...]
+    abundance: np.ndarray          # (S,) relative abundance over mapped reads
+    unique_counts: np.ndarray      # (S,)
+    multi_counts: np.ndarray       # (S,) fractional
+    total_reads: int
+    unmapped_reads: int
+    multi_reads: int
+
+    def top(self, k: int = 10) -> list[tuple[str, float]]:
+        order = np.argsort(-self.abundance)[:k]
+        return [(self.species_names[i], float(self.abundance[i])) for i in order]
+
+
+class ProfileAccumulator:
+    """Streaming abundance estimation (paper step 5) over read batches.
+
+    ``add`` ingests the per-read hit mask and category of one batch;
+    ``finalize`` performs the single end-of-stream pass that splits
+    multi-mapped reads with the global unique-coverage rates.
+    """
+
+    UNMAPPED, UNIQUE, MULTI = 0, 1, 2
+
+    def __init__(self, num_species: int):
+        self.num_species = num_species
+        self.unique_counts = np.zeros(num_species, np.int64)
+        self._multi_hit_rows: list[np.ndarray] = []
+        self.total_reads = 0
+        self.unmapped_reads = 0
+        self.multi_reads = 0
+
+    def add(self, hits: np.ndarray, category: np.ndarray) -> None:
+        """Ingest one batch: ``hits (R, S)`` bool, ``category (R,)`` int."""
+        hits = np.asarray(hits)
+        cat = np.asarray(category)
+        self.total_reads += len(cat)
+        self.unmapped_reads += int((cat == self.UNMAPPED).sum())
+        uniq = hits[cat == self.UNIQUE]
+        if len(uniq):
+            self.unique_counts += uniq.sum(axis=0)
+        m = hits[cat == self.MULTI]
+        if len(m):
+            self._multi_hit_rows.append(np.packbits(m, axis=-1))
+            self.multi_reads += len(m)
+
+    def finalize(self, genome_lengths: np.ndarray,
+                 species_names: tuple[str, ...]) -> ProfileReport:
+        """Split multi-mapped reads with the global unique rates and report."""
+        s = self.num_species
+        lens = np.maximum(np.asarray(genome_lengths, np.float64), 1.0)
+        rate = self.unique_counts / lens
+        multi_counts = np.zeros(s, np.float64)
+        for packed in self._multi_hit_rows:
+            m = np.unpackbits(packed, axis=-1, count=s).astype(bool)
+            w = m * rate[None, :]
+            mass = w.sum(axis=-1, keepdims=True)
+            uniform = m / np.maximum(m.sum(axis=-1, keepdims=True), 1)
+            w = np.where(mass > 0, w / np.maximum(mass, 1e-30), uniform)
+            multi_counts += w.sum(axis=0)
+
+        mapped = self.unique_counts + multi_counts
+        denom = max(mapped.sum(), 1e-30)
+        return ProfileReport(
+            species_names=tuple(species_names),
+            abundance=(mapped / denom).astype(np.float64),
+            unique_counts=self.unique_counts.astype(np.int64),
+            multi_counts=multi_counts,
+            total_reads=self.total_reads,
+            unmapped_reads=self.unmapped_reads,
+            multi_reads=self.multi_reads,
+        )

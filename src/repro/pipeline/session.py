@@ -1,0 +1,171 @@
+"""`ProfilingSession`: the facade over the five-step Demeter pipeline.
+
+One session binds a :class:`~repro.pipeline.config.ProfilerConfig` to a
+resolved :class:`~repro.pipeline.backend.Backend` and drives the whole
+pipeline::
+
+    config = ProfilerConfig(space=HDSpace(dim=8192), window=4096,
+                            backend="pallas_matmul")
+    session = ProfilingSession(config)
+    session.build_or_load_refdb(genomes, cache_dir="cache/")
+    report = session.profile(FastqSource("sample.fastq"))
+
+The query path streams batch-by-batch (the paper pipelines steps 3 and 4
+in hardware; here host prefetch plus XLA async dispatch overlap the
+encode of batch i+1 with the classification of batch i).  A per-batch
+callback hook exposes the raw classifications for serving integration
+(incremental responses, monitoring) without buffering the stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import pickle
+import pathlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assoc_memory, classifier
+from repro.core.assoc_memory import RefDB
+from repro.pipeline.backend import Backend, resolve_backend
+from repro.pipeline.config import ProfilerConfig
+from repro.pipeline.report import ProfileAccumulator, ProfileReport
+from repro.pipeline.source import as_source, prefetch
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchResult:
+    """What the per-batch callback sees: one classified read batch."""
+    index: int
+    queries: jax.Array                                  # (B, W) packed
+    classification: classifier.ReadClassification      # over all B rows
+    num_valid: int                                      # real rows (<= B)
+
+
+BatchCallback = Callable[[BatchResult], None]
+
+
+class ProfilingSession:
+    """Facade binding a config + backend + (optionally cached) RefDB."""
+
+    def __init__(self, config: ProfilerConfig):
+        self.config = config
+        self.space = config.space
+        self.backend: Backend = resolve_backend(config.backend, config)
+        self.refdb: RefDB | None = None
+        self.refdb_loaded_from_cache = False
+        self.refdb_cache_file: pathlib.Path | None = None
+        self._classify = jax.jit(self._classify_impl)
+
+    # -- Step 2 ------------------------------------------------------------
+    def build_refdb(self, genomes: dict[str, np.ndarray]) -> RefDB:
+        """Encode the reference genomes into the AM through the backend."""
+        self.refdb = assoc_memory.build_refdb(
+            genomes, self.space, window=self.config.window,
+            stride=self.config.effective_stride,
+            batch_size=self.config.batch_size,
+            encode_fn=self.backend.encode)
+        self.refdb_loaded_from_cache = False
+        return self.refdb
+
+    def refdb_cache_path(self, cache_dir: str | pathlib.Path,
+                         genomes: dict[str, np.ndarray]) -> pathlib.Path:
+        """Cache location keyed by every input that determines RefDB
+        content: the config's RefDB fingerprint (space/window/stride) plus
+        a digest of the reference genomes themselves."""
+        key = f"{self.config.refdb_fingerprint()}_{_genomes_digest(genomes)}"
+        return pathlib.Path(cache_dir) / f"refdb_{key}.pkl"
+
+    def build_or_load_refdb(self, genomes: dict[str, np.ndarray], *,
+                            cache_dir: str | pathlib.Path | None = None
+                            ) -> RefDB:
+        """Load the RefDB from the content-keyed cache, or build and cache it.
+
+        The key covers every input that can change the built prototypes —
+        space, window, stride, and the reference genomes (names + token
+        content) — so neither a config change nor a swapped reference
+        database can silently reuse a stale cache entry (the paper's
+        step-1 config check).  ``batch_size``/``backend`` are excluded:
+        they cannot affect the prototypes (backends are bit-exact twins),
+        so tuning them reuses the cache instead of rebuilding.
+        """
+        if cache_dir is None:
+            return self.build_refdb(genomes)
+        cache = self.refdb_cache_path(cache_dir, genomes)
+        self.refdb_cache_file = cache
+        if cache.exists():
+            self.refdb = pickle.loads(cache.read_bytes())
+            self.refdb_loaded_from_cache = True
+            return self.refdb
+        db = self.build_refdb(genomes)
+        cache.parent.mkdir(parents=True, exist_ok=True)
+        cache.write_bytes(pickle.dumps(db))
+        return db
+
+    # -- Step 3 ------------------------------------------------------------
+    def encode_reads(self, tokens, lengths) -> jax.Array:
+        """Convert a read batch ``(B, L)`` into query HD vectors ``(B, W)``."""
+        return self.backend.encode(jnp.asarray(tokens), jnp.asarray(lengths))
+
+    # -- Step 4 ------------------------------------------------------------
+    def _classify_impl(self, queries: jax.Array, refdb: RefDB
+                       ) -> classifier.ReadClassification:
+        agree = self.backend.agreement(queries, refdb.prototypes)
+        return classifier.from_agreement(
+            agree, refdb.proto_species, refdb.num_species,
+            self.space.threshold_bits)
+
+    def classify_batch(self, queries: jax.Array, refdb: RefDB | None = None
+                       ) -> classifier.ReadClassification:
+        return self._classify(queries, self._require_refdb(refdb))
+
+    # -- Steps 3+4+5 streamed ----------------------------------------------
+    def profile(self, source, *, refdb: RefDB | None = None,
+                on_batch: BatchCallback | None = None,
+                prefetch_depth: int = 2) -> ProfileReport:
+        """Profile a sample: stream, encode, classify, estimate abundance.
+
+        Args:
+          source: a :class:`~repro.pipeline.source.ReadSource`, a
+            ``(tokens, lengths)`` array pair, or an iterable of pre-batched
+            pairs (legacy contract).
+          refdb: database to query; defaults to the session's own.
+          on_batch: optional hook called with a :class:`BatchResult` per
+            batch — the serving integration point.
+          prefetch_depth: host-side read-batch prefetch depth (0 disables).
+        """
+        db = self._require_refdb(refdb)
+        acc = ProfileAccumulator(db.num_species)
+        stream = prefetch(as_source(source).batches(self.config.batch_size),
+                          prefetch_depth)
+        for i, batch in enumerate(stream):
+            q = self.encode_reads(batch.tokens, batch.lengths)
+            res = self.classify_batch(q, db)
+            n = batch.num_valid
+            acc.add(np.asarray(res.hits)[:n], np.asarray(res.category)[:n])
+            if on_batch is not None:
+                on_batch(BatchResult(index=i, queries=q, classification=res,
+                                     num_valid=n))
+        return acc.finalize(np.asarray(db.genome_lengths), db.species_names)
+
+    # ----------------------------------------------------------------------
+    def _require_refdb(self, refdb: RefDB | None) -> RefDB:
+        db = refdb if refdb is not None else self.refdb
+        if db is None:
+            raise RuntimeError(
+                "no RefDB: call build_or_load_refdb()/build_refdb() first "
+                "or pass refdb= explicitly")
+        return db
+
+
+def _genomes_digest(genomes: dict[str, np.ndarray]) -> str:
+    """Stable hash of the reference database content (names + tokens)."""
+    h = hashlib.sha256()
+    for name, toks in genomes.items():
+        h.update(name.encode())
+        h.update(np.ascontiguousarray(toks, dtype=np.int32).tobytes())
+    return h.hexdigest()[:16]

@@ -74,22 +74,24 @@ def test_encoder_kernel_batch_padding():
 
 
 def test_kernel_profiler_integration():
-    """Demeter(use_kernels=True) == Demeter(use_kernels=False)."""
-    from repro.core import Demeter
+    """The pallas_matmul backend == the reference backend end-to-end."""
+    from repro.pipeline import ProfilerConfig, ProfilingSession
     sp = HDSpace(dim=512, ngram=5, z_threshold=3.0)
     rng = np.random.default_rng(0)
     genomes = {f"s{i}": rng.integers(0, 4, 3000).astype(np.int32)
                for i in range(3)}
-    d0 = Demeter(sp, window=1024, batch_size=16)
-    d1 = Demeter(sp, window=1024, batch_size=16, use_kernels=True)
-    db0, db1 = d0.build_refdb(genomes), d1.build_refdb(genomes)
+    s0 = ProfilingSession(ProfilerConfig(
+        space=sp, window=1024, batch_size=16, backend="reference"))
+    s1 = ProfilingSession(ProfilerConfig(
+        space=sp, window=1024, batch_size=16, backend="pallas_matmul"))
+    db0, db1 = s0.build_refdb(genomes), s1.build_refdb(genomes)
     np.testing.assert_array_equal(np.asarray(db0.prototypes),
                                   np.asarray(db1.prototypes))
     toks = rng.integers(0, 4, (16, 60)).astype(np.int32)
     lens = np.full(16, 60, np.int32)
-    q0 = d0.encode_reads(jnp.asarray(toks), jnp.asarray(lens))
-    q1 = d1.encode_reads(jnp.asarray(toks), jnp.asarray(lens))
+    q0 = s0.encode_reads(toks, lens)
+    q1 = s1.encode_reads(toks, lens)
     np.testing.assert_array_equal(np.asarray(q0), np.asarray(q1))
-    r0 = d0.classify_batch(db0, q0)
-    r1 = d1.classify_batch(db1, q1)
+    r0 = s0.classify_batch(q0, db0)
+    r1 = s1.classify_batch(q1, db1)
     np.testing.assert_array_equal(np.asarray(r0.scores), np.asarray(r1.scores))

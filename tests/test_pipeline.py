@@ -1,0 +1,325 @@
+"""Unified profiling API: backend registry parity, ProfilerConfig identity
+and serialization, ReadSource streaming, the ProfilingSession facade, and
+the legacy Demeter shim."""
+
+import dataclasses
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core.hd_space import HDSpace
+from repro.genomics import fasta, synth
+from repro.pipeline import (ArraySource, FastqSource, IterableSource,
+                            ProfilerConfig, ProfilingSession, SyntheticSource,
+                            as_source, available_backends, prefetch,
+                            resolve_backend)
+
+SP = HDSpace(dim=512, ngram=5, z_threshold=3.0)
+SPEC = synth.CommunitySpec(num_species=4, genome_len=6_000, seed=11)
+
+
+def _config(**kw):
+    kw.setdefault("space", SP)
+    kw.setdefault("window", 1024)
+    kw.setdefault("batch_size", 16)
+    return ProfilerConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def sample():
+    return SyntheticSource(SPEC, num_reads=96, present=[0, 2])
+
+
+# -- backend registry ------------------------------------------------------
+
+def test_registry_names():
+    assert {"reference", "reference_packed", "pallas_matmul",
+            "pallas_packed"} <= set(available_backends())
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown backend"):
+        ProfilingSession(_config(backend="no_such_backend"))
+
+
+def test_backend_parity_encode_and_agreement(sample):
+    """Every registered backend matches the reference bit-exactly."""
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 4, (16, 60)).astype(np.int32)
+    lens = np.full(16, 60, np.int32)
+    ref = resolve_backend("reference", _config())
+    q_ref = np.asarray(ref.encode(toks, lens))
+    protos = q_ref[:7]  # any packed (S, W) array works as prototypes
+    a_ref = np.asarray(ref.agreement(q_ref, protos))
+    for name in available_backends():
+        be = resolve_backend(name, _config(backend=name))
+        np.testing.assert_array_equal(
+            np.asarray(be.encode(toks, lens)), q_ref, err_msg=name)
+        np.testing.assert_array_equal(
+            np.asarray(be.agreement(q_ref, protos)), a_ref, err_msg=name)
+
+
+def test_profile_report_is_backend_invariant(sample):
+    """Swapping the backend changes no ProfileReport field (acceptance)."""
+    reports = {}
+    for name in available_backends():
+        s = ProfilingSession(_config(backend=name))
+        s.build_refdb(sample.genomes)
+        reports[name] = s.profile(sample)
+    ref = reports["reference"]
+    for name, rep in reports.items():
+        for f in dataclasses.fields(rep):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(rep, f.name)),
+                np.asarray(getattr(ref, f.name)),
+                err_msg=f"{name}.{f.name}")
+
+
+# -- ProfilerConfig --------------------------------------------------------
+
+def test_config_json_roundtrip():
+    cfg = _config(stride=512, backend="pallas_packed")
+    back = ProfilerConfig.from_json(cfg.to_json())
+    assert back == cfg
+    assert hash(back) == hash(cfg)          # frozen => jit-static usable
+    assert back.fingerprint() == cfg.fingerprint()
+
+
+def test_fingerprint_covers_every_field():
+    base = _config()
+    assert _config(stride=512).fingerprint() != base.fingerprint()
+    assert _config(window=2048).fingerprint() != base.fingerprint()
+    assert _config(batch_size=8).fingerprint() != base.fingerprint()
+    assert _config(backend="pallas_matmul").fingerprint() != base.fingerprint()
+    assert _config(space=HDSpace(dim=1024, ngram=5)).fingerprint() \
+        != base.fingerprint()
+    # stride=None is canonically stride=window: same database, same key
+    assert _config(stride=1024).fingerprint() == base.fingerprint()
+
+
+def test_refdb_fingerprint_covers_content_fields_only():
+    """Cache key part: content fields change it, host/backend knobs don't."""
+    base = _config()
+    assert _config(stride=512).refdb_fingerprint() != base.refdb_fingerprint()
+    assert _config(window=2048).refdb_fingerprint() != base.refdb_fingerprint()
+    assert _config(space=HDSpace(dim=1024, ngram=5)).refdb_fingerprint() \
+        != base.refdb_fingerprint()
+    # batch_size and backend cannot change the prototypes (bit-exact twins)
+    assert _config(batch_size=8).refdb_fingerprint() == base.refdb_fingerprint()
+    assert _config(backend="pallas_matmul").refdb_fingerprint() \
+        == base.refdb_fingerprint()
+
+
+def test_cache_reused_across_backends(tmp_path, sample):
+    """Switching to a bit-exact backend must hit, not rebuild, the cache."""
+    s1 = ProfilingSession(_config())
+    s1.build_or_load_refdb(sample.genomes, cache_dir=tmp_path)
+    s2 = ProfilingSession(_config(backend="pallas_matmul", batch_size=32))
+    db = s2.build_or_load_refdb(sample.genomes, cache_dir=tmp_path)
+    assert s2.refdb_loaded_from_cache
+    assert len(list(tmp_path.glob("refdb_*.pkl"))) == 1
+    np.testing.assert_array_equal(np.asarray(db.prototypes),
+                                  np.asarray(s1.refdb.prototypes))
+
+
+def test_accumulator_categories_match_classifier():
+    """ProfileAccumulator rebinds the category encoding (import cycle keeps
+    it from importing classifier); this pins the two definitions together."""
+    from repro.core import classifier
+    from repro.pipeline import ProfileAccumulator
+    assert (ProfileAccumulator.UNMAPPED, ProfileAccumulator.UNIQUE,
+            ProfileAccumulator.MULTI) == (classifier.UNMAPPED,
+                                          classifier.UNIQUE, classifier.MULTI)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        _config(window=0)
+    with pytest.raises(ValueError):
+        _config(stride=0)
+    with pytest.raises(ValueError):
+        _config(batch_size=0)
+    with pytest.raises(ValueError):
+        _config(backend="")
+
+
+def test_stride_gets_distinct_cache_entries(tmp_path, sample):
+    """The stale-cache bug: configs differing only in stride must not
+    share a RefDB cache entry."""
+    s1 = ProfilingSession(_config())
+    s2 = ProfilingSession(_config(stride=512))
+    db1 = s1.build_or_load_refdb(sample.genomes, cache_dir=tmp_path)
+    db2 = s2.build_or_load_refdb(sample.genomes, cache_dir=tmp_path)
+    assert s1.refdb_cache_path(tmp_path, sample.genomes) \
+        != s2.refdb_cache_path(tmp_path, sample.genomes)
+    assert len(list(tmp_path.glob("refdb_*.pkl"))) == 2
+    # overlapping stride really does build a different database
+    assert db2.num_prototypes > db1.num_prototypes
+    # and the second call with an equal config loads from cache, bit-exact
+    s3 = ProfilingSession(_config(stride=512))
+    db3 = s3.build_or_load_refdb(sample.genomes, cache_dir=tmp_path)
+    assert s3.refdb_loaded_from_cache
+    np.testing.assert_array_equal(np.asarray(db3.prototypes),
+                                  np.asarray(db2.prototypes))
+
+
+def test_cache_key_covers_genome_content(tmp_path, sample):
+    """Same config + different reference genomes must not share a cache
+    entry (the config fingerprint alone cannot see the genomes)."""
+    s = ProfilingSession(_config())
+    s.build_or_load_refdb(sample.genomes, cache_dir=tmp_path)
+    other = {k: v.copy() for k, v in sample.genomes.items()}
+    next(iter(other.values()))[0] += 1  # one mutated base
+    assert s.refdb_cache_path(tmp_path, sample.genomes) \
+        != s.refdb_cache_path(tmp_path, other)
+    s2 = ProfilingSession(_config())
+    s2.build_or_load_refdb(other, cache_dir=tmp_path)
+    assert not s2.refdb_loaded_from_cache
+    assert len(list(tmp_path.glob("refdb_*.pkl"))) == 2
+
+
+# -- ReadSource ------------------------------------------------------------
+
+def test_array_source_pads_tail():
+    toks = np.arange(10 * 4, dtype=np.int32).reshape(10, 4)
+    lens = np.full(10, 4, np.int32)
+    batches = list(ArraySource(toks, lens).batches(4))
+    assert [b.num_valid for b in batches] == [4, 4, 2]
+    assert all(b.tokens.shape == (4, 4) for b in batches)
+    assert batches[-1].lengths[2:].sum() == 0
+    np.testing.assert_array_equal(
+        np.concatenate([b.tokens[:b.num_valid] for b in batches]), toks)
+
+
+def test_fastq_source_streams_file(tmp_path, sample):
+    path = tmp_path / "reads.fastq"
+    fasta.write_fastq(path, sample.tokens, sample.lengths)
+    got = list(FastqSource(path, SPEC.read_len).batches(20))
+    want = list(ArraySource(sample.tokens, sample.lengths).batches(20))
+    assert [b.num_valid for b in got] == [b.num_valid for b in want]
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.tokens, w.tokens)
+        np.testing.assert_array_equal(g.lengths, w.lengths)
+
+
+def test_as_source_coercions(sample):
+    assert as_source(sample) is sample
+    toks, lens = sample.tokens, sample.lengths
+    assert isinstance(as_source((toks, lens)), ArraySource)
+    it = as_source(iter([(toks[:8], lens[:8])]))
+    assert isinstance(it, IterableSource)
+    (batch,) = list(it.batches(999))
+    assert batch.num_valid == 8          # pre-batched: size passes through
+    with pytest.raises(TypeError):
+        as_source(42)
+
+
+def test_as_source_accepts_jax_and_list_pairs(sample):
+    import jax.numpy as jnp
+    toks, lens = sample.tokens[:8], sample.lengths[:8]
+    src = as_source((jnp.asarray(toks), jnp.asarray(lens)))
+    assert isinstance(src, ArraySource)
+    np.testing.assert_array_equal(src.tokens, toks)
+    src2 = as_source((toks.tolist(), lens.tolist()))
+    assert isinstance(src2, ArraySource)
+    with pytest.raises(TypeError, match="pre-batched"):
+        as_source((toks, toks))          # (R, L) lengths: not a valid pair
+
+
+def test_prefetch_preserves_order_and_errors():
+    assert list(prefetch(iter(range(50)), depth=4)) == list(range(50))
+    assert list(prefetch(iter(range(5)), depth=0)) == list(range(5))
+
+    def boom():
+        yield 1
+        raise RuntimeError("producer failed")
+
+    out = prefetch(boom(), depth=2)
+    assert next(out) == 1
+    with pytest.raises(RuntimeError, match="producer failed"):
+        list(out)
+
+
+def test_prefetch_releases_producer_when_abandoned():
+    """Abandoning the stream mid-profile must not leave the producer
+    thread blocked on the full queue (or its file handle open)."""
+    import threading
+    import time
+
+    closed = []
+
+    def endless():
+        try:
+            i = 0
+            while True:
+                yield i
+                i += 1
+        finally:
+            closed.append(True)
+
+    before = threading.active_count()
+    out = prefetch(endless(), depth=1)
+    assert next(out) == 0
+    out.close()                          # consumer walks away
+    deadline = time.monotonic() + 5.0
+    while (threading.active_count() > before or not closed) \
+            and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() <= before
+    assert closed == [True]              # source iterator was closed too
+
+
+# -- ProfilingSession ------------------------------------------------------
+
+def test_session_requires_refdb(sample):
+    s = ProfilingSession(_config())
+    with pytest.raises(RuntimeError, match="no RefDB"):
+        s.profile(sample)
+
+
+def test_on_batch_callback_sees_every_batch(sample):
+    s = ProfilingSession(_config())
+    s.build_refdb(sample.genomes)
+    seen = []
+    rep = s.profile(sample, on_batch=lambda b: seen.append(b))
+    assert [b.index for b in seen] == list(range(6))
+    assert [b.num_valid for b in seen] == [16] * 6
+    assert seen[0].queries.shape[0] == 16
+    assert sum(b.num_valid for b in seen) == rep.total_reads == 96
+
+
+def test_refdb_pickle_roundtrip_queries_identically(sample, tmp_path):
+    s = ProfilingSession(_config())
+    db = s.build_refdb(sample.genomes)
+    db2 = pickle.loads(pickle.dumps(db))
+    r1 = s.profile(sample, refdb=db)
+    r2 = s.profile(sample, refdb=db2)
+    np.testing.assert_array_equal(r1.abundance, r2.abundance)
+
+
+# -- legacy shim -----------------------------------------------------------
+
+def test_demeter_shim_warns_and_matches_session(sample):
+    from repro.core import Demeter, batch_reads
+    with pytest.warns(DeprecationWarning, match="ProfilingSession"):
+        dm = Demeter(SP, window=1024, batch_size=16)
+    db = dm.build_refdb(sample.genomes)
+    legacy = dm.profile(db, batch_reads(sample.tokens, sample.lengths, 16))
+
+    s = ProfilingSession(_config())
+    rep = s.profile(sample, refdb=db)
+    np.testing.assert_array_equal(legacy.abundance, rep.abundance)
+    np.testing.assert_array_equal(legacy.unique_counts, rep.unique_counts)
+
+
+def test_demeter_shim_kernel_flags_map_to_backends():
+    with pytest.warns(DeprecationWarning):
+        assert Demeter_backend(use_kernels=True) == "pallas_matmul"
+        assert Demeter_backend(packed_path=True) == "reference_packed"
+        assert Demeter_backend() == "reference"
+
+
+def Demeter_backend(**kw):
+    from repro.core import Demeter
+    return Demeter(SP, window=1024, **kw)._session.config.backend
