@@ -1,0 +1,111 @@
+"""Acc-Demeter device-model benchmark: accuracy-vs-noise + Table 3 costs.
+
+Two artifacts, both through the simulated PCM substrate in ``repro.accel``:
+
+1. **Noise sweep** (Karunaratne-style robustness curve): the AFS-analogue
+   sample profiled through the ``pcm_sim`` backend while stepping read
+   noise (and, in full mode, programming noise), emitting
+   precision/recall/L1/unmapped at every level.  Level 0 doubles as the
+   zero-noise bit-exactness check: its metrics equal the digital
+   reference's by construction.
+2. **Cost model** (Table 3 analogue): the analytical 65nm/PCM
+   latency/energy/area breakdown of the same AM at the production HD
+   dimension, including the paper's headline Mbp/J metric.
+
+``--smoke`` shrinks the community and sweep so CI can run this end to
+end in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from benchmarks import common
+from repro.accel import CrossbarConfig, accel_cost, noise_sweep
+from repro.core import HDSpace
+from repro.genomics import synth
+from repro.pipeline import ProfilerConfig, ProfilingSession
+
+READ_LEN = 150
+
+SMOKE_SPACE = HDSpace(dim=512, ngram=8, z_threshold=3.0)
+SMOKE_CONFIG = ProfilerConfig(space=SMOKE_SPACE, window=1024, batch_size=64,
+                              backend="pcm_sim")
+
+
+def _smoke_workload():
+    """Tiny synthetic community: seconds on CPU, exercises every path."""
+    spec = synth.CommunitySpec(num_species=4, genome_len=8_000, seed=13)
+    genomes = synth.make_reference_genomes(spec)
+    ab = np.array([0.5, 0.0, 0.5, 0.0])
+    toks, lens, _ = synth.sample_reads(genomes, ab, 200, spec)
+    return genomes, toks, lens, ab
+
+
+def run(community=None, emit=common.emit, *, smoke: bool = False) -> dict:
+    if smoke:
+        genomes, toks, lens, true_ab = _smoke_workload()
+        config = SMOKE_CONFIG
+        sweeps = {"read_sigma": (0.0, 0.1)}
+    else:
+        community = community or common.afs_small()
+        genomes = community.genomes
+        toks, lens, _, true_ab = community.samples["kylo"]
+        config = ProfilerConfig(space=common.BENCH_SPACE, window=4096,
+                                batch_size=256, backend="pcm_sim")
+        sweeps = {"read_sigma": (0.0, 0.02, 0.05, 0.1, 0.2),
+                  "prog_sigma": (0.0, 0.05, 0.1, 0.2)}
+
+    # -- 1. accuracy vs device non-ideality --------------------------------
+    # One digital build shared by every knob and level (encode is
+    # bit-exact across backends, so the prototypes never change).
+    builder = ProfilingSession(dataclasses.replace(config,
+                                                   backend="reference"))
+    refdb = builder.build_refdb(genomes)
+
+    results: dict = {}
+    for knob, levels in sweeps.items():
+        points = noise_sweep(genomes, toks, lens, true_ab, config=config,
+                             knob=knob, levels=levels, refdb=refdb)
+        results[knob] = points
+        for p in points:
+            tag = f"accel.sweep.{knob}_{p.value:g}"
+            emit(f"{tag}.precision", p.metrics.precision,
+                 f"recall={p.metrics.recall:.4f}")
+            emit(f"{tag}.l1", p.metrics.l1_error,
+                 f"unmapped={p.unmapped_frac:.4f}")
+
+    # -- 2. Table-3-style analytical cost at the production design point ---
+    window = 8192
+    num_protos = int(sum(-(-len(g) // window) for g in genomes.values()))
+    sp = common.PROD_SPACE
+    cost = accel_cost(num_protos=num_protos, dim=sp.dim, read_len=READ_LEN,
+                      ngram=sp.ngram, xcfg=CrossbarConfig())
+    for name, pj, pct in cost.energy_rows():
+        emit(f"accel.energy.{name}.pj_per_read", pj, f"{pct:.1f}%")
+    emit("accel.energy.total.pj_per_read", cost.total_pj,
+         f"program_once={cost.program_pj:.0f}pJ")
+    emit("accel.energy.total.mbp_per_joule", cost.mbp_per_joule(READ_LEN),
+         "paper:9.45Mbp/J(PCM)")
+    emit("accel.latency.ns_per_read", cost.latency_ns,
+         f"{cost.reads_per_s:.0f}reads/s")
+    emit("accel.area.total_mm2", cost.total_area_mm2,
+         f"arrays={cost.num_arrays}")
+    results["cost"] = cost
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny community + short sweep (CI-sized)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

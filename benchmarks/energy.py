@@ -33,11 +33,12 @@ def run(community=None, emit=common.emit, *, read_len: int = 150) -> dict:
 
     for name, e in (("encoder", e_encoder), ("am_search", e_search),
                     ("io", e_io)):
-        emit(f"energy.{name}.pj_per_read", 0.0,
-             f"{e:.0f}pJ;{100 * e / total_pj:.1f}%")
+        emit(f"energy.{name}.pj_per_read", e,
+             f"{100 * e / total_pj:.1f}%")
+    emit("energy.total.pj_per_read", total_pj, "digital-model")
     mbp_per_joule = read_len / (total_pj * 1e-12) / 1e6
-    emit("energy.total.mbp_per_joule", 0.0, f"{mbp_per_joule:.2f}")
-    emit("energy.paper_reference", 0.0,
+    emit("energy.total.mbp_per_joule", mbp_per_joule, f"{mbp_per_joule:.2f}")
+    emit("energy.paper_reference", 9.45,
          "paper:9.45Mbp/J(PCM);kraken2:<=0.6Mbp/J")
     return {"encoder_pj": e_encoder, "search_pj": e_search, "io_pj": e_io,
             "mbp_per_joule": mbp_per_joule}

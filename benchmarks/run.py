@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV (see benchmarks.common.emit).
   build_time  Fig 11    reference build time
   acc_perf    Fig 12/13 accelerated (TPU-model) query time/throughput
   energy      Table 3   energy breakdown + Mbp/J
+  accel_sim   §5/Table 3 PCM-substrate noise sweep + analytical cost model
   roofline    §Roofline three-term analysis from dry-run artifacts
 """
 
@@ -15,8 +16,8 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks import (accuracy, acc_perf, build_time, common, energy,
-                        memory, query_perf, roofline)
+from benchmarks import (accel_sim, accuracy, acc_perf, build_time, common,
+                        energy, memory, query_perf, roofline)
 
 
 def main() -> None:
@@ -40,6 +41,8 @@ def main() -> None:
         acc_perf.run(community, software_query=sw)
     if want("energy"):
         energy.run(community)
+    if want("accel_sim"):
+        accel_sim.run(community)
     if want("roofline"):
         roofline.run()
 

@@ -1,0 +1,35 @@
+"""Acc-Demeter device-model subsystem: the simulated PCM-crossbar substrate.
+
+The paper's accelerator (§5-6) runs the AM search inside analog
+memristor crossbars; this package models that substrate end to end so the
+platform-independence claim is testable in software:
+
+* :mod:`~repro.accel.device` — PCM cell physics: conductance levels,
+  programming/read noise, drift, stuck-at faults (:class:`DeviceConfig`).
+* :mod:`~repro.accel.crossbar` — differential crossbar tiling, bit-line
+  current accumulation, behavioral ADC (:class:`CrossbarConfig`).
+* :mod:`~repro.accel.backend_pcm` — the registered ``pcm_sim`` execution
+  backend (bit-exact with ``reference`` at zero noise).
+* :mod:`~repro.accel.cost` — analytical 65nm/PCM latency, energy and
+  area model (:func:`accel_cost`, Table-3-style breakdowns).
+* :mod:`~repro.accel.sweep` — accuracy-vs-non-ideality sweep harness
+  (:func:`noise_sweep`).
+
+See ``docs/ACC_DEMETER.md`` for the paper-section-to-module map.
+"""
+
+from repro.accel.device import DeviceConfig, program_conductances
+from repro.accel.crossbar import (CrossbarConfig, adc_quantize,
+                                  crossbar_agreement, program_prototypes)
+from repro.accel.backend_pcm import PCMBackend, split_options
+from repro.accel.cost import UMC65_PCM, CostReport, PCMChip, accel_cost
+from repro.accel.sweep import SWEEPABLE, SweepPoint, noise_sweep
+
+__all__ = [
+    "DeviceConfig", "program_conductances",
+    "CrossbarConfig", "adc_quantize", "crossbar_agreement",
+    "program_prototypes",
+    "PCMBackend", "split_options",
+    "UMC65_PCM", "CostReport", "PCMChip", "accel_cost",
+    "SWEEPABLE", "SweepPoint", "noise_sweep",
+]

@@ -1,0 +1,119 @@
+"""``pcm_sim``: the Acc-Demeter simulated-substrate execution backend.
+
+Registers a fifth backend in the :mod:`repro.pipeline.backend` registry
+whose AM search (step 4) runs through the simulated differential PCM
+crossbar of :mod:`repro.accel.crossbar`, while read conversion (step 3)
+stays on the digital reference encoder — mirroring the paper's split
+between Acc-Demeter's CMOS encoding periphery (§5.2-5.3) and its analog
+in-memory AM (§5.4).  Because ``encode`` is bit-exact with every other
+backend, the RefDB cache remains shared across all backends and the
+digital prototypes are what gets "programmed" (with noise) into the
+crossbar on each search.
+
+Device and geometry knobs thread through ``ProfilerConfig.backend_options``::
+
+    ProfilerConfig(backend="pcm_sim",
+                   backend_options={"preset": "pcm", "read_sigma": 0.05,
+                                    "rows": 256, "adc_bits": 8, "seed": 1})
+
+With the default (ideal, zero-noise) options the backend is bit-exact
+with ``reference`` — enforced by the registry-wide parity tests — and
+with noise enabled it is deterministic in the ``seed`` option.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+
+from repro.accel.crossbar import (CrossbarConfig, crossbar_read,
+                                  program_prototypes)
+from repro.accel.device import DeviceConfig
+from repro.pipeline.backend import ReferenceBackend, register_backend
+from repro.pipeline.config import ProfilerConfig
+
+#: Option names routed to CrossbarConfig; everything else goes to
+#: DeviceConfig (plus the "preset" selector handled here).
+_CROSSBAR_KEYS = frozenset(f.name for f in dataclasses.fields(CrossbarConfig))
+_DEVICE_KEYS = frozenset(f.name for f in dataclasses.fields(DeviceConfig))
+_INT_KEYS = _CROSSBAR_KEYS | {"seed"}
+
+_PRESETS = {
+    "ideal": DeviceConfig,
+    "pcm": DeviceConfig.pcm,
+}
+
+
+def split_options(options: dict) -> tuple[CrossbarConfig, DeviceConfig]:
+    """Build (CrossbarConfig, DeviceConfig) from flat backend options.
+
+    ``preset`` selects the device baseline ("ideal" default, "pcm" =
+    literature-parameterized noisy device); named device fields override
+    the preset; unknown names or mistyped values raise a ValueError
+    naming the option (so CLI typos surface as messages, not tracebacks
+    from deep inside jax).
+    """
+    opts = dict(options)
+    preset = opts.pop("preset", "ideal")
+    if not isinstance(preset, str) or preset not in _PRESETS:
+        raise ValueError(f"unknown pcm_sim preset {preset!r}; "
+                         f"choose from {sorted(_PRESETS)}")
+    unknown = set(opts) - _CROSSBAR_KEYS - _DEVICE_KEYS
+    if unknown:
+        raise ValueError(
+            f"unknown pcm_sim option(s) {sorted(unknown)}; valid: "
+            f"{sorted(_CROSSBAR_KEYS | _DEVICE_KEYS | {'preset'})}")
+    for name, value in opts.items():
+        if name in _INT_KEYS:
+            if isinstance(value, bool) or not isinstance(value, int):
+                raise ValueError(f"pcm_sim option {name!r} must be an "
+                                 f"integer, got {value!r}")
+        elif isinstance(value, bool) or not isinstance(value, (int, float)):
+            raise ValueError(f"pcm_sim option {name!r} must be a number, "
+                             f"got {value!r}")
+    xcfg = CrossbarConfig(**{k: v for k, v in opts.items()
+                             if k in _CROSSBAR_KEYS})
+    dcfg = _PRESETS[preset](**{k: v for k, v in opts.items()
+                               if k in _DEVICE_KEYS})
+    return xcfg, dcfg
+
+
+@register_backend("pcm_sim")
+class PCMBackend(ReferenceBackend):
+    """Digital reference encoder + simulated PCM-crossbar AM search.
+
+    The conductance banks are programmed once per distinct prototype
+    array and cached (the hardware's write-once/read-many discipline):
+    every subsequent batch pays only the crossbar *read*.  The cache
+    holds a strong reference to the prototype array it was programmed
+    from, so the identity check can never alias a recycled ``id``.
+    """
+
+    name = "pcm_sim"
+
+    def __init__(self, config: ProfilerConfig):
+        super().__init__(config)
+        self.crossbar_config, self.device_config = split_options(
+            config.options)
+        self._program = jax.jit(functools.partial(
+            program_prototypes, xcfg=self.crossbar_config,
+            dcfg=self.device_config))
+        self._read = jax.jit(functools.partial(
+            crossbar_read, dim=self.space.dim, xcfg=self.crossbar_config,
+            dcfg=self.device_config))
+        self._programmed: tuple[jax.Array, jax.Array, jax.Array] | None = None
+
+    def agreement(self, queries: jax.Array, prototypes: jax.Array
+                  ) -> jax.Array:
+        b, s = queries.shape[0], prototypes.shape[0]
+        if isinstance(prototypes, jax.core.Tracer):
+            # Inside someone else's jit: programming must stay in-graph
+            # (and tracers must not leak into the cache).
+            g_pos, g_neg = self._program(prototypes)
+            return self._read(queries, g_pos, g_neg)[:b, :s]
+        if self._programmed is None or self._programmed[0] is not prototypes:
+            self._programmed = (prototypes, *self._program(prototypes))
+        _, g_pos, g_neg = self._programmed
+        return self._read(queries, g_pos, g_neg)[:b, :s]

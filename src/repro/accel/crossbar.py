@@ -1,0 +1,193 @@
+"""Tiled PCM-crossbar associative-memory search (paper §5.4).
+
+The AM prototypes live as conductances in fixed-size crossbar arrays; a
+query is applied as word-line voltages and each bit-line current is the
+dot product of the query bits with one prototype's bits (Kirchhoff
+accumulation).  Demeter's similarity is *agreement* (matching bits, both
+1-1 and 0-0), so the simulator models the standard differential design:
+
+  bank 0 stores the prototype bits      and is driven by the query bits,
+  bank 1 stores the complement bits     and is driven by the complement,
+
+``agreement = count(bank 0) + count(bank 1)``.
+
+Physical arrays are ``rows x cols``: the HD dimension is split across
+row tiles (each contributing a partial count, digitized by that tile's
+ADC and accumulated digitally) and the prototype set is split across
+column tiles.  Both tilings are expressed with ``vmap`` over a leading
+tile axis, so a community whose AM spans hundreds of arrays is one
+batched matmul, not a Python loop.
+
+The ADC is behavioral: the analog front-end recovers a per-tile match
+count in ``[0, rows]`` (current minus the ``g_off`` pedestal, divided by
+the conductance window) and quantizes it to ``2**adc_bits`` uniform
+levels.  With ``adc_bits >= log2(rows + 1)`` the step is one count and a
+zero-noise read is bit-exact with the digital agreement — the property
+``tests/test_accel.py`` pins down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.accel import device
+from repro.accel.device import DeviceConfig
+from repro.core import bitops
+from repro.kernels.ops import pad_to_multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarConfig:
+    """Frozen geometry of one physical crossbar array + its converters.
+
+    Attributes:
+      rows: word lines per array (HD dimensions per row tile).
+      cols: bit lines per array (prototypes per column tile).
+      adc_bits: ADC resolution; needs ``>= log2(rows + 1)`` for lossless
+        count readout (the default 9 bits covers 256 rows), smaller
+        values model a cheaper, lossy converter.
+    """
+
+    rows: int = 256
+    cols: int = 256
+    adc_bits: int = 9
+
+    def __post_init__(self) -> None:
+        if self.rows < 1 or self.cols < 1:
+            raise ValueError("rows and cols must be >= 1")
+        if self.adc_bits < 1:
+            raise ValueError("adc_bits must be >= 1")
+
+    @property
+    def lossless(self) -> bool:
+        """True when the ADC resolves every one of ``rows + 1`` counts."""
+        return (1 << self.adc_bits) - 1 >= self.rows
+
+    def num_tiles(self, dim: int, num_protos: int) -> tuple[int, int]:
+        """(row tiles, column tiles) covering a ``dim x num_protos`` AM."""
+        return (math.ceil(dim / self.rows),
+                math.ceil(num_protos / self.cols))
+
+    def num_arrays(self, dim: int, num_protos: int) -> int:
+        """Physical arrays for one differential AM (both banks)."""
+        rt, ct = self.num_tiles(dim, num_protos)
+        return 2 * rt * ct
+
+
+def adc_quantize(count: jax.Array, cfg: CrossbarConfig) -> jax.Array:
+    """Digitize an analog per-tile match count to the ADC's level grid.
+
+    The full-scale range ``[0, rows]`` maps onto ``2**adc_bits - 1``
+    uniform steps; when the ADC has at least ``rows + 1`` levels the step
+    is clamped to exactly one count so quantization is the identity on
+    integer counts (the lossless regime).
+    """
+    levels = (1 << cfg.adc_bits) - 1
+    step = 1.0 if cfg.lossless else cfg.rows / levels
+    code = jnp.clip(jnp.round(count / step), 0, levels)
+    return code * step
+
+
+def _bank_counts(qbits: jax.Array, gtiles: jax.Array, read_key: jax.Array,
+                 xcfg: CrossbarConfig, dcfg: DeviceConfig) -> jax.Array:
+    """Analog partial-count readout of one bank, all tiles at once.
+
+    Args:
+      qbits: ``(T, B, rows)`` float32 query bits per row tile.
+      gtiles: ``(T, S_pad, rows)`` float32 conductances per row tile.
+      read_key: key for this bank's read event.
+      xcfg / dcfg: geometry and device parameters.
+
+    Returns:
+      ``(B, S_pad)`` float32 accumulated (post-ADC) match counts.
+    """
+    def one_tile(q_tile, g_tile, key):
+        active = q_tile.sum(axis=-1, keepdims=True)          # (B, 1)
+        current = q_tile @ g_tile.T                          # (B, S_pad) µS
+        current = current + device.bitline_read_noise(
+            key, current.shape, active, dcfg)
+        # The periphery divides out its reference-cell drift estimate
+        # (drift_factor**drift_calibration), then inverts with the
+        # *nominal* window and g_off pedestal (`active` is popcounted
+        # digitally).  The residual drift scale error and any noise pass
+        # through to the count — those ARE the non-idealities.
+        calibrated = current / (dcfg.drift_factor ** dcfg.drift_calibration)
+        count = (calibrated - dcfg.g_off_us * active) / dcfg.g_window_us
+        return adc_quantize(count, xcfg)
+
+    keys = jax.random.split(read_key, qbits.shape[0])
+    return jax.vmap(one_tile)(qbits, gtiles, keys).sum(axis=0)
+
+
+def _to_row_tiles(bits: jax.Array, rows: int) -> jax.Array:
+    """``(N, D)`` bits -> ``(T, N, rows)`` zero-padded row tiles."""
+    padded = pad_to_multiple(bits, 1, rows)
+    n, d_pad = padded.shape
+    return jnp.moveaxis(padded.reshape(n, d_pad // rows, rows), 1, 0)
+
+
+def program_prototypes(prototypes: jax.Array, xcfg: CrossbarConfig,
+                       dcfg: DeviceConfig) -> tuple[jax.Array, jax.Array]:
+    """Unpack + tile + program the packed AM into both conductance banks.
+
+    Returns ``(g_pos, g_neg)`` each of shape ``(T, S_pad, rows)``: the
+    per-row-tile conductance maps of the positive (bit) and complement
+    banks.  Deterministic in ``dcfg.seed`` — reprogramming the same
+    prototypes yields the same device, matching the paper's write-once
+    AM discipline.
+    """
+    pbits = bitops.unpack_bits(prototypes).astype(jnp.float32)   # (S, D)
+    pbits = pad_to_multiple(pbits, 0, xcfg.cols)
+    # Complement before the dim-axis padding (inside _to_row_tiles): pad
+    # cells must stay OFF in both banks so they never contribute current.
+    pos = _to_row_tiles(pbits, xcfg.rows)
+    neg = _to_row_tiles(1.0 - pbits, xcfg.rows)
+    g_pos = device.program_conductances(pos, dcfg, stream=0)
+    g_neg = device.program_conductances(neg, dcfg, stream=1)
+    return g_pos, g_neg
+
+
+def crossbar_read(queries: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
+                  dim: int, xcfg: CrossbarConfig, dcfg: DeviceConfig
+                  ) -> jax.Array:
+    """One AM read event against already-programmed conductance banks.
+
+    ``(B, W)`` packed queries vs the ``(T, S_pad, rows)`` banks from
+    :func:`program_prototypes` -> ``(B, S_pad)`` int32 agreement
+    estimates clipped to ``[0, dim]`` (callers slice off the padded
+    prototype columns).  Splitting programming from reading mirrors the
+    hardware's write-once/read-many discipline: a profiling session
+    programs the AM once and issues one read per batch.
+    """
+    qbits = bitops.unpack_bits(queries).astype(jnp.float32)      # (B, D)
+    q_pos = _to_row_tiles(qbits, xcfg.rows)
+    q_neg = _to_row_tiles(1.0 - qbits, xcfg.rows)
+
+    # One read event per distinct batch content, reproducibly keyed.
+    digest = jnp.sum(queries, dtype=jnp.uint32)
+    counts = (
+        _bank_counts(q_pos, g_pos, device.read_event_key(dcfg, 0, digest),
+                     xcfg, dcfg)
+        + _bank_counts(q_neg, g_neg, device.read_event_key(dcfg, 1, digest),
+                       xcfg, dcfg))
+    return jnp.clip(jnp.round(counts), 0, dim).astype(jnp.int32)
+
+
+def crossbar_agreement(queries: jax.Array, prototypes: jax.Array, dim: int,
+                       xcfg: CrossbarConfig, dcfg: DeviceConfig
+                       ) -> jax.Array:
+    """Full differential AM search: ``(B, W) x (S, W) -> (B, S)`` int32.
+
+    Convenience composition of :func:`program_prototypes` +
+    :func:`crossbar_read` for one-shot use; the ``pcm_sim`` backend
+    caches the programmed banks instead so repeated batches against the
+    same AM pay the programming cost once.  With ``dcfg.is_ideal`` and a
+    lossless ADC the result equals the digital agreement exactly.
+    """
+    b, s = queries.shape[0], prototypes.shape[0]
+    g_pos, g_neg = program_prototypes(prototypes, xcfg, dcfg)
+    return crossbar_read(queries, g_pos, g_neg, dim, xcfg, dcfg)[:b, :s]

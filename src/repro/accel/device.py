@@ -1,0 +1,200 @@
+"""PCM cell models for the simulated Acc-Demeter crossbar (paper §5).
+
+A binary HD bit is stored as the conductance of one phase-change-memory
+cell: logical 1 = crystalline (SET, high conductance ``g_on_us``),
+logical 0 = amorphous (RESET, low conductance ``g_off_us``).  Everything
+that makes a real PCM array diverge from that ideal is a knob on the
+frozen :class:`DeviceConfig`:
+
+* **programming noise** — the iterative SET/RESET loop lands on a
+  conductance distributed around the target (Gaussian, std expressed as a
+  fraction of the ON/OFF window), frozen at program time;
+* **conductance drift** — amorphous structural relaxation decays the
+  programmed conductance as ``(t / t0)**-nu`` (Ielmini's empirical law;
+  we apply one lumped exponent to the whole array);
+* **stuck-at faults** — fabrication defects pin a cell at ON or OFF
+  regardless of what was programmed;
+* **read noise** — per-read-event current fluctuation (1/f + thermal),
+  modeled at the bit-line as Gaussian current noise whose std scales with
+  the square root of the number of active rows (sum of independent
+  per-cell fluctuations), so the simulator never materializes a
+  per-(query, cell) noise tensor.
+
+All sampling functions are pure JAX (``key`` in, array out): the same key
+always produces the same device instance, which is what makes the noisy
+backend deterministic and the zero-noise configuration bit-exact with the
+digital reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConfig:
+    """Frozen PCM cell parameters (defaults = ideal, zero-noise device).
+
+    Attributes:
+      g_on_us: SET (crystalline) conductance, microsiemens.
+      g_off_us: RESET (amorphous) conductance, microsiemens.
+      prog_sigma: programming-noise std as a fraction of the conductance
+        window ``g_on_us - g_off_us``; 0 disables.
+      read_sigma: per-cell read-noise std as a fraction of the window;
+        applied at the bit line scaled by sqrt(active rows); 0 disables.
+      drift_nu: conductance-drift exponent (``g *= (t/t0)**-nu``,
+        t0 = 1 s); 0 disables.
+      drift_t_s: seconds elapsed since programming (drift horizon).
+      drift_calibration: fraction of the drift decay the read periphery
+        compensates via reference-cell calibration (standard PCM
+        practice); 1 = perfect compensation, 0 = raw drifted currents.
+        The residual ``drift_factor**(1 - drift_calibration)`` scale
+        error is the non-ideality the profiler actually sees.
+      stuck_on_rate: fraction of cells pinned at ``g_on_us``.
+      stuck_off_rate: fraction of cells pinned at ``g_off_us``.
+      seed: base PRNG seed for every device sample (programming noise,
+        fault map, read noise); the backend threads it from
+        ``ProfilerConfig.backend_options``.
+    """
+
+    g_on_us: float = 20.0
+    g_off_us: float = 0.1
+    prog_sigma: float = 0.0
+    read_sigma: float = 0.0
+    drift_nu: float = 0.0
+    drift_t_s: float = 0.0
+    drift_calibration: float = 1.0
+    stuck_on_rate: float = 0.0
+    stuck_off_rate: float = 0.0
+    seed: int = 0xACC_DE
+
+    def __post_init__(self) -> None:
+        if self.g_on_us <= self.g_off_us:
+            raise ValueError("g_on_us must exceed g_off_us")
+        if self.g_off_us < 0:
+            raise ValueError("g_off_us must be >= 0")
+        for f in ("prog_sigma", "read_sigma", "drift_nu", "drift_t_s"):
+            if getattr(self, f) < 0:
+                raise ValueError(f"{f} must be >= 0")
+        for f in ("stuck_on_rate", "stuck_off_rate", "drift_calibration"):
+            if not 0.0 <= getattr(self, f) <= 1.0:
+                raise ValueError(f"{f} must be in [0, 1]")
+        if self.stuck_on_rate + self.stuck_off_rate > 1.0:
+            raise ValueError("stuck_on_rate + stuck_off_rate must be <= 1")
+
+    @property
+    def g_window_us(self) -> float:
+        """The ON/OFF conductance window (the unit of one agreement count)."""
+        return self.g_on_us - self.g_off_us
+
+    @property
+    def is_ideal(self) -> bool:
+        """True when every non-ideality is switched off (bit-exact path)."""
+        return (self.prog_sigma == 0.0 and self.read_sigma == 0.0
+                and self.residual_drift == 1.0
+                and self.stuck_on_rate == 0.0 and self.stuck_off_rate == 0.0)
+
+    @property
+    def drift_factor(self) -> float:
+        """Multiplicative conductance decay after ``drift_t_s`` seconds."""
+        if self.drift_nu == 0.0 or self.drift_t_s <= 1.0:
+            return 1.0
+        return float(self.drift_t_s ** -self.drift_nu)
+
+    @property
+    def residual_drift(self) -> float:
+        """Drift scale error left after periphery calibration."""
+        return float(self.drift_factor ** (1.0 - self.drift_calibration))
+
+    @classmethod
+    def pcm(cls, **overrides) -> "DeviceConfig":
+        """Literature-parameterized mushroom-cell PCM (Karunaratne-style
+        silicon prototype numbers): ~8% programming spread, ~3% read
+        fluctuation, nu = 0.05 drift read back after ~1 day with 90%
+        reference-cell calibration, 1e-3 stuck cells per polarity."""
+        base = dict(prog_sigma=0.08, read_sigma=0.03,
+                    drift_nu=0.05, drift_t_s=86_400.0, drift_calibration=0.9,
+                    stuck_on_rate=1e-3, stuck_off_rate=1e-3)
+        base.update(overrides)
+        return cls(**base)
+
+
+def _key(cfg: DeviceConfig, stream: int, source: int) -> jax.Array:
+    """Deterministic sub-key: one per (crossbar bank, noise source)."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.key(cfg.seed), stream), source)
+
+
+# Noise-source tags — one per physically distinct mechanism.
+_PROG, _FAULT, READ_SOURCE = 0, 1, 2
+
+
+def program_conductances(bits: jax.Array, cfg: DeviceConfig, *,
+                         stream: int = 0) -> jax.Array:
+    """Program a {0,1} bit array into per-cell conductances (µS).
+
+    Models the one-time write: target level, programming spread, drift to
+    the read-back horizon, then the stuck-at fault map (faults win over
+    whatever was programmed — the defect is in the cell, not the pulse).
+
+    Args:
+      bits: any-shape {0,1} array (uint8/int/bool/float all accepted).
+      cfg: device parameters; with ``cfg.is_ideal`` the result is exactly
+        ``g_off + bits * (g_on - g_off)``.
+      stream: noise-stream tag so physically distinct arrays (e.g. the
+        positive and complement banks of a differential crossbar) draw
+        independent noise from the same seed.
+
+    Returns:
+      float32 conductances, same shape as ``bits``, clipped to >= 0.
+    """
+    b = bits.astype(jnp.float32)
+    g = cfg.g_off_us + b * cfg.g_window_us
+    if cfg.prog_sigma > 0.0:
+        noise = jax.random.normal(_key(cfg, stream, _PROG), b.shape,
+                                  jnp.float32)
+        g = g + cfg.prog_sigma * cfg.g_window_us * noise
+    g = g * cfg.drift_factor
+    if cfg.stuck_on_rate > 0.0 or cfg.stuck_off_rate > 0.0:
+        u = jax.random.uniform(_key(cfg, stream, _FAULT), b.shape)
+        g = jnp.where(u < cfg.stuck_on_rate, cfg.g_on_us, g)
+        g = jnp.where(u > 1.0 - cfg.stuck_off_rate, cfg.g_off_us, g)
+    return jnp.maximum(g, 0.0)
+
+
+def read_event_key(cfg: DeviceConfig, stream: int,
+                   digest: jax.Array | int) -> jax.Array:
+    """Key for one read event on one bank.
+
+    ``digest`` may be a traced int (e.g. a cheap hash of the query batch),
+    so distinct batches draw fresh — but reproducible — read noise.
+    """
+    return jax.random.fold_in(_key(cfg, stream, READ_SOURCE),
+                              jnp.asarray(digest, jnp.uint32))
+
+
+def bitline_read_noise(key: jax.Array, shape: tuple[int, ...],
+                       active_rows: jax.Array,
+                       cfg: DeviceConfig) -> jax.Array:
+    """Per-read current noise at the bit line (µS-equivalent).
+
+    The sum of ``active_rows`` independent per-cell fluctuations of std
+    ``read_sigma * g_window`` has std ``read_sigma * g_window *
+    sqrt(active_rows)`` — sampling at the bit line is statistically
+    equivalent to per-cell sampling and O(B*S) instead of O(B*S*D).
+
+    Args:
+      key: read-event key (the backend folds a batch digest into the
+        device seed so each distinct batch sees fresh, reproducible noise).
+      shape: bit-line current shape, e.g. ``(B, S)``.
+      active_rows: broadcastable count of rows driven high per current.
+      cfg: device parameters; returns zeros when ``read_sigma == 0``.
+    """
+    if cfg.read_sigma == 0.0:
+        return jnp.zeros(shape, jnp.float32)
+    std = cfg.read_sigma * cfg.g_window_us * jnp.sqrt(
+        jnp.maximum(active_rows.astype(jnp.float32), 0.0))
+    return std * jax.random.normal(key, shape, jnp.float32)

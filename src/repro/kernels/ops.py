@@ -20,13 +20,22 @@ from repro.kernels import hamming_am as _hamming_am
 from repro.kernels import hdc_encoder as _hdc_encoder
 
 
-def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+def pad_to_multiple(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``multiple``.
+
+    Shared by the Pallas wrappers (block alignment) and the accel crossbar
+    tiling (:mod:`repro.accel.crossbar`), which both need trailing-zero
+    padding that downstream math treats as inert.
+    """
     pad = (-x.shape[axis]) % multiple
     if pad == 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+_pad_to = pad_to_multiple
 
 
 def to_pm1(packed: jax.Array) -> jax.Array:

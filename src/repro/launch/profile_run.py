@@ -21,7 +21,8 @@ from repro.core import HDSpace
 from repro.eval import score_profile
 from repro.genomics import fasta, synth
 from repro.pipeline import (ArraySource, FastqSource, ProfilerConfig,
-                            ProfilingSession, ReadSource, available_backends)
+                            ProfilingSession, ReadSource, available_backends,
+                            resolve_backend)
 
 
 def profile(genomes: dict, source: ReadSource | tuple, *,
@@ -53,6 +54,21 @@ def profile(genomes: dict, source: ReadSource | tuple, *,
     return rep
 
 
+def _parse_option(spec: str) -> tuple[str, str | int | float | bool]:
+    """``KEY=VALUE`` -> (key, typed value): bool/int/float if parseable."""
+    key, sep, raw = spec.partition("=")
+    if not sep or not key:
+        raise SystemExit(f"--backend-option expects KEY=VALUE, got {spec!r}")
+    if raw.lower() in ("true", "false"):
+        return key, raw.lower() == "true"
+    for cast in (int, float):
+        try:
+            return key, cast(raw)
+        except ValueError:
+            pass
+    return key, raw
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ref", help="reference FASTA")
@@ -68,16 +84,36 @@ def main() -> None:
     ap.add_argument("--read-len", type=int, default=150)
     ap.add_argument("--cache-dir", default=None)
     ap.add_argument("--backend", default="reference",
-                    choices=available_backends(),
-                    help="execution backend (Pallas backends run in "
+                    help="execution backend, one of the registered names "
+                         "(see --list-backends; Pallas backends run in "
                          "interpret mode on CPU)")
+    ap.add_argument("--backend-option", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="backend-specific option, repeatable (e.g. "
+                         "--backend pcm_sim --backend-option preset=pcm "
+                         "--backend-option read_sigma=0.05)")
+    ap.add_argument("--list-backends", action="store_true",
+                    help="print the registered backend names and exit")
     args = ap.parse_args()
+
+    if args.list_backends:
+        for name in available_backends():
+            print(name)
+        return
+    if args.backend not in available_backends():
+        ap.error(f"unknown backend {args.backend!r}; available: "
+                 f"{', '.join(available_backends())}")
 
     config = ProfilerConfig(
         space=HDSpace(dim=args.dim, ngram=args.ngram,
                       z_threshold=args.z_threshold),
         window=args.window, stride=args.stride,
-        batch_size=args.batch_size, backend=args.backend)
+        batch_size=args.batch_size, backend=args.backend,
+        backend_options=dict(_parse_option(s) for s in args.backend_option))
+    try:                      # surface bad --backend-option values as CLI
+        resolve_backend(args.backend, config)   # errors, not tracebacks
+    except ValueError as e:
+        ap.error(str(e))
 
     if args.synthetic or not args.ref:
         spec = synth.CommunitySpec(num_species=10, genome_len=60_000)

@@ -28,6 +28,11 @@ from repro.pipeline.source import (ArraySource, FastqSource, IterableSource,
                                    as_source, prefetch)
 from repro.pipeline.session import BatchResult, ProfilingSession
 
+# Self-registering backends living outside this package.  Imported last:
+# the accel modules import pipeline submodules, which are fully loaded by
+# this point.  Registers "pcm_sim" (see repro.accel.backend_pcm).
+import repro.accel  # noqa: E402,F401  (registration side effect)
+
 __all__ = [
     "ProfileAccumulator", "ProfileReport", "ProfilerConfig",
     "Backend", "available_backends", "register_backend", "resolve_backend",

@@ -24,10 +24,14 @@ Registered backends:
   reference_packed pure-jnp encoder + packed XOR+popcount agreement.
   pallas_matmul    Pallas encoder kernel + MXU ±1 matmul kernel.
   pallas_packed    Pallas encoder kernel + VPU popcount kernel.
+  pcm_sim          digital encoder + simulated PCM-crossbar AM search
+                   (:mod:`repro.accel`; bit-exact at zero device noise,
+                   configurably non-ideal via ``backend_options``).
 
-All four are bit-exact twins (enforced by ``tests/test_pipeline.py``); a
-future ``sharded`` backend built on ``repro.distributed.sharding`` plugs
-into the same registry without touching any caller.
+All are bit-exact twins at default options (enforced by
+``tests/test_pipeline.py``); a future ``sharded`` backend built on
+``repro.distributed.sharding`` plugs into the same registry without
+touching any caller.
 """
 
 from __future__ import annotations

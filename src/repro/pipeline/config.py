@@ -17,8 +17,12 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+from typing import Mapping
 
 from repro.core.hd_space import HDSpace
+
+#: JSON-primitive types allowed as backend option values.
+OptionValue = str | int | float | bool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +37,11 @@ class ProfilerConfig:
       backend: registered backend name executing encode/agreement
         (see :mod:`repro.pipeline.backend`); validated at session
         construction so configs may name backends registered later.
+      backend_options: backend-specific knobs (e.g. the ``pcm_sim``
+        device/crossbar parameters and noise seed).  Accepts a mapping at
+        construction time; canonicalized to a sorted tuple of
+        ``(name, value)`` pairs so the config stays hashable and
+        JSON-round-trippable.  Values must be JSON primitives.
     """
 
     space: HDSpace = HDSpace()
@@ -40,6 +49,7 @@ class ProfilerConfig:
     stride: int | None = None
     batch_size: int = 256
     backend: str = "reference"
+    backend_options: tuple[tuple[str, OptionValue], ...] = ()
 
     def __post_init__(self) -> None:
         if self.window < 1:
@@ -50,6 +60,18 @@ class ProfilerConfig:
             raise ValueError("batch_size must be >= 1")
         if not self.backend or not isinstance(self.backend, str):
             raise ValueError("backend must be a non-empty backend name")
+        object.__setattr__(self, "backend_options",
+                           _canonical_options(self.backend_options))
+
+    @property
+    def options(self) -> dict[str, OptionValue]:
+        """``backend_options`` as a plain dict (the read-side view)."""
+        return dict(self.backend_options)
+
+    def with_options(self, **options: OptionValue) -> "ProfilerConfig":
+        """A copy with ``options`` merged over the existing backend options."""
+        return dataclasses.replace(
+            self, backend_options={**self.options, **options})
 
     @property
     def effective_stride(self) -> int:
@@ -91,11 +113,40 @@ class ProfilerConfig:
         Covers space, window and canonicalized stride — everything that
         can change the built prototypes (the old cache key ignored stride
         and silently served wrong databases).  ``batch_size`` (a host
-        batching knob) and ``backend`` (bit-exact twins, enforced by the
-        parity tests) are deliberately excluded so tuning either reuses
-        the cached database instead of forcing a full rebuild.
+        batching knob) and ``backend``/``backend_options`` (every backend's
+        *encode* is bit-exact with the reference — the ``pcm_sim`` device
+        non-idealities live entirely in the AM search, enforced by the
+        parity tests) are deliberately excluded so tuning any of them
+        reuses the cached database instead of forcing a full rebuild.
         """
         d = {"space": dataclasses.asdict(self.space), "window": self.window,
              "stride": self.effective_stride}
         payload = json.dumps(d, sort_keys=True)
         return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def _canonical_options(options) -> tuple[tuple[str, OptionValue], ...]:
+    """Normalize any mapping / iterable-of-pairs into the canonical sorted
+    tuple-of-pairs form (hashable, deterministic JSON)."""
+    if isinstance(options, Mapping):
+        pairs = list(options.items())
+    else:
+        pairs = [tuple(p) for p in options]
+    out = []
+    for pair in pairs:
+        if len(pair) != 2:
+            raise ValueError(f"backend option must be a (name, value) pair, "
+                             f"got {pair!r}")
+        name, value = pair
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"backend option name must be a non-empty "
+                             f"string, got {name!r}")
+        if not isinstance(value, (str, int, float, bool)):
+            raise ValueError(
+                f"backend option {name!r} must be a JSON primitive "
+                f"(str/int/float/bool), got {type(value).__name__}")
+        out.append((name, value))
+    names = [n for n, _ in out]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate backend option names in {names}")
+    return tuple(sorted(out))

@@ -59,7 +59,14 @@ class ProfilingSession:
         self.refdb: RefDB | None = None
         self.refdb_loaded_from_cache = False
         self.refdb_cache_file: pathlib.Path | None = None
-        self._classify = jax.jit(self._classify_impl)
+        # Only the substrate-independent tail is jitted here; the
+        # backend's own primitives are already jitted per backend.
+        # Calling `agreement` outside any outer trace lets stateful
+        # backends (pcm_sim) amortize one-time work — programming the
+        # crossbar conductances — across the whole batch stream.
+        self._from_agreement = jax.jit(
+            classifier.from_agreement,
+            static_argnames=("num_species", "threshold_bits"))
 
     # -- Step 2 ------------------------------------------------------------
     def build_refdb(self, genomes: dict[str, np.ndarray]) -> RefDB:
@@ -112,12 +119,12 @@ class ProfilingSession:
         return self.backend.encode(jnp.asarray(tokens), jnp.asarray(lengths))
 
     # -- Step 4 ------------------------------------------------------------
-    def _classify_impl(self, queries: jax.Array, refdb: RefDB
-                       ) -> classifier.ReadClassification:
+    def _classify(self, queries: jax.Array, refdb: RefDB
+                  ) -> classifier.ReadClassification:
         agree = self.backend.agreement(queries, refdb.prototypes)
-        return classifier.from_agreement(
-            agree, refdb.proto_species, refdb.num_species,
-            self.space.threshold_bits)
+        return self._from_agreement(
+            agree, refdb.proto_species, num_species=refdb.num_species,
+            threshold_bits=self.space.threshold_bits)
 
     def classify_batch(self, queries: jax.Array, refdb: RefDB | None = None
                        ) -> classifier.ReadClassification:

@@ -1,0 +1,279 @@
+"""Acc-Demeter device-model subsystem: zero-noise bit-exactness vs the
+digital reference, seeded determinism of the noisy path, crossbar tiling
+edge cases, backend_options plumbing, the cost model, and the sweep
+harness."""
+
+import numpy as np
+import pytest
+
+from repro.accel import (CrossbarConfig, DeviceConfig, accel_cost,
+                         adc_quantize, crossbar_agreement, noise_sweep,
+                         split_options)
+from repro.core.hd_space import HDSpace
+from repro.genomics import synth
+from repro.pipeline import (ArraySource, ProfilerConfig, ProfilingSession,
+                            available_backends, resolve_backend)
+
+SP = HDSpace(dim=512, ngram=5, z_threshold=3.0)
+
+
+def _config(**kw):
+    kw.setdefault("space", SP)
+    kw.setdefault("window", 1024)
+    kw.setdefault("batch_size", 16)
+    kw.setdefault("backend", "pcm_sim")
+    return ProfilerConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def packed():
+    """(queries, prototypes, reference agreement) on the shared space."""
+    ref = resolve_backend("reference", _config(backend="reference"))
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 4, (16, 64)).astype(np.int32)
+    lens = np.full(16, 64, np.int32)
+    q = np.asarray(ref.encode(toks, lens))
+    protos = q[:7]                       # S=7: not a multiple of anything
+    return q, protos, np.asarray(ref.agreement(q, protos))
+
+
+# -- zero-noise bit-exactness ----------------------------------------------
+
+def test_pcm_sim_registered():
+    assert "pcm_sim" in available_backends()
+
+
+def test_zero_noise_matches_reference_exactly(packed):
+    q, protos, a_ref = packed
+    be = resolve_backend("pcm_sim", _config())
+    np.testing.assert_array_equal(np.asarray(be.agreement(q, protos)), a_ref)
+
+
+@pytest.mark.parametrize("rows,cols", [(64, 4), (100, 3), (512, 256),
+                                       (1024, 7)])
+def test_tiling_edge_cases_stay_exact(packed, rows, cols):
+    """Partial tiles (S % cols != 0, dim % rows != 0, oversize arrays)
+    must not leak padding into the agreement."""
+    q, protos, a_ref = packed
+    be = resolve_backend(
+        "pcm_sim", _config().with_options(rows=rows, cols=cols,
+                                          adc_bits=11))
+    np.testing.assert_array_equal(np.asarray(be.agreement(q, protos)), a_ref)
+
+
+def test_single_prototype_exact(packed):
+    q, protos, a_ref = packed
+    be = resolve_backend("pcm_sim", _config())
+    got = np.asarray(be.agreement(q, protos[:1]))
+    np.testing.assert_array_equal(got, a_ref[:, :1])
+
+
+def test_lossy_adc_quantizes_but_stays_in_range(packed):
+    q, protos, a_ref = packed
+    be = resolve_backend("pcm_sim", _config().with_options(adc_bits=4))
+    got = np.asarray(be.agreement(q, protos))
+    assert not np.array_equal(got, a_ref)           # 15 levels < 256 counts
+    assert got.min() >= 0 and got.max() <= SP.dim
+    # self-agreement stays within half an ADC step per partial count
+    # (2 row tiles x 2 banks, step = rows / 15 at 4 bits)
+    step = 256 / 15
+    assert np.diag(got[:7]).min() >= SP.dim - 4 * (step / 2) - 1
+
+
+# -- seeded determinism of the noisy path ----------------------------------
+
+def test_noisy_path_is_deterministic_per_seed(packed):
+    q, protos, a_ref = packed
+    cfg = _config().with_options(preset="pcm", seed=11)
+    a1 = np.asarray(resolve_backend("pcm_sim", cfg).agreement(q, protos))
+    a2 = np.asarray(resolve_backend("pcm_sim", cfg).agreement(q, protos))
+    np.testing.assert_array_equal(a1, a2)
+    assert not np.array_equal(a1, a_ref)            # noise really applied
+    a3 = np.asarray(resolve_backend(
+        "pcm_sim", _config().with_options(preset="pcm", seed=12)
+    ).agreement(q, protos))
+    assert not np.array_equal(a1, a3)               # seed is load-bearing
+
+
+def test_read_noise_keyed_by_batch_content(packed):
+    """The read-event key folds in a batch digest: replaying a batch
+    reproduces its noise exactly, while the same query read in a different
+    batch context draws a fresh noise sample."""
+    q, protos, _ = packed
+    be = resolve_backend("pcm_sim", _config().with_options(read_sigma=0.5))
+    a_first = np.asarray(be.agreement(q, protos))
+    a_again = np.asarray(be.agreement(q, protos))
+    np.testing.assert_array_equal(a_first, a_again)     # replay == replay
+    a_sub = np.asarray(be.agreement(q[:8], protos))     # different digest
+    assert not np.array_equal(a_sub, a_first[:8])
+
+
+def test_stuck_on_saturates_agreement(packed):
+    """All cells pinned ON: both banks read back their full active-row
+    count, so every agreement clips to exactly dim."""
+    q, protos, _ = packed
+    be = resolve_backend("pcm_sim", _config().with_options(stuck_on_rate=1.0))
+    np.testing.assert_array_equal(np.asarray(be.agreement(q, protos)),
+                                  np.full((16, 7), SP.dim, np.int32))
+
+
+def test_uncalibrated_drift_reads_low(packed):
+    q, protos, a_ref = packed
+    be = resolve_backend("pcm_sim", _config().with_options(
+        drift_nu=0.05, drift_t_s=86_400.0, drift_calibration=0.0))
+    got = np.asarray(be.agreement(q, protos))
+    assert got.mean() < a_ref.mean() * 0.75
+    # perfect calibration restores bit-exactness
+    be2 = resolve_backend("pcm_sim", _config().with_options(
+        drift_nu=0.05, drift_t_s=86_400.0, drift_calibration=1.0))
+    np.testing.assert_array_equal(np.asarray(be2.agreement(q, protos)),
+                                  a_ref)
+
+
+# -- backend_options plumbing ----------------------------------------------
+
+def test_options_canonicalized_and_hashable():
+    cfg = _config(backend_options={"read_sigma": 0.1, "adc_bits": 8})
+    assert cfg.backend_options == (("adc_bits", 8), ("read_sigma", 0.1))
+    assert hash(cfg) == hash(_config(
+        backend_options=[("read_sigma", 0.1), ("adc_bits", 8)]))
+    assert cfg.options == {"adc_bits": 8, "read_sigma": 0.1}
+
+
+def test_options_json_roundtrip_and_fingerprint():
+    cfg = _config(backend_options={"preset": "pcm", "seed": 3})
+    back = ProfilerConfig.from_json(cfg.to_json())
+    assert back == cfg
+    assert cfg.fingerprint() != _config().fingerprint()
+    # options are a host/substrate knob: the RefDB cache key ignores them
+    assert cfg.refdb_fingerprint() == _config().refdb_fingerprint()
+
+
+def test_with_options_merges():
+    cfg = _config(backend_options={"read_sigma": 0.1})
+    out = cfg.with_options(prog_sigma=0.2, read_sigma=0.3)
+    assert out.options == {"read_sigma": 0.3, "prog_sigma": 0.2}
+
+
+def test_invalid_options_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        _config(backend_options=[("a", 1), ("a", 2)])
+    with pytest.raises(ValueError, match="JSON primitive"):
+        _config(backend_options={"a": [1, 2]})
+    with pytest.raises(ValueError, match="non-empty string"):
+        _config(backend_options={"": 1})
+
+
+def test_unknown_pcm_option_and_preset_rejected():
+    with pytest.raises(ValueError, match="unknown pcm_sim option"):
+        resolve_backend("pcm_sim", _config().with_options(nonsense=1))
+    with pytest.raises(ValueError, match="unknown pcm_sim preset"):
+        resolve_backend("pcm_sim", _config().with_options(preset="tpu"))
+
+
+def test_mistyped_option_values_rejected():
+    """CLI typos (e.g. --backend-option rows=abc) must surface as
+    ValueErrors naming the option, not tracebacks from inside jax."""
+    with pytest.raises(ValueError, match="'rows' must be an integer"):
+        resolve_backend("pcm_sim", _config().with_options(rows="abc"))
+    with pytest.raises(ValueError, match="'seed' must be an integer"):
+        resolve_backend("pcm_sim", _config().with_options(seed=1.5))
+    with pytest.raises(ValueError, match="'read_sigma' must be a number"):
+        resolve_backend("pcm_sim", _config().with_options(read_sigma="x"))
+
+
+def test_prototypes_programmed_once_per_array(packed):
+    """Write-once discipline: repeated agreement calls against the same
+    prototype array must not reprogram the conductance banks."""
+    q, protos, a_ref = packed
+    be = resolve_backend("pcm_sim", _config())
+    calls = []
+    real = be._program
+    be._program = lambda p: (calls.append(1), real(p))[1]
+    for _ in range(3):
+        np.testing.assert_array_equal(np.asarray(be.agreement(q, protos)),
+                                      a_ref)
+    assert len(calls) == 1
+    be.agreement(q, protos[:3].copy())      # new array object: reprograms
+    assert len(calls) == 2
+
+
+def test_device_config_validation():
+    with pytest.raises(ValueError):
+        DeviceConfig(g_on_us=1.0, g_off_us=2.0)
+    with pytest.raises(ValueError):
+        DeviceConfig(prog_sigma=-0.1)
+    with pytest.raises(ValueError):
+        DeviceConfig(stuck_on_rate=0.7, stuck_off_rate=0.7)
+    with pytest.raises(ValueError):
+        CrossbarConfig(adc_bits=0)
+    assert DeviceConfig().is_ideal
+    assert not DeviceConfig.pcm().is_ideal
+
+
+# -- ADC model --------------------------------------------------------------
+
+def test_adc_lossless_is_identity_on_counts():
+    import jax.numpy as jnp
+    cfg = CrossbarConfig(rows=256, adc_bits=9)
+    assert cfg.lossless
+    counts = jnp.arange(257.0)
+    np.testing.assert_array_equal(np.asarray(adc_quantize(counts, cfg)),
+                                  np.asarray(counts))
+
+
+def test_adc_lossy_snaps_to_grid():
+    import jax.numpy as jnp
+    cfg = CrossbarConfig(rows=256, adc_bits=4)
+    assert not cfg.lossless
+    out = np.asarray(adc_quantize(jnp.arange(257.0), cfg))
+    assert len(np.unique(out)) <= 16
+
+
+# -- cost model -------------------------------------------------------------
+
+def test_cost_model_breakdown_consistent():
+    c = accel_cost(num_protos=100, dim=2048, read_len=150, ngram=16,
+                   xcfg=CrossbarConfig(rows=256, cols=256))
+    assert c.num_arrays == 2 * 8 * 1                # ceil ratios, two banks
+    assert c.total_pj == pytest.approx(
+        sum(pj for _, pj, _ in c.energy_rows()))
+    assert sum(pct for _, _, pct in c.energy_rows()) == pytest.approx(100.0)
+    assert c.total_area_mm2 > 0 and c.latency_ns > 0
+    assert c.mbp_per_joule(150) > 0
+    # more prototypes -> more arrays, more energy
+    c2 = accel_cost(num_protos=1000, dim=2048, read_len=150, ngram=16)
+    assert c2.num_arrays > c.num_arrays
+    assert c2.total_pj > c.total_pj
+
+
+# -- sweep harness ----------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_community():
+    spec = synth.CommunitySpec(num_species=3, genome_len=4_000, seed=5)
+    genomes = synth.make_reference_genomes(spec)
+    ab = np.array([0.5, 0.5, 0.0])
+    toks, lens, _ = synth.sample_reads(genomes, ab, 64, spec)
+    return genomes, toks, lens, ab
+
+
+def test_noise_sweep_zero_level_matches_reference(tiny_community):
+    genomes, toks, lens, ab = tiny_community
+    points = noise_sweep(genomes, toks, lens, ab, config=_config(),
+                         knob="read_sigma", levels=(0.0, 0.3))
+    assert [p.value for p in points] == [0.0, 0.3]
+
+    ref = ProfilingSession(_config(backend="reference"))
+    ref.build_refdb(genomes)
+    rep = ref.profile(ArraySource(toks, lens))
+    np.testing.assert_array_equal(points[0].report.abundance, rep.abundance)
+    assert 0.0 <= points[0].metrics.precision <= 1.0
+    assert 0.0 <= points[0].unmapped_frac <= 1.0
+
+
+def test_noise_sweep_rejects_unknown_knob(tiny_community):
+    genomes, toks, lens, ab = tiny_community
+    with pytest.raises(ValueError, match="unknown sweep knob"):
+        noise_sweep(genomes, toks, lens, ab, config=_config(),
+                    knob="voltage", levels=(1.0,))
