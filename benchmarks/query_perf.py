@@ -25,13 +25,14 @@ def run(community=None, emit=common.emit, sample: str = "kylo") -> dict:
             db = prof.build_refdb(community.genomes)
             batch = prof.config.batch_size
             # warmup (compile)
-            q = prof.encode_reads(toks[:batch], lens[:batch])
-            prof.classify_batch(q, db).scores.block_until_ready()
+            res = prof.classify_batch(toks[:batch], lens[:batch], refdb=db)
+            res.classification.scores.block_until_ready()
 
             def job():
                 for b in ArraySource(toks, lens).batches(batch):
-                    q = prof.encode_reads(b.tokens, b.lengths)
-                    prof.classify_batch(q, db).scores.block_until_ready()
+                    r = prof.classify_batch(b.tokens, b.lengths, refdb=db,
+                                            num_valid=b.num_valid)
+                    r.classification.scores.block_until_ready()
             secs, _ = common.timeit(job)
         else:
             prof.build(community.genomes)

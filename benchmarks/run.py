@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV (see benchmarks.common.emit).
   acc_perf    Fig 12/13 accelerated (TPU-model) query time/throughput
   energy      Table 3   energy breakdown + Mbp/J
   accel_sim   §5/Table 3 PCM-substrate noise sweep + analytical cost model
+  serve_perf  §1 system   ProfilingService reads/s + p50/p99 request latency
   roofline    §Roofline three-term analysis from dry-run artifacts
 """
 
@@ -17,7 +18,7 @@ from __future__ import annotations
 import sys
 
 from benchmarks import (accel_sim, accuracy, acc_perf, build_time, common,
-                        energy, memory, query_perf, roofline)
+                        energy, memory, query_perf, roofline, serve_perf)
 
 
 def main() -> None:
@@ -43,6 +44,8 @@ def main() -> None:
         energy.run(community)
     if want("accel_sim"):
         accel_sim.run(community)
+    if want("serve_perf"):
+        serve_perf.run(community)
     if want("roofline"):
         roofline.run()
 

@@ -1,0 +1,118 @@
+"""Serving benchmark: sustained reads/s + request latency through the
+ProfilingService, vs cohort batch size and backend.
+
+The paper's system framing (real-time food monitoring under heavy query
+load) measured at the serving seam: many concurrent requests over one
+shared RefDB, reads interleaved into fixed-shape cohorts.  Emits, per
+``(backend, batch_size)`` cell:
+
+  serve.{backend}.bs{B}.reads_per_s   sustained classified reads/s
+  serve.{backend}.bs{B}.p50_ms        median request latency
+  serve.{backend}.bs{B}.p99_ms        tail request latency
+
+``--smoke`` shrinks the community, request count, and sweep so CI runs
+the full admit/interleave/demux cycle in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import HDSpace
+from repro.genomics import synth
+from repro.pipeline import ArraySource, ProfilerConfig, ProfilingSession
+from repro.serve import ProfilingService
+
+SMOKE_SPACE = HDSpace(dim=512, ngram=8, z_threshold=3.0)
+
+
+def _serve_cell(config: ProfilerConfig, refdb, sources, *,
+                max_active: int) -> dict:
+    """One (backend, batch) measurement: submit all, pump, collect stats."""
+    session = ProfilingSession(config)
+    session.refdb = refdb                 # shared database: built once
+    service = ProfilingService(session, max_active=max_active,
+                               max_queue=len(sources))
+    # warmup: compile the cohort shapes on a throwaway request
+    service.submit(sources[0])
+    service.run_until_idle()
+    service.reads_classified = 0
+
+    handles = [service.submit(s) for s in sources]
+    t0 = time.perf_counter()
+    service.run_until_idle()
+    wall = time.perf_counter() - t0
+    reports = [h.result(timeout=0) for h in handles]
+    lat_ms = [h.latency_s * 1e3 for h in handles]
+    reads = sum(r.total_reads for r in reports)
+    return {"reads_per_s": reads / max(wall, 1e-9),
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99))}
+
+
+def run(community=None, emit=common.emit, *, smoke: bool = False) -> dict:
+    if smoke:
+        spec = synth.CommunitySpec(num_species=4, genome_len=8_000, seed=13)
+        genomes = synth.make_reference_genomes(spec)
+        ab = np.full(4, 0.25)
+        toks, lens, _ = synth.sample_reads(genomes, ab, 384, spec)
+        base = ProfilerConfig(space=SMOKE_SPACE, window=1024, batch_size=32)
+        cells = {"reference": (32,)}
+        read_cap = {}
+        num_requests, max_active = 8, 4
+    else:
+        community = community or common.afs_small()
+        genomes = community.genomes
+        toks, lens, *_ = community.samples["kylo"]
+        base = common.BENCH_CONFIG
+        # Pallas interpret mode on CPU is ~100ms/read at bench dims: one
+        # read-capped cell keeps the kernel path measured without turning
+        # the sweep into minutes (real TPU runs lift the cap).
+        cells = {"reference": (64, 256, 1024),
+                 "reference_packed": (64, 256, 1024),
+                 "pallas_matmul": (256,)}
+        read_cap = {"pallas_matmul": 256}
+        num_requests, max_active = 16, 8
+
+    builder = ProfilingSession(dataclasses.replace(base, backend="reference"))
+    refdb = builder.build_refdb(genomes)
+
+    def make_sources(cap: int | None):
+        t = toks if cap is None else toks[:cap]
+        l = lens if cap is None else lens[:cap]
+        return [ArraySource(t[i::num_requests], l[i::num_requests])
+                for i in range(num_requests)]
+
+    out: dict = {}
+    for backend, batch_sizes in cells.items():
+        sources = make_sources(read_cap.get(backend))
+        for bs in batch_sizes:
+            config = dataclasses.replace(base, backend=backend,
+                                         batch_size=bs)
+            cell = _serve_cell(config, refdb, sources,
+                               max_active=max_active)
+            out[(backend, bs)] = cell
+            tag = f"serve.{backend}.bs{bs}"
+            emit(f"{tag}.reads_per_s", cell["reads_per_s"],
+                 f"{num_requests}req/{max_active}active")
+            emit(f"{tag}.p50_ms", cell["p50_ms"],
+                 f"p99={cell['p99_ms']:.1f}ms")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny community + single cell (CI-sized)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,9 @@
 """Serve a small LM with batched requests (prefill + lockstep decode).
 
+LEGACY: this exercises the seed repo's LM serving stack.  The
+profiler-first serving path — the one new work targets — is
+``python -m repro.launch.serve_profiler`` (see docs/API.md "Serving").
+
     PYTHONPATH=src python examples/serve_lm.py
 """
 

@@ -88,7 +88,7 @@ class Demeter:
 
     # -- Step 4 ------------------------------------------------------------
     def classify_batch(self, refdb: RefDB, queries: jax.Array):
-        return self._session.classify_batch(queries, refdb)
+        return self._session.classify_queries(queries, refdb)
 
     # -- Steps 3+4+5 streamed ----------------------------------------------
     def profile(self, refdb: RefDB,

@@ -54,6 +54,8 @@ def iter_fastq(path: str | pathlib.Path, read_len: int
             header = f.readline()
             if not header:
                 return
+            if not header.strip():
+                continue    # blank line (e.g. trailing newline), not a record
             seq = f.readline().strip()
             f.readline()  # '+'
             f.readline()  # quals

@@ -15,6 +15,7 @@ read conversion + classification (steps 3-4), abundance (step 5).
 from __future__ import annotations
 
 import argparse
+import pathlib
 import time
 
 from repro.core import HDSpace
@@ -26,7 +27,8 @@ from repro.pipeline import (ArraySource, FastqSource, ProfilerConfig,
 
 
 def profile(genomes: dict, source: ReadSource | tuple, *,
-            config: ProfilerConfig, cache_dir: str | None = None):
+            config: ProfilerConfig, cache_dir: str | None = None,
+            json_path: str | None = None):
     """Build-or-load the RefDB for ``config`` and profile ``source``."""
     session = ProfilingSession(config)
 
@@ -51,6 +53,13 @@ def profile(genomes: dict, source: ReadSource | tuple, *,
     for name, ab in rep.top(12):
         if ab > 0.001:
             print(f"  {name:24s} {100 * ab:6.2f}%")
+    if json_path is not None:
+        # The same machine-readable artifact ProfilingService snapshots
+        # emit: one ProfileReport JSON (round-trips via from_json).
+        p = pathlib.Path(json_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(rep.to_json(indent=2))
+        print(f"\nwrote report JSON to {p}")
     return rep
 
 
@@ -83,6 +92,9 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--read-len", type=int, default=150)
     ap.add_argument("--cache-dir", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the ProfileReport as JSON (the same "
+                         "artifact ProfilingService snapshots emit)")
     ap.add_argument("--backend", default="reference",
                     help="execution backend, one of the registered names "
                          "(see --list-backends; Pallas backends run in "
@@ -120,13 +132,13 @@ def main() -> None:
         genomes, toks, lens, truth, true_ab = synth.make_sample(
             spec, num_reads=2_000)
         rep = profile(genomes, ArraySource(toks, lens), config=config,
-                      cache_dir=args.cache_dir)
+                      cache_dir=args.cache_dir, json_path=args.json)
         m = score_profile(rep.abundance, true_ab)
         print(f"\nvs ground truth: {m.row()}")
         return
     genomes = fasta.read_fasta(args.ref)
     profile(genomes, FastqSource(args.sample, args.read_len),
-            config=config, cache_dir=args.cache_dir)
+            config=config, cache_dir=args.cache_dir, json_path=args.json)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,8 @@
-"""Batched serving driver: cohort scheduler over prefill/decode steps.
+"""Batched LM serving driver: cohort scheduler over prefill/decode steps.
+
+LEGACY: kept working for the seed repo's LM stack; the profiler-first
+serving entry point is ``repro.launch.serve_profiler`` (docs/API.md
+"Serving").
 
     python -m repro.launch.serve --arch stablelm-3b --requests 8 --steps 16
 

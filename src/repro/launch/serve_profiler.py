@@ -1,0 +1,150 @@
+"""Profiler serving driver: request-rate / latency harness for the service.
+
+    python -m repro.launch.serve_profiler --requests 16 --rate 20
+    python -m repro.launch.serve_profiler --smoke
+    python -m repro.launch.serve_profiler --backend pallas_matmul --json out/
+
+Builds one shared RefDB from a synthetic food community, starts a
+:class:`~repro.serve.profiler_service.ProfilingService` with a background
+worker, submits many concurrent profiling requests at a target rate
+(each request a disjoint slice of sample reads), and reports sustained
+throughput plus p50/p99 request latency.  With ``--check`` each
+per-request report is verified bit-identical to a sequential
+``ProfilingSession.profile()`` run of the same reads — the serving
+layer's correctness contract, live in the driver.
+
+``--smoke`` shrinks everything so CI can run the full
+submit/interleave/stream/finalize cycle in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import HDSpace
+from repro.genomics import synth
+from repro.pipeline import (ArraySource, ProfilerConfig, ProfilingSession,
+                            available_backends)
+from repro.serve import ProfilingService
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def drive(*, config: ProfilerConfig, num_species: int, genome_len: int,
+          num_requests: int, reads_per_request: int, rate_hz: float,
+          max_active: int = 8, check: bool = False,
+          json_dir: str | None = None) -> dict:
+    """Run the rate-driven serving experiment; returns the summary dict."""
+    spec = synth.CommunitySpec(num_species=num_species,
+                               genome_len=genome_len, seed=7)
+    genomes, toks, lens, _, _ = synth.make_sample(
+        spec, num_reads=num_requests * reads_per_request)
+
+    session = ProfilingSession(config)
+    t0 = time.perf_counter()
+    session.build_refdb(genomes)
+    t_build = time.perf_counter() - t0
+    print(f"backend {config.backend} | RefDB build {t_build:.2f}s "
+          f"({session.refdb.num_prototypes} prototypes, shared by "
+          f"{num_requests} requests)")
+
+    # Each request profiles its own disjoint slice of the sample.
+    sources = [ArraySource(toks[i::num_requests], lens[i::num_requests])
+               for i in range(num_requests)]
+
+    service = ProfilingService(session, max_active=max_active,
+                               max_queue=max(num_requests, 1))
+    handles = []
+    t0 = time.perf_counter()
+    with service:
+        for i, src in enumerate(sources):
+            if rate_hz > 0 and i:
+                # open-loop arrivals: steady 1/rate spacing from t0
+                time.sleep(max(0.0, t0 + i / rate_hz - time.perf_counter()))
+            handles.append(service.submit(src, request_id=f"req-{i}"))
+        reports = [h.result(timeout=600) for h in handles]
+    wall = time.perf_counter() - t0
+
+    lat = [h.latency_s for h in handles]
+    total_reads = sum(r.total_reads for r in reports)
+    summary = {
+        "backend": config.backend,
+        "requests": num_requests,
+        "reads": total_reads,
+        "wall_s": wall,
+        "reads_per_s": total_reads / max(wall, 1e-9),
+        "p50_ms": _percentile(lat, 50) * 1e3,
+        "p99_ms": _percentile(lat, 99) * 1e3,
+        "cohorts": service.cohorts_run,
+    }
+    print(f"{num_requests} requests x {reads_per_request} reads in "
+          f"{wall:.2f}s | {summary['reads_per_s']:.0f} reads/s | "
+          f"latency p50 {summary['p50_ms']:.0f}ms "
+          f"p99 {summary['p99_ms']:.0f}ms | {service.cohorts_run} cohorts")
+
+    if json_dir is not None:
+        out = pathlib.Path(json_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        for h, rep in zip(handles, reports):
+            (out / f"{h.request_id}.json").write_text(rep.to_json(indent=2))
+        print(f"wrote {len(reports)} report snapshots to {out}/")
+
+    if check:
+        for h, src, rep in zip(handles, sources, reports):
+            want = session.profile(src)
+            np.testing.assert_array_equal(rep.abundance, want.abundance)
+            assert rep.to_json() == want.to_json(), h.request_id
+        print(f"check OK: all {num_requests} reports bit-identical to "
+              f"sequential ProfilingSession.profile() runs")
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--reads-per-request", type=int, default=512)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="request arrival rate in req/s (0 = all at once)")
+    ap.add_argument("--max-active", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=4096)
+    ap.add_argument("--ngram", type=int, default=16)
+    ap.add_argument("--window", type=int, default=4096)
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--species", type=int, default=8)
+    ap.add_argument("--genome-len", type=int, default=40_000)
+    ap.add_argument("--backend", default="reference",
+                    choices=available_backends())
+    ap.add_argument("--check", action="store_true",
+                    help="verify each report against a sequential run")
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="write each request's ProfileReport JSON here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run (implies --check)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        config = ProfilerConfig(
+            space=HDSpace(dim=512, ngram=8, z_threshold=3.0),
+            window=1024, batch_size=32, backend=args.backend)
+        drive(config=config, num_species=4, genome_len=8_000,
+              num_requests=8, reads_per_request=48, rate_hz=0.0,
+              max_active=4, check=True, json_dir=args.json)
+        return
+    config = ProfilerConfig(
+        space=HDSpace(dim=args.dim, ngram=args.ngram),
+        window=args.window, batch_size=args.batch_size,
+        backend=args.backend)
+    drive(config=config, num_species=args.species,
+          genome_len=args.genome_len, num_requests=args.requests,
+          reads_per_request=args.reads_per_request, rate_hz=args.rate,
+          max_active=args.max_active, check=args.check, json_dir=args.json)
+
+
+if __name__ == "__main__":
+    main()

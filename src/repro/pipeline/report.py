@@ -15,6 +15,7 @@ by both ``repro.core`` and ``repro.pipeline`` without creating a cycle.
 from __future__ import annotations
 
 import dataclasses
+import json
 
 import numpy as np
 
@@ -33,6 +34,39 @@ class ProfileReport:
     def top(self, k: int = 10) -> list[tuple[str, float]]:
         order = np.argsort(-self.abundance)[:k]
         return [(self.species_names[i], float(self.abundance[i])) for i in order]
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-primitive dict: the machine-readable run artifact shared by
+        ``profile_run --json`` and ``ProfilingService`` report snapshots."""
+        return {
+            "species_names": list(self.species_names),
+            "abundance": [float(x) for x in self.abundance],
+            "unique_counts": [int(x) for x in self.unique_counts],
+            "multi_counts": [float(x) for x in self.multi_counts],
+            "total_reads": int(self.total_reads),
+            "unmapped_reads": int(self.unmapped_reads),
+            "multi_reads": int(self.multi_reads),
+        }
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ProfileReport":
+        return cls(
+            species_names=tuple(d["species_names"]),
+            abundance=np.asarray(d["abundance"], np.float64),
+            unique_counts=np.asarray(d["unique_counts"], np.int64),
+            multi_counts=np.asarray(d["multi_counts"], np.float64),
+            total_reads=int(d["total_reads"]),
+            unmapped_reads=int(d["unmapped_reads"]),
+            multi_reads=int(d["multi_reads"]),
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "ProfileReport":
+        return cls.from_dict(json.loads(s))
 
 
 class ProfileAccumulator:
@@ -69,18 +103,28 @@ class ProfileAccumulator:
 
     def finalize(self, genome_lengths: np.ndarray,
                  species_names: tuple[str, ...]) -> ProfileReport:
-        """Split multi-mapped reads with the global unique rates and report."""
+        """Split multi-mapped reads with the global unique rates and report.
+
+        Non-destructive: may be called repeatedly as the stream grows (the
+        serving layer snapshots in-flight requests this way).  All retained
+        multi-read rows are concatenated into one pass so the result
+        depends only on the multi reads and their order — never on how the
+        stream happened to be cut into batches (a service interleaving a
+        request's reads into shared cohorts reproduces a sequential run's
+        report bit-for-bit).
+        """
         s = self.num_species
         lens = np.maximum(np.asarray(genome_lengths, np.float64), 1.0)
         rate = self.unique_counts / lens
         multi_counts = np.zeros(s, np.float64)
-        for packed in self._multi_hit_rows:
+        if self._multi_hit_rows:
+            packed = np.concatenate(self._multi_hit_rows, axis=0)
             m = np.unpackbits(packed, axis=-1, count=s).astype(bool)
             w = m * rate[None, :]
             mass = w.sum(axis=-1, keepdims=True)
             uniform = m / np.maximum(m.sum(axis=-1, keepdims=True), 1)
             w = np.where(mass > 0, w / np.maximum(mass, 1e-30), uniform)
-            multi_counts += w.sum(axis=0)
+            multi_counts = w.sum(axis=0)
 
         mapped = self.unique_counts + multi_counts
         denom = max(mapped.sum(), 1e-30)

@@ -119,16 +119,39 @@ class ProfilingSession:
         return self.backend.encode(jnp.asarray(tokens), jnp.asarray(lengths))
 
     # -- Step 4 ------------------------------------------------------------
-    def _classify(self, queries: jax.Array, refdb: RefDB
-                  ) -> classifier.ReadClassification:
-        agree = self.backend.agreement(queries, refdb.prototypes)
+    def classify_queries(self, queries: jax.Array, refdb: RefDB | None = None
+                         ) -> classifier.ReadClassification:
+        """AM search + threshold over pre-encoded ``(B, W)`` query vectors."""
+        db = self._require_refdb(refdb)
+        agree = self.backend.agreement(queries, db.prototypes)
         return self._from_agreement(
-            agree, refdb.proto_species, num_species=refdb.num_species,
+            agree, db.proto_species, num_species=db.num_species,
             threshold_bits=self.space.threshold_bits)
 
-    def classify_batch(self, queries: jax.Array, refdb: RefDB | None = None
-                       ) -> classifier.ReadClassification:
-        return self._classify(queries, self._require_refdb(refdb))
+    # -- Steps 3+4: the step-level serving primitive -----------------------
+    def classify_batch(self, tokens, lengths, *, refdb: RefDB | None = None,
+                       num_valid: int | None = None, index: int = 0
+                       ) -> BatchResult:
+        """Encode + classify one read batch: the shared hot-path step.
+
+        This is the single place steps 3 and 4 are glued together; both
+        :meth:`profile` and the serving layer
+        (:class:`repro.serve.profiler_service.ProfilingService`) drive it,
+        so any backend, kernel, or dispatch change lands in both paths at
+        once.
+
+        Args:
+          tokens: ``(B, L)`` int32 padded read tokens.
+          lengths: ``(B,)`` int32 true read lengths (0 for padding rows).
+          refdb: database to query; defaults to the session's own.
+          num_valid: how many leading rows are real reads (default: all).
+          index: stream position recorded on the :class:`BatchResult`.
+        """
+        q = self.encode_reads(tokens, lengths)
+        res = self.classify_queries(q, refdb)
+        n = len(q) if num_valid is None else num_valid
+        return BatchResult(index=index, queries=q, classification=res,
+                           num_valid=n)
 
     # -- Steps 3+4+5 streamed ----------------------------------------------
     def profile(self, source, *, refdb: RefDB | None = None,
@@ -150,13 +173,13 @@ class ProfilingSession:
         stream = prefetch(as_source(source).batches(self.config.batch_size),
                           prefetch_depth)
         for i, batch in enumerate(stream):
-            q = self.encode_reads(batch.tokens, batch.lengths)
-            res = self.classify_batch(q, db)
-            n = batch.num_valid
-            acc.add(np.asarray(res.hits)[:n], np.asarray(res.category)[:n])
+            res = self.classify_batch(batch.tokens, batch.lengths, refdb=db,
+                                      num_valid=batch.num_valid, index=i)
+            n = res.num_valid
+            acc.add(np.asarray(res.classification.hits)[:n],
+                    np.asarray(res.classification.category)[:n])
             if on_batch is not None:
-                on_batch(BatchResult(index=i, queries=q, classification=res,
-                                     num_valid=n))
+                on_batch(res)
         return acc.finalize(np.asarray(db.genome_lengths), db.species_names)
 
     # ----------------------------------------------------------------------

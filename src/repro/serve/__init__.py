@@ -1,1 +1,20 @@
-"""Serving substrate: prefill/decode steps, sampling, request batching."""
+"""Serving layer: the profiler-first service plus the legacy LM stack.
+
+New serving work goes through :class:`ProfilingService`
+(:mod:`repro.serve.profiler_service`) on top of the generic
+:class:`FixedShapeScheduler` (:mod:`repro.serve.scheduler`).  The LM
+prefill/decode modules (:mod:`repro.serve.serve_step`,
+:mod:`repro.serve.batching`) are the seed repo's stack, kept working as
+legacy entry points.
+"""
+
+from repro.serve.scheduler import Cohort, FixedShapeScheduler, pow2_buckets
+from repro.serve.profiler_service import (ProfileHandle, ProfileRequest,
+                                          ProfilingService, RequestState,
+                                          ServiceOverloaded)
+
+__all__ = [
+    "Cohort", "FixedShapeScheduler", "pow2_buckets",
+    "ProfileHandle", "ProfileRequest", "ProfilingService", "RequestState",
+    "ServiceOverloaded",
+]

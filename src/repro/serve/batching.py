@@ -1,4 +1,4 @@
-"""Cohort-based continuous batching for the decode loop.
+"""Cohort-based continuous batching for the LM decode loop (legacy path).
 
 Fixed-shape serving: requests are admitted into a cohort of ``slots``
 (jit caches one shape); each slot decodes in lockstep; finished slots
@@ -9,18 +9,29 @@ built into the caches (a slot's stale entries carry kpos > its reset
 point and are masked by ``kpos <= cur_pos`` only after overwrite —
 freshly admitted slots therefore start from a zeroed kpos region).
 
+Admission (FIFO grouping into ``slots``-sized cohorts, choice of padded
+prompt length) is delegated to the generic
+:class:`repro.serve.scheduler.FixedShapeScheduler`; this module keeps
+only the LM-specific lockstep decode.  By default cohorts pad to their
+exact prompt max (the historical behavior); pass ``buckets=`` to bound
+the prefill shape set instead.
+
 This is deliberately simple (cohort granularity, no paged attention);
-the dry-run's decode_32k cell is one production cohort.
+the dry-run's decode_32k cell is one production cohort.  New serving
+work targets the profiler service in
+:mod:`repro.serve.profiler_service`, not this loop.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterator
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.scheduler import FixedShapeScheduler
 
 
 @dataclasses.dataclass
@@ -37,31 +48,39 @@ class CohortScheduler:
 
     def __init__(self, *, slots: int, max_len: int,
                  prefill_fn: Callable, decode_fn: Callable,
-                 sample_fn: Callable, eos_id: int | None = None):
-        self.slots = slots
+                 sample_fn: Callable, eos_id: int | None = None,
+                 buckets: Sequence[int] | None = None):
+        """``buckets`` bounds the prefill shape set, at a cost: prompts
+        are LEFT-padded to the bucket, and padded positions physically
+        occupy cache slots, so a cohort's decode budget becomes
+        ``max_len - bucket`` rather than ``max_len - true_prompt_max``.
+        Size ``max_len`` with the largest bucket in mind."""
         self.max_len = max_len
         self.prefill = prefill_fn
         self.decode = decode_fn
         self.sample = sample_fn
         self.eos_id = eos_id
-        self.queue: list[Request] = []
+        self._sched: FixedShapeScheduler[Request] = FixedShapeScheduler(
+            slots=slots, buckets=buckets)
         self.finished: list[Request] = []
 
+    @property
+    def slots(self) -> int:
+        return self._sched.slots
+
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self._sched.submit(req, len(req.prompt))
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Serve until queue + cohort drain (cohort-granular admission)."""
-        while self.queue:
-            cohort = [self.queue.pop(0)
-                      for _ in range(min(self.slots, len(self.queue)))]
-            self._run_cohort(cohort, max_steps)
-            self.finished.extend(cohort)
+        while (cohort := self._sched.next_cohort()) is not None:
+            self._run_cohort(list(cohort.items), cohort.length, max_steps)
+            self.finished.extend(cohort.items)
         return self.finished
 
-    def _run_cohort(self, cohort: list[Request], max_steps: int) -> None:
+    def _run_cohort(self, cohort: list[Request], plen: int,
+                    max_steps: int) -> None:
         b = len(cohort)
-        plen = max(len(r.prompt) for r in cohort)
         prompts = np.zeros((b, plen), np.int32)
         for i, r in enumerate(cohort):
             prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad

@@ -1,0 +1,494 @@
+"""`ProfilingService`: the profiler-first serving front door.
+
+The paper frames Demeter as the engine of a real-time food monitoring
+system: one expensive reference database, many cheap concurrent queries.
+This module is that shape as an API.  A service owns **one** shared
+RefDB + backend (a :class:`~repro.pipeline.session.ProfilingSession`) and
+admits many concurrent :class:`ProfileRequest` s, each wrapping its own
+:class:`~repro.pipeline.source.ReadSource`:
+
+    service = ProfilingService(session)           # session has a RefDB
+    with service:                                 # background worker
+        h1 = service.submit(FastqSource("a.fastq"))
+        h2 = service.submit(FastqSource("b.fastq"))
+        partial = h1.snapshot()                   # streaming report
+        report = h1.result(timeout=60)            # final ProfileReport
+
+Requests' reads are interleaved into fixed-shape cohorts through the
+generic :class:`~repro.serve.scheduler.FixedShapeScheduler` (rows =
+``config.batch_size``, read length padded to a bounded bucket set), run
+through the session's single hot-path primitive
+:meth:`~repro.pipeline.session.ProfilingSession.classify_batch`, and the
+resulting rows are demultiplexed into per-request streaming
+:class:`~repro.pipeline.report.ProfileAccumulator` s.
+
+**Bit-exactness contract**: a request's final report equals a sequential
+``ProfilingSession.profile(source)`` run of the same reads, bit for bit,
+on every backend.  This holds because (a) the scheduler never reorders a
+submitter's items, (b) encode/agreement are row-independent and invariant
+to length padding (the encoder masks by per-row ``lengths``), and (c)
+``ProfileAccumulator.finalize`` is batch-grouping-independent.  The
+parity test in ``tests/test_profiler_service.py`` enforces it.
+
+Lifecycle & backpressure: requests move QUEUED -> RUNNING -> one of
+DONE / CANCELLED / FAILED.  At most ``max_active`` requests interleave at
+once; at most ``max_queue`` more wait in admission.  A ``submit`` beyond
+that raises :class:`ServiceOverloaded` (or blocks when ``block=True``) —
+the backpressure signal a fronting RPC layer turns into HTTP 429/503.
+
+The service is synchronous at heart — :meth:`step` runs one cohort on the
+calling thread — with an optional single background worker
+(:meth:`start`/:meth:`stop`, or the context manager) so callers can
+submit at their own rate.  All jax compute stays on whichever thread
+pumps ``step``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import threading
+import time
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from repro.pipeline.report import ProfileAccumulator, ProfileReport
+from repro.pipeline.session import ProfilingSession
+from repro.pipeline.source import ReadSource, as_source
+from repro.serve.scheduler import Cohort, FixedShapeScheduler, pow2_buckets
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+    CANCELLED = "cancelled"
+    FAILED = "failed"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (RequestState.DONE, RequestState.CANCELLED,
+                        RequestState.FAILED)
+
+
+class ServiceOverloaded(RuntimeError):
+    """Admission queue full: shed load or retry later (HTTP 429 analogue)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileRequest:
+    """One profiling job: a read stream plus bookkeeping identity."""
+    source: ReadSource
+    request_id: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class _Read:
+    """One admitted read row, tagged with its owning request."""
+    handle: "ProfileHandle"
+    tokens: np.ndarray      # (L_request,) int32
+    length: int
+
+
+class ProfileHandle:
+    """Caller-side view of a submitted request (state, snapshots, result)."""
+
+    def __init__(self, service: "ProfilingService", request: ProfileRequest,
+                 request_id: str):
+        self._service = service
+        self.request = request
+        self.request_id = request_id
+        self.state = RequestState.QUEUED
+        self.error: BaseException | None = None
+        self.submitted_at = time.perf_counter()
+        self.started_at: float | None = None
+        self.finished_at: float | None = None
+        self.reads_admitted = 0
+        self.reads_classified = 0
+        self._acc: ProfileAccumulator | None = None
+        self._reads: Iterator[tuple[np.ndarray, int]] | None = None
+        self._exhausted = False
+        self._final: ProfileReport | None = None
+        self._terminal = threading.Event()
+
+    # -- caller API ---------------------------------------------------------
+    def snapshot(self) -> ProfileReport:
+        """Incremental report over the reads classified *so far*.
+
+        Valid in any state (zero-read report while queued); once the
+        request is DONE this is the final report.
+        """
+        with self._service._lock:
+            if self._final is not None:
+                return self._final
+            return self._service._finalize_locked(self)
+
+    def result(self, timeout: float | None = None) -> ProfileReport:
+        """Block until terminal; return the final report.
+
+        Raises TimeoutError on timeout, the request's own error if it
+        FAILED, and RuntimeError if it was CANCELLED.
+        """
+        if not self._terminal.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request_id} still {self.state.value} "
+                f"after {timeout}s")
+        if self.state is RequestState.FAILED:
+            raise self.error  # type: ignore[misc]
+        if self.state is RequestState.CANCELLED:
+            raise RuntimeError(f"request {self.request_id} was cancelled")
+        assert self._final is not None
+        return self._final
+
+    def cancel(self) -> bool:
+        """Cancel the request; True if it was still live.
+
+        Already-classified reads are discarded with the rest: a cancelled
+        request produces no report (``result`` raises).
+        """
+        return self._service._cancel(self)
+
+    @property
+    def done(self) -> bool:
+        return self.state.terminal
+
+    @property
+    def latency_s(self) -> float | None:
+        """Submit-to-terminal wall time, once terminal."""
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+class ProfilingService:
+    """Multi-tenant profiling over one shared RefDB + backend."""
+
+    def __init__(self, session: ProfilingSession, *, max_active: int = 8,
+                 max_queue: int = 64,
+                 buckets: Sequence[int] | None = None):
+        """Args:
+          session: a session whose RefDB is already built/loaded (the one
+            expensive shared structure; requests only read it).
+          max_active: how many requests interleave reads at once.
+          max_queue: bound on requests waiting behind the active set.
+          buckets: allowed read-length paddings for cohort shapes
+            (default: powers of two up to 4096 — a bounded jit cache).
+        """
+        if session.refdb is None:
+            raise ValueError(
+                "session has no RefDB; call build_or_load_refdb() before "
+                "constructing the service (requests share one database)")
+        if max_active < 1 or max_queue < 0:
+            raise ValueError("need max_active >= 1 and max_queue >= 0")
+        self.session = session
+        self.max_active = max_active
+        self.max_queue = max_queue
+        self._sched: FixedShapeScheduler[_Read] = FixedShapeScheduler(
+            slots=session.config.batch_size,
+            buckets=buckets if buckets is not None else pow2_buckets(16, 4096))
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._queued: list[ProfileHandle] = []
+        self._active: list[ProfileHandle] = []
+        self._ids = itertools.count()
+        self._worker: threading.Thread | None = None
+        self._stopping = False
+        self.error: BaseException | None = None
+        self.cohorts_run = 0
+        self.reads_classified = 0
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, request: ProfileRequest | ReadSource | object, *,
+               request_id: str | None = None, block: bool = False,
+               timeout: float | None = None) -> ProfileHandle:
+        """Admit one profiling request; returns its :class:`ProfileHandle`.
+
+        Accepts a :class:`ProfileRequest`, a :class:`ReadSource`, or
+        anything :func:`~repro.pipeline.source.as_source` coerces.  The
+        id precedence is ``request.request_id``, then ``request_id=``,
+        then a generated ``req-N``.  When the admission queue is full,
+        raises :class:`ServiceOverloaded` (``block=False``) or waits up
+        to ``timeout`` for space.
+        """
+        if not isinstance(request, ProfileRequest):
+            request = ProfileRequest(source=as_source(request),
+                                     request_id=request_id)
+        with self._work:
+            if self.error is not None:
+                raise RuntimeError(
+                    "service worker died on an unrecoverable error"
+                ) from self.error
+            deadline = None if timeout is None else time.monotonic() + timeout
+            # The service holds at most max_active + max_queue live
+            # requests; past that, admission is the backpressure point.
+            while len(self._queued) + len(self._active) \
+                    >= self.max_active + self.max_queue:
+                if not block:
+                    raise ServiceOverloaded(
+                        f"admission queue full ({self.max_queue} queued, "
+                        f"{self.max_active} active)")
+                left = None if deadline is None \
+                    else deadline - time.monotonic()
+                if left is not None and left <= 0:
+                    raise TimeoutError("timed out waiting for admission")
+                self._work.wait(left)
+            rid = request.request_id or request_id \
+                or f"req-{next(self._ids)}"
+            handle = ProfileHandle(self, request, rid)
+            self._queued.append(handle)
+            self._work.notify_all()
+            return handle
+
+    # -- the pump -----------------------------------------------------------
+    def step(self) -> bool:
+        """Run one cohort (admit -> classify -> demux); False when idle.
+
+        This is the whole serving hot loop at its smallest granularity;
+        ``run_until_idle`` and the background worker just call it.
+        """
+        with self._lock:
+            self._activate_locked()
+            active = list(self._active)
+            want = self._sched.slots - len(self._sched)
+        # Source iteration (file IO) happens outside the lock — only the
+        # pumping thread touches the iterators, so submissions and
+        # snapshots stay responsive while a slow FASTQ parses.
+        events = self._pull_reads(active, want)
+        with self._lock:
+            self._apply_admission_locked(events)
+            self._finish_exhausted_locked()
+            cohort = self._sched.next_cohort()
+            if cohort is None:
+                return False
+        # Classify outside the lock too: the service stays responsive
+        # while the backend crunches the batch.
+        tokens, lengths, live = self._assemble(cohort)
+        res = self.session.classify_batch(tokens, lengths,
+                                          num_valid=len(live))
+        hits = np.asarray(res.classification.hits)
+        cat = np.asarray(res.classification.category)
+        with self._work:
+            self._demux_locked(live, hits, cat)
+            self.cohorts_run += 1
+            self._finish_exhausted_locked()
+            self._work.notify_all()
+        return True
+
+    def run_until_idle(self) -> None:
+        """Pump cohorts on the calling thread until no work remains."""
+        while True:
+            if self.step():
+                continue
+            with self._lock:
+                if not (self._queued or self._active or len(self._sched)):
+                    return
+
+    # -- background worker --------------------------------------------------
+    def start(self) -> "ProfilingService":
+        """Start the single background worker pumping :meth:`step`."""
+        with self._lock:
+            if self._worker is not None:
+                raise RuntimeError("service already started")
+            self._stopping = False
+            self._worker = threading.Thread(target=self._pump, daemon=True,
+                                            name="profiling-service")
+            self._worker.start()
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: float | None = None
+             ) -> None:
+        """Stop the worker; ``drain=True`` finishes in-flight work first.
+
+        If the worker died on an unrecoverable error, ``service.error``
+        holds it (every live request was FAILED with the same error).
+        """
+        with self._work:
+            if self._worker is None:
+                return
+            if not drain:
+                for h in list(self._queued) + list(self._active):
+                    self._cancel_locked(h)
+            self._stopping = True
+            self._work.notify_all()
+        self._worker.join(timeout)
+        self._worker = None
+
+    def __enter__(self) -> "ProfilingService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=exc == (None, None, None))
+
+    def _pump(self) -> None:
+        while True:
+            try:
+                did = self.step()
+            except BaseException as e:
+                # A failure the per-request isolation could not contain
+                # (e.g. the backend itself died mid-cohort).  Don't die
+                # silently: record it and fail every live request so
+                # result()/blocking submit() callers wake immediately.
+                with self._work:
+                    self.error = e
+                    for h in list(self._active) + list(self._queued):
+                        self._fail_locked(h, e)
+                return
+            with self._work:
+                if not did:
+                    if self._stopping:
+                        return
+                    self._work.wait(0.05)
+
+    # -- internals (all *_locked run under self._lock) ----------------------
+    def _activate_locked(self) -> None:
+        while self._queued and len(self._active) < self.max_active:
+            h = self._queued.pop(0)
+            if h.state is not RequestState.QUEUED:
+                continue                       # cancelled while waiting
+            h.state = RequestState.RUNNING
+            h.started_at = time.perf_counter()
+            h._acc = ProfileAccumulator(self.session.refdb.num_species)
+            h._reads = _iter_reads(h.request.source,
+                                   self.session.config.batch_size)
+            self._active.append(h)
+            self._work.notify_all()
+
+    def _pull_reads(self, active: list[ProfileHandle], want: int
+                    ) -> list[tuple[str, ProfileHandle, object]]:
+        """Round-robin up to ``want`` reads from the active streams.
+
+        Runs WITHOUT the lock (the pump thread owns the iterators); the
+        returned event list is applied under the lock.  A stream that
+        ends, raises, or yields a read longer than the largest bucket
+        produces an event for *its own request only* — failure isolation
+        lives here.
+        """
+        events: list[tuple[str, ProfileHandle, object]] = []
+        live = [h for h in active
+                if not h._exhausted and h.state is RequestState.RUNNING]
+        while want > 0 and live:
+            for h in list(live):
+                try:
+                    tokens, length = next(h._reads)
+                except StopIteration:
+                    events.append(("end", h, None))
+                    live.remove(h)
+                    continue
+                except BaseException as e:
+                    events.append(("fail", h, e))
+                    live.remove(h)
+                    continue
+                length = int(length)
+                try:
+                    self._sched.bucket_for(max(length, 1))
+                except ValueError as e:        # oversize read: fail the
+                    events.append(("fail", h, e))    # one request, not
+                    live.remove(h)                   # the service
+                    continue
+                # Trim to the true length: the row re-pads to the cohort
+                # bucket in _assemble, which may be shorter than the
+                # request's own padded width.
+                row = np.asarray(tokens, np.int32)[:length]
+                events.append(("read", h, (row, length)))
+                want -= 1
+                if want <= 0:
+                    break
+        return events
+
+    def _apply_admission_locked(
+            self, events: list[tuple[str, ProfileHandle, object]]) -> None:
+        for kind, h, payload in events:
+            if kind == "end":
+                h._exhausted = True
+            elif kind == "fail" and not h.state.terminal:
+                self._fail_locked(h, payload)
+            elif kind == "read" and h.state is RequestState.RUNNING:
+                row, length = payload
+                h.reads_admitted += 1
+                self._sched.submit(_Read(h, row, length), length)
+
+    def _assemble(self, cohort: Cohort[_Read]
+                  ) -> tuple[np.ndarray, np.ndarray, list[_Read]]:
+        """Pad cohort rows to the fixed ``(batch_size, bucket)`` shape,
+        dropping rows whose request died after admission."""
+        live = [r for r in cohort.items
+                if r.handle.state is RequestState.RUNNING]
+        b, length = self._sched.slots, cohort.length
+        tokens = np.zeros((b, length), np.int32)
+        lengths = np.zeros(b, np.int32)
+        for i, r in enumerate(live):
+            tokens[i, :len(r.tokens)] = r.tokens
+            lengths[i] = r.length
+        return tokens, lengths, live
+
+    def _demux_locked(self, live: list[_Read], hits: np.ndarray,
+                      cat: np.ndarray) -> None:
+        """Split cohort rows back into per-request accumulators, in order."""
+        per: dict[ProfileHandle, list[int]] = {}
+        for i, r in enumerate(live):
+            if r.handle.state is RequestState.RUNNING:
+                per.setdefault(r.handle, []).append(i)
+        for h, idx in per.items():
+            h._acc.add(hits[idx], cat[idx])
+            h.reads_classified += len(idx)
+            self.reads_classified += len(idx)
+
+    def _finish_exhausted_locked(self) -> None:
+        # classified == admitted implies nothing of this request's is
+        # still buffered in the scheduler (rows only classify after
+        # passing through a cohort, and RUNNING rows are never dropped).
+        for h in list(self._active):
+            if h.state is RequestState.RUNNING and h._exhausted \
+                    and h.reads_classified == h.reads_admitted:
+                h._final = self._finalize_locked(h)
+                self._terminate_locked(h, RequestState.DONE)
+
+    def _finalize_locked(self, h: ProfileHandle) -> ProfileReport:
+        db = self.session.refdb
+        acc = h._acc or ProfileAccumulator(db.num_species)
+        return acc.finalize(np.asarray(db.genome_lengths), db.species_names)
+
+    def _cancel(self, h: ProfileHandle) -> bool:
+        with self._work:
+            out = self._cancel_locked(h)
+            self._work.notify_all()
+            return out
+
+    def _cancel_locked(self, h: ProfileHandle) -> bool:
+        if h.state.terminal:
+            return False
+        self._terminate_locked(h, RequestState.CANCELLED)
+        return True
+
+    def _fail_locked(self, h: ProfileHandle, err: BaseException) -> None:
+        h.error = err
+        self._terminate_locked(h, RequestState.FAILED)
+
+    def _terminate_locked(self, h: ProfileHandle, state: RequestState
+                          ) -> None:
+        h.state = state
+        h.finished_at = time.perf_counter()
+        if h in self._active:
+            self._active.remove(h)
+        if h in self._queued:
+            self._queued.remove(h)
+        close = getattr(h._reads, "close", None)
+        if close is not None:
+            close()
+        h._terminal.set()
+        self._work.notify_all()    # wake blocked submitters: a slot freed
+
+
+def _iter_reads(source: ReadSource, batch_size: int
+                ) -> Iterator[tuple[np.ndarray, int]]:
+    """Flatten a source into single reads, in stream order.
+
+    Iterating ``batches(batch_size)`` with the *session's* batch size
+    means the service sees exactly the rows a sequential
+    ``session.profile(source)`` would — only regrouped into cohorts.
+    """
+    for batch in source.batches(batch_size):
+        for j in range(batch.num_valid):
+            yield batch.tokens[j], int(batch.lengths[j])

@@ -92,6 +92,6 @@ def test_kernel_profiler_integration():
     q0 = s0.encode_reads(toks, lens)
     q1 = s1.encode_reads(toks, lens)
     np.testing.assert_array_equal(np.asarray(q0), np.asarray(q1))
-    r0 = s0.classify_batch(q0, db0)
-    r1 = s1.classify_batch(q1, db1)
+    r0 = s0.classify_queries(q0, db0)
+    r1 = s1.classify_queries(q1, db1)
     np.testing.assert_array_equal(np.asarray(r0.scores), np.asarray(r1.scores))

@@ -270,7 +270,82 @@ def test_prefetch_releases_producer_when_abandoned():
     assert closed == [True]              # source iterator was closed too
 
 
+# -- ReadSource edge cases (the serving layer hits these) ------------------
+
+def test_empty_fastq_yields_zero_read_report(tmp_path):
+    """An empty sample file is a valid (empty) profiling request."""
+    path = tmp_path / "empty.fastq"
+    path.write_text("")
+    genomes = synth.make_reference_genomes(SPEC)
+    s = ProfilingSession(_config())
+    s.build_refdb(genomes)
+    rep = s.profile(FastqSource(path, SPEC.read_len))
+    assert rep.total_reads == rep.unmapped_reads == rep.multi_reads == 0
+    assert float(np.sum(rep.abundance)) == 0.0
+    assert len(rep.top(3)) == 3                  # still well-formed
+
+
+def test_fastq_trailing_blank_lines_add_no_phantom_reads(tmp_path, sample):
+    """A trailing newline must not parse as a zero-length read."""
+    path = tmp_path / "trail.fastq"
+    fasta.write_fastq(path, sample.tokens[:5], sample.lengths[:5])
+    with open(path, "a") as f:
+        f.write("\n\n")
+    toks, lens = fasta.read_fastq(path, SPEC.read_len)
+    assert len(toks) == 5
+    batches = list(FastqSource(path, SPEC.read_len).batches(4))
+    assert sum(b.num_valid for b in batches) == 5
+
+
+def test_final_partial_batch_profiles_cleanly(sample):
+    """A read count not divisible by batch_size pads, never crashes, and
+    padding rows never leak into the report."""
+    s = ProfilingSession(_config())             # batch_size=16
+    s.build_refdb(sample.genomes)
+    n = 21                                      # 16 + 5-row partial tail
+    rep = s.profile(ArraySource(sample.tokens[:n], sample.lengths[:n]))
+    assert rep.total_reads == n
+    full = s.profile(sample)
+    assert full.total_reads == 96
+
+
+# -- ProfileReport serialization -------------------------------------------
+
+def test_profile_report_json_roundtrip(sample):
+    s = ProfilingSession(_config())
+    s.build_refdb(sample.genomes)
+    rep = s.profile(sample)
+    back = type(rep).from_json(rep.to_json(indent=2))
+    for f in dataclasses.fields(rep):
+        np.testing.assert_array_equal(np.asarray(getattr(back, f.name)),
+                                      np.asarray(getattr(rep, f.name)),
+                                      err_msg=f.name)
+    assert back.species_names == rep.species_names
+    assert back.to_json() == rep.to_json()
+
+
 # -- ProfilingSession ------------------------------------------------------
+
+def test_classify_batch_matches_profile_on_every_backend(sample):
+    """The step-level primitive IS the profile() hot path: driving it by
+    hand reproduces profile()'s accumulator inputs bit-exactly, for every
+    registered backend."""
+    from repro.pipeline import ProfileAccumulator
+    for name in available_backends():
+        s = ProfilingSession(_config(backend=name))
+        db = s.build_refdb(sample.genomes)
+        acc = ProfileAccumulator(db.num_species)
+        for i, b in enumerate(sample.batches(s.config.batch_size)):
+            res = s.classify_batch(b.tokens, b.lengths,
+                                   num_valid=b.num_valid, index=i)
+            assert res.index == i and res.num_valid == b.num_valid
+            n = res.num_valid
+            acc.add(np.asarray(res.classification.hits)[:n],
+                    np.asarray(res.classification.category)[:n])
+        manual = acc.finalize(np.asarray(db.genome_lengths),
+                              db.species_names)
+        assert manual.to_json() == s.profile(sample).to_json(), name
+
 
 def test_session_requires_refdb(sample):
     s = ProfilingSession(_config())

@@ -1,0 +1,254 @@
+"""ProfilingService: multi-tenant serving over one shared RefDB.
+
+The load-bearing contract (ISSUE 3 acceptance): per-request reports from
+>= 8 concurrent requests are bit-identical to sequential
+``ProfilingSession.profile()`` runs of the same reads, for the
+``reference`` and ``pallas_matmul`` backends.  Plus lifecycle coverage:
+streaming snapshots, cancellation, backpressure, per-request failure
+isolation, mixed read lengths (cohort bucketing), zero-read requests.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.hd_space import HDSpace
+from repro.genomics import synth
+from repro.pipeline import (ArraySource, ProfilerConfig, ProfilingSession,
+                            SyntheticSource)
+from repro.serve import (ProfileRequest, ProfilingService, RequestState,
+                         ServiceOverloaded)
+
+SP = HDSpace(dim=512, ngram=5, z_threshold=3.0)
+SPEC = synth.CommunitySpec(num_species=4, genome_len=6_000, seed=11)
+
+
+def _config(**kw):
+    kw.setdefault("space", SP)
+    kw.setdefault("window", 1024)
+    kw.setdefault("batch_size", 16)
+    return ProfilerConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def sample():
+    return SyntheticSource(SPEC, num_reads=192, present=[0, 2])
+
+
+@pytest.fixture(scope="module")
+def refdb(sample):
+    return ProfilingSession(_config()).build_refdb(sample.genomes)
+
+
+def _session(refdb, **kw):
+    s = ProfilingSession(_config(**kw))
+    s.refdb = refdb          # every backend shares the one database
+    return s
+
+
+def _slices(sample, n):
+    """n disjoint read slices, each its own request source."""
+    return [ArraySource(sample.tokens[i::n], sample.lengths[i::n])
+            for i in range(n)]
+
+
+# -- acceptance: concurrent == sequential, bit for bit ---------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas_matmul"])
+def test_concurrent_requests_match_sequential(sample, refdb, backend):
+    session = _session(refdb, backend=backend)
+    sources = _slices(sample, 8)
+    sequential = [session.profile(src) for src in sources]
+
+    service = ProfilingService(session, max_active=8)
+    handles = [service.submit(src) for src in sources]
+    service.run_until_idle()
+    for h, want in zip(handles, sequential):
+        assert h.state is RequestState.DONE
+        got = h.result(timeout=0)
+        assert got.to_json() == want.to_json()      # full-field bit equality
+        np.testing.assert_array_equal(got.abundance, want.abundance)
+
+
+def test_mixed_read_lengths_bucket_into_shared_cohorts(sample, refdb):
+    """Requests with different read widths interleave via length buckets."""
+    session = _session(refdb)
+    short = ArraySource(sample.tokens[:40, :64],
+                        np.minimum(sample.lengths[:40], 64))
+    long = ArraySource(sample.tokens[40:80], sample.lengths[40:80])
+    want = [session.profile(short), session.profile(long)]
+
+    service = ProfilingService(session, max_active=2, buckets=(64, 256))
+    hs = [service.submit(short), service.submit(long)]
+    service.run_until_idle()
+    for h, w in zip(hs, want):
+        assert h.result(timeout=0).to_json() == w.to_json()
+
+
+# -- lifecycle -------------------------------------------------------------
+
+def test_streaming_snapshots_grow_to_final(sample, refdb):
+    session = _session(refdb)
+    src = ArraySource(sample.tokens, sample.lengths)
+    service = ProfilingService(session, max_active=1)
+    h = service.submit(ProfileRequest(source=src, request_id="stream-me"))
+    assert h.request_id == "stream-me"
+    assert h.snapshot().total_reads == 0            # queued: empty report
+
+    counts = []
+    while service.step():
+        counts.append(h.snapshot().total_reads)
+    assert counts == sorted(counts)                 # monotone growth
+    assert h.state is RequestState.DONE
+    final = h.result(timeout=0)
+    assert final.total_reads == len(sample.tokens)
+    assert final.to_json() == h.snapshot().to_json()
+
+
+def test_cancellation_mid_stream(sample, refdb):
+    session = _session(refdb)
+    sources = _slices(sample, 2)
+    want = session.profile(sources[0])
+    service = ProfilingService(session, max_active=2)
+    keep, kill = (service.submit(s) for s in sources)
+    service.step()                                  # first cohort only
+    assert kill.cancel()
+    assert not kill.cancel()                        # idempotent: already dead
+    service.run_until_idle()
+    assert kill.state is RequestState.CANCELLED
+    with pytest.raises(RuntimeError, match="cancelled"):
+        kill.result(timeout=0)
+    # the surviving request is unaffected, still bit-exact
+    assert keep.result(timeout=0).to_json() == want.to_json()
+
+
+def test_backpressure_bounds_admission(sample, refdb):
+    service = ProfilingService(_session(refdb), max_active=2, max_queue=1)
+    srcs = _slices(sample, 4)
+    for s in srcs[:3]:                              # 2 active + 1 queued
+        service.submit(s)
+    with pytest.raises(ServiceOverloaded, match="admission queue full"):
+        service.submit(srcs[3])
+    with pytest.raises(TimeoutError):
+        service.submit(srcs[3], block=True, timeout=0.05)
+
+
+def test_blocking_submit_admits_once_capacity_frees(sample, refdb):
+    service = ProfilingService(_session(refdb), max_active=1, max_queue=0)
+    srcs = _slices(sample, 2)
+    first = service.submit(srcs[0])
+    got = {}
+
+    def late_submit():
+        got["h"] = service.submit(srcs[1], block=True, timeout=10)
+
+    t = threading.Thread(target=late_submit)
+    t.start()
+    service.run_until_idle()                        # finishes first -> slot
+    t.join(timeout=10)
+    assert not t.is_alive() and "h" in got
+    service.run_until_idle()
+    assert first.state is got["h"].state is RequestState.DONE
+
+
+def test_zero_read_request_completes_with_empty_report(sample, refdb):
+    service = ProfilingService(_session(refdb), max_active=2)
+    empty = ArraySource(np.empty((0, 150), np.int32), np.empty(0, np.int32))
+    h = service.submit(empty)
+    service.run_until_idle()
+    rep = h.result(timeout=0)
+    assert h.state is RequestState.DONE
+    assert rep.total_reads == 0
+    assert float(np.sum(rep.abundance)) == 0.0
+
+
+def test_source_failure_is_isolated(sample, refdb):
+    class Boom(ArraySource):
+        def batches(self, batch_size):
+            yield from super().batches(batch_size)
+            raise OSError("disk vanished")
+
+    session = _session(refdb)
+    good_src = ArraySource(sample.tokens[:48], sample.lengths[:48])
+    want = session.profile(good_src)
+    service = ProfilingService(session, max_active=2)
+    bad = service.submit(Boom(sample.tokens[48:96], sample.lengths[48:96]))
+    good = service.submit(good_src)
+    service.run_until_idle()
+    assert bad.state is RequestState.FAILED
+    with pytest.raises(OSError, match="disk vanished"):
+        bad.result(timeout=0)
+    assert good.result(timeout=0).to_json() == want.to_json()
+
+
+def test_background_worker_serves_submissions(sample, refdb):
+    session = _session(refdb)
+    sources = _slices(sample, 4)
+    sequential = [session.profile(s) for s in sources]
+    with ProfilingService(session, max_active=2) as service:
+        handles = [service.submit(s, block=True, timeout=30)
+                   for s in sources]
+        reports = [h.result(timeout=60) for h in handles]
+    for got, want in zip(reports, sequential):
+        assert got.to_json() == want.to_json()
+
+
+def test_oversize_read_fails_only_its_request(sample, refdb):
+    """A read longer than the largest bucket is that tenant's problem."""
+    session = _session(refdb)
+    good_src = ArraySource(sample.tokens[:48, :60],
+                           np.minimum(sample.lengths[:48], 60))
+    want = session.profile(good_src)
+    service = ProfilingService(session, max_active=2, buckets=(64,))
+    giant = service.submit(ArraySource(
+        np.zeros((3, 500), np.int32), np.full(3, 500, np.int32)))
+    good = service.submit(good_src)
+    service.run_until_idle()
+    assert giant.state is RequestState.FAILED
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        giant.result(timeout=0)
+    assert good.result(timeout=0).to_json() == want.to_json()
+
+
+def test_worker_death_fails_live_requests(sample, refdb):
+    session = _session(refdb)
+
+    def boom(*a, **kw):
+        raise RuntimeError("backend exploded")
+
+    session.classify_batch = boom
+    service = ProfilingService(session, max_active=2).start()
+    try:
+        h = service.submit(ArraySource(sample.tokens[:32],
+                                       sample.lengths[:32]))
+        with pytest.raises(RuntimeError, match="backend exploded"):
+            h.result(timeout=30)
+        assert h.state is RequestState.FAILED
+        # the dead service refuses new work instead of black-holing it
+        deadline = time.monotonic() + 10
+        while service.error is None and time.monotonic() < deadline:
+            time.sleep(0.01)
+        with pytest.raises(RuntimeError, match="worker died"):
+            service.submit(ArraySource(sample.tokens[:8],
+                                       sample.lengths[:8]))
+    finally:
+        service.stop(timeout=5)
+
+
+def test_submit_request_id_precedence(sample, refdb):
+    service = ProfilingService(_session(refdb))
+    src = ArraySource(sample.tokens[:8], sample.lengths[:8])
+    a = service.submit(ProfileRequest(source=src, request_id="inner"),
+                       request_id="outer")
+    b = service.submit(ProfileRequest(source=src), request_id="outer")
+    c = service.submit(ProfileRequest(source=src))
+    assert (a.request_id, b.request_id) == ("inner", "outer")
+    assert c.request_id.startswith("req-")
+    service.run_until_idle()
+
+
+def test_service_requires_refdb():
+    with pytest.raises(ValueError, match="no RefDB"):
+        ProfilingService(ProfilingSession(_config()))

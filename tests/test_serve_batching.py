@@ -1,13 +1,17 @@
-"""Cohort scheduler: admission, lockstep decode, budgets, refill."""
+"""Cohort scheduler: admission, lockstep decode, budgets, refill — plus
+unit coverage of the generic FixedShapeScheduler both the LM loop and the
+profiler service admit through."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import lm
 from repro.serve import serve_step
 from repro.serve.batching import CohortScheduler, Request
+from repro.serve.scheduler import FixedShapeScheduler, pow2_buckets
 
 
 def test_cohort_scheduler_end_to_end():
@@ -56,3 +60,71 @@ def test_cohort_matches_unbatched_greedy():
     done = sched.run()
     np.testing.assert_array_equal(np.asarray(done[0].out),
                                   np.asarray(want[0]))
+
+
+# -- FixedShapeScheduler (the generic admission core) -----------------------
+
+def test_scheduler_fifo_cohorts_and_slot_cap():
+    s = FixedShapeScheduler(slots=3)
+    for i in range(7):
+        s.submit(f"item{i}", size=10 + i)
+    cohorts = s.drain()
+    assert [list(c.items) for c in cohorts] == [
+        ["item0", "item1", "item2"], ["item3", "item4", "item5"], ["item6"]]
+    # exact-max padding when buckets=None
+    assert [c.length for c in cohorts] == [12, 15, 16]
+    assert s.next_cohort() is None and len(s) == 0
+
+
+def test_scheduler_buckets_bound_the_shape_set():
+    s = FixedShapeScheduler(slots=4, buckets=(64, 128, 256))
+    for size in (10, 60, 64, 65):
+        s.submit(size, size=size)
+    (c,) = s.drain()
+    assert c.length == 128                   # bucket of the largest item
+    assert s.bucket_for(1) == 64 and s.bucket_for(256) == 256
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        s.submit("too-big", size=300)
+
+
+def test_scheduler_validation():
+    with pytest.raises(ValueError):
+        FixedShapeScheduler(slots=0)
+    with pytest.raises(ValueError):
+        FixedShapeScheduler(slots=1, buckets=())
+    s = FixedShapeScheduler(slots=1)
+    with pytest.raises(ValueError):
+        s.submit("x", size=-1)
+    s.submit("x", size=0)                    # zero-size items are admitted
+    assert s.next_cohort().length == 1
+
+
+def test_pow2_buckets():
+    assert pow2_buckets(16, 150) == (16, 32, 64, 128, 256)
+    assert pow2_buckets(100, 100) == (128,)
+    with pytest.raises(ValueError):
+        pow2_buckets(0, 10)
+
+
+def test_lm_cohorts_can_bucket_prompt_lengths():
+    """The rewired LM scheduler accepts a bounded prompt-shape set."""
+    calls = []
+
+    def prefill(prompts):
+        calls.append(prompts.shape)
+        b = prompts.shape[0]
+        return jnp.zeros((b, 7)), None
+
+    sched = CohortScheduler(
+        slots=2, max_len=64, buckets=(8, 16),
+        prefill_fn=prefill,
+        decode_fn=lambda t, c, pos: (jnp.zeros((t.shape[0], 7)), c),
+        sample_fn=lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+    rng = np.random.default_rng(0)
+    for uid, plen in enumerate((3, 8, 11, 5)):
+        sched.submit(Request(uid=uid,
+                             prompt=rng.integers(0, 7, plen).astype(np.int32),
+                             max_new_tokens=2))
+    done = sched.run()
+    assert len(done) == 4 and all(r.done for r in done)
+    assert [s[1] for s in calls] == [8, 16]  # two bucketed prefill shapes
