@@ -3,29 +3,52 @@
 Paper claim: Demeter's HD-RefDB is ~33-36x smaller than Kraken2/MetaCache
 structures on food-scale databases; the reduction is what makes the
 in-memory accelerator feasible (the whole AM fits in PCM arrays / VMEM).
+
+The sharded deployment extends the claim: splitting the prototype axis
+over N devices leaves ``memory.demeter.bytes_per_device.sN`` resident
+per device (padded shard of prototypes + species tags, replicated genome
+lengths), so ``memory.reduction_vs_*`` is reported both for the total
+structure and against the per-device footprint at each shard count —
+the number that decides whether a database fits one accelerator's HBM.
 """
 
 from __future__ import annotations
 
 from benchmarks import common
+from repro.pipeline import per_device_bytes
+
+#: Shard counts to report per-device footprints for (analytical — the
+#: layout math of repro.pipeline.sharded, no mesh needed).
+SHARD_COUNTS = (1, 2, 4, 8)
 
 
 def run(community=None, emit=common.emit) -> dict:
     community = community or common.afs_small()
     sizes = {}
+    demeter_db = None
     for pname, prof in common.make_profilers().items():
         if pname == "kraken2+bracken":
             continue
         if pname == "demeter":
-            db = prof.build_refdb(community.genomes)
-            sizes[pname] = db.memory_bytes()
+            demeter_db = prof.build_refdb(community.genomes)
+            sizes[pname] = demeter_db.memory_bytes()
         else:
             prof.build(community.genomes)
             sizes[pname] = prof.memory_bytes()
         emit(f"memory.{pname}.bytes", 0.0, str(sizes[pname]))
+    for n in SHARD_COUNTS:
+        bpd = per_device_bytes(demeter_db, n)
+        sizes[f"demeter/device@{n}"] = bpd
+        emit(f"memory.demeter.bytes_per_device.s{n}", 0.0, str(bpd))
     for base in ("kraken2", "metacache", "clark"):
         ratio = sizes[base] / sizes["demeter"]
         emit(f"memory.reduction_vs_{base}", 0.0, f"{ratio:.1f}x")
+        # the per-device extension of the paper's Fig. 6 ratio: how much
+        # smaller one *shard* is than the (unsharded) baseline structure
+        for n in SHARD_COUNTS[1:]:
+            r = sizes[base] / sizes[f"demeter/device@{n}"]
+            emit(f"memory.reduction_vs_{base}.per_device.s{n}", 0.0,
+                 f"{r:.1f}x")
     return sizes
 
 

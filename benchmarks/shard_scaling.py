@@ -1,0 +1,117 @@
+"""Shard-scaling benchmark: throughput and per-device RefDB footprint vs
+prototype-shard count.
+
+The paper's capacity argument made measurable: Demeter's AM search scales
+by partitioning the prototype axis across devices (crossbar arrays in
+Acc-Demeter, mesh devices here).  For each shard count ``n`` that fits
+the local device set this sweeps the ``sharded`` backend over the same
+community/sample and emits
+
+  shard_scaling.{base}.s{n}.reads_per_s    sustained classified reads/s
+  shard_scaling.{base}.s{n}.bytes_per_device
+                                           RefDB bytes resident per device
+                                           (padded prototype rows + tags
+                                           + replicated genome lengths)
+  shard_scaling.{base}.s{n}.speedup        vs the same base unsharded
+
+plus one ``shard_scaling.check.s{n} ok`` row per shard count asserting
+the report is bit-identical to the unsharded reference — a benchmark
+that silently diverged would be measuring a different computation.
+
+On a single-CPU host every sweep point is n=1; grow the mesh with::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m benchmarks.shard_scaling --smoke
+
+``--smoke`` shrinks the community and read count so CI exercises the
+full pad/place/shard_map/merge cycle in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from benchmarks import common
+from repro.core import HDSpace
+from repro.genomics import synth
+from repro.pipeline import (ArraySource, ProfilerConfig, ProfilingSession,
+                            per_device_bytes)
+
+SMOKE_SPACE = HDSpace(dim=512, ngram=8, z_threshold=3.0)
+
+
+def shard_counts(max_devices: int | None = None) -> list[int]:
+    """1, 2, 4, ... up to the local device count (always includes the max)."""
+    n = len(jax.devices()) if max_devices is None else max_devices
+    counts = [c for c in (1, 2, 4, 8, 16, 32) if c <= n]
+    if n not in counts:
+        counts.append(n)
+    return counts
+
+
+def _profile_once(config: ProfilerConfig, genomes, source):
+    session = ProfilingSession(config)
+    session.build_refdb(genomes)
+    session.profile(source)                       # warmup: compile + place
+    t0 = time.perf_counter()
+    rep = session.profile(source)
+    wall = time.perf_counter() - t0
+    return session, rep, rep.total_reads / max(wall, 1e-9)
+
+
+def run(community=None, emit=common.emit, *, smoke: bool = False,
+        base: str = "reference") -> dict:
+    if smoke:
+        spec = synth.CommunitySpec(num_species=6, genome_len=12_000, seed=17)
+        genomes, toks, lens, _, _ = synth.make_sample(spec, num_reads=512)
+        config = ProfilerConfig(space=SMOKE_SPACE, window=1024,
+                                batch_size=64, backend=base)
+    else:
+        community = community or common.afs_small()
+        genomes = community.genomes
+        toks, lens, _, _ = community.samples["kylo"]
+        config = common.BENCH_CONFIG
+        base = config.backend
+    source = ArraySource(toks, lens)
+
+    _, ref_rep, ref_rps = _profile_once(config, genomes, source)
+    out = {}
+    for n in shard_counts():
+        # replace(), not field-by-field: stride and any base backend
+        # options must carry over or the bit-exactness check below would
+        # compare runs of two different configs.
+        cfg = dataclasses.replace(
+            config, backend="sharded",
+            backend_options={**dict(config.backend_options),
+                             "base": base, "shards": n})
+        session, rep, rps = _profile_once(cfg, genomes, source)
+        assert rep.to_json() == ref_rep.to_json(), \
+            f"sharded x{n} diverged from unsharded {base}"
+        bpd = per_device_bytes(session.refdb, n)
+        emit(f"shard_scaling.{base}.s{n}.reads_per_s", 0.0, f"{rps:.0f}")
+        emit(f"shard_scaling.{base}.s{n}.bytes_per_device", 0.0, str(bpd))
+        emit(f"shard_scaling.{base}.s{n}.speedup", 0.0,
+             f"{rps / max(ref_rps, 1e-9):.2f}x")
+        emit(f"shard_scaling.check.s{n}", 0.0, "ok")
+        out[n] = {"reads_per_s": rps, "bytes_per_device": bpd}
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small community, few reads)")
+    ap.add_argument("--base", default="reference",
+                    help="base backend to shard (smoke mode only)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    print(f"# devices: {len(jax.devices())}", flush=True)
+    run(smoke=args.smoke, base=args.base)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,14 +18,16 @@ among the substrates by name (see docs/API.md).  ``Demeter`` and
 """
 
 from repro.core.hd_space import HDSpace
-from repro.core.assoc_memory import RefDB, build_refdb
+from repro.core.assoc_memory import RefDB, RefDBBuilder, build_refdb
 from repro.core.classifier import (ReadClassification, classify,
-                                   from_agreement, UNMAPPED, UNIQUE, MULTI)
+                                   from_agreement, from_scores, merge_scores,
+                                   partial_scores, UNMAPPED, UNIQUE, MULTI)
 from repro.core.abundance import AbundanceResult, estimate
 from repro.core.profiler import Demeter, ProfileReport, batch_reads
 
 __all__ = [
-    "HDSpace", "RefDB", "build_refdb", "ReadClassification", "classify",
-    "from_agreement", "UNMAPPED", "UNIQUE", "MULTI", "AbundanceResult",
+    "HDSpace", "RefDB", "RefDBBuilder", "build_refdb", "ReadClassification",
+    "classify", "from_agreement", "from_scores", "merge_scores",
+    "partial_scores", "UNMAPPED", "UNIQUE", "MULTI", "AbundanceResult",
     "estimate", "Demeter", "ProfileReport", "batch_reads",
 ]

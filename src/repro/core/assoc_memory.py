@@ -63,6 +63,73 @@ def window_tokens(tokens: np.ndarray, window: int, stride: int) -> np.ndarray:
     return tokens[idx].astype(np.int32), np.full(len(starts), window, np.int32)
 
 
+class RefDBBuilder:
+    """Incremental RefDB construction, one reference genome at a time.
+
+    The streaming form of Demeter step 2: callers feed genomes with
+    :meth:`add_genome` (each is windowed and encoded immediately, so only
+    the finished prototype rows are retained — never two genomes' raw
+    windows at once) and :meth:`finish` assembles the immutable
+    :class:`RefDB`.  :func:`build_refdb` is a thin loop over this class;
+    the on-disk store (:mod:`repro.pipeline.refdb_store`) uses it to build
+    and persist genome-by-genome.
+    """
+
+    def __init__(self, space: HDSpace, *, window: int = 8192,
+                 stride: int | None = None, batch_size: int = 64,
+                 encode_fn=None):
+        self.space = space
+        self.window = window
+        self.stride = stride or window
+        self.batch_size = batch_size
+        if encode_fn is None:
+            im = item_memory.make_item_memory(space)
+            tie = item_memory.make_tie_break(space)
+            encode_fn = jax.jit(
+                lambda t, l: encoder.encode(t, l, im, tie, space))
+        self._encode = encode_fn
+        self._protos: list[np.ndarray] = []
+        self._species: list[np.ndarray] = []
+        self._lengths: list[int] = []
+        self._names: list[str] = []
+
+    def add_genome(self, name: str, tokens: np.ndarray) -> np.ndarray:
+        """Window + encode one genome; returns its ``(n_windows, W)`` block.
+
+        Atomic on failure: state is committed only after the whole genome
+        encoded, so a raising encode (bad tokens, device OOM) leaves the
+        builder exactly as before — the genome can be retried or skipped
+        without corrupting ``finish()``'s species bookkeeping.
+        """
+        if name in self._names:
+            raise ValueError(f"genome {name!r} already added")
+        wins, wlens = window_tokens(np.asarray(tokens), self.window,
+                                    self.stride)
+        blocks = []
+        for i in range(0, len(wins), self.batch_size):
+            batch, blen = wins[i:i + self.batch_size], wlens[i:i + self.batch_size]
+            blocks.append(np.asarray(
+                self._encode(jnp.asarray(batch), jnp.asarray(blen))))
+        block = np.concatenate(blocks)
+        self._species.append(np.full(len(block), len(self._names), np.int32))
+        self._names.append(name)
+        self._lengths.append(len(tokens))
+        self._protos.append(block)
+        return block
+
+    def finish(self) -> RefDB:
+        """Assemble the immutable RefDB from everything added so far."""
+        if not self._names:
+            raise ValueError("no genomes added")
+        return RefDB(
+            prototypes=jnp.asarray(np.concatenate(self._protos)),
+            proto_species=jnp.asarray(np.concatenate(self._species)),
+            genome_lengths=jnp.asarray(np.asarray(self._lengths, np.int32)),
+            num_species=len(self._names),
+            species_names=tuple(self._names),
+        )
+
+
 def build_refdb(genomes: dict[str, np.ndarray], space: HDSpace, *,
                 window: int = 8192, stride: int | None = None,
                 batch_size: int = 64, encode_fn=None) -> RefDB:
@@ -77,35 +144,11 @@ def build_refdb(genomes: dict[str, np.ndarray], space: HDSpace, *,
         to the jit'd reference encoder.  Execution backends pass their own
         so the RefDB is built on the same substrate that queries it.
     """
-    stride = stride or window
-
-    all_protos: list[np.ndarray] = []
-    all_species: list[np.ndarray] = []
-    lengths = np.zeros(len(genomes), np.int32)
-    names = tuple(genomes.keys())
-
-    if encode_fn is None:
-        im = item_memory.make_item_memory(space)
-        tie = item_memory.make_tie_break(space)
-        encode = jax.jit(lambda t, l: encoder.encode(t, l, im, tie, space))
-    else:
-        encode = encode_fn
-    for s, (name, toks) in enumerate(genomes.items()):
-        lengths[s] = len(toks)
-        wins, wlens = window_tokens(np.asarray(toks), window, stride)
-        for i in range(0, len(wins), batch_size):
-            batch, blen = wins[i:i + batch_size], wlens[i:i + batch_size]
-            protos = np.asarray(encode(jnp.asarray(batch), jnp.asarray(blen)))
-            all_protos.append(protos)
-            all_species.append(np.full(len(batch), s, np.int32))
-
-    return RefDB(
-        prototypes=jnp.asarray(np.concatenate(all_protos)),
-        proto_species=jnp.asarray(np.concatenate(all_species)),
-        genome_lengths=jnp.asarray(lengths),
-        num_species=len(genomes),
-        species_names=names,
-    )
+    builder = RefDBBuilder(space, window=window, stride=stride,
+                           batch_size=batch_size, encode_fn=encode_fn)
+    for name, toks in genomes.items():
+        builder.add_genome(name, toks)
+    return builder.finish()
 
 
 def agreement_matmul(queries: jax.Array, prototypes: jax.Array,
@@ -145,7 +188,15 @@ def agreement_packed_chunked(queries: jax.Array, prototypes: jax.Array,
 
 def species_scores(agreement: jax.Array, proto_species: jax.Array,
                    num_species: int) -> jax.Array:
-    """Max agreement per species over its window prototypes -> (B, S)."""
+    """Max agreement per species over its window prototypes -> (B, S).
+
+    Works on any *subset* of the prototypes (one device's shard): a
+    species with no prototype in the subset comes back as the dtype's
+    minimum (the identity of the max-merge across shards), and indices
+    ``>= num_species`` (mesh-padding rows) are dropped by segment_max.
+    ``proto_species`` must be non-decreasing — true for full builds and
+    for any contiguous shard of one.
+    """
     return jax.ops.segment_max(
         agreement.T, proto_species, num_segments=num_species,
         indices_are_sorted=True).T

@@ -7,11 +7,26 @@ a category per read:
     0 = unmapped   (no species above threshold)
     1 = unique     (exactly one)
     2 = multi      (more than one)
+
+The species reduction is deliberately factored into three composable
+pieces so the prototype axis can be partitioned across devices (the
+in-memory-HDC analogue of splitting the AM over crossbar arrays):
+
+    partial_scores  per-prototype agreement -> per-species max, over any
+                    *subset* of the prototypes (one shard's slice);
+    merge_scores    associative, commutative elementwise max — merging
+                    per-shard partials equals reducing the concatenated
+                    prototype set (property-tested in tests/);
+    from_scores     threshold + categorize, once, over merged scores.
+
+``from_agreement`` (the single-shard path every backend already routes
+through) is exactly ``from_scores(partial_scores(...))``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +51,45 @@ class ReadClassification:
         return self.hits.sum(axis=-1)
 
 
+#: Score of a species with no prototype in a shard: the identity of the
+#: max-merge, so empty segments never win against any real agreement.
+NO_SCORE = jnp.iinfo(jnp.int32).min
+
+
+def partial_scores(agreement: jax.Array, proto_species: jax.Array,
+                   num_species: int) -> jax.Array:
+    """Per-species max over *any subset* of the prototypes -> ``(R, S)``.
+
+    ``agreement`` is ``(R, S_shard)`` over one shard's prototype slice and
+    ``proto_species`` carries the **global** species index of each local
+    prototype.  Species absent from the shard come back as :data:`NO_SCORE`
+    (the merge identity); rows padded to the mesh size may carry
+    ``proto_species == num_species`` — segment_max drops out-of-range
+    indices, so padding can never leak into a real species' score.
+    """
+    return assoc_memory.species_scores(agreement, proto_species, num_species)
+
+
+def merge_scores(*partials: jax.Array) -> jax.Array:
+    """Merge per-shard partial score matrices: elementwise max.
+
+    Associative and commutative, so any shard order / tree shape gives the
+    same result as :func:`partial_scores` over the concatenated prototypes
+    (the property test in ``tests/test_sharded.py`` pins this).
+    """
+    return functools.reduce(jnp.maximum, partials)
+
+
+def from_scores(scores: jax.Array, threshold_bits: float
+                ) -> ReadClassification:
+    """Threshold merged ``(R, S)`` species scores and categorize reads."""
+    hits = scores >= jnp.asarray(threshold_bits, scores.dtype)
+    n = hits.sum(axis=-1)
+    category = jnp.where(n == 0, UNMAPPED, jnp.where(n == 1, UNIQUE, MULTI))
+    return ReadClassification(hits=hits, scores=scores,
+                              category=category.astype(jnp.int32))
+
+
 def from_agreement(agreement: jax.Array, proto_species: jax.Array,
                    num_species: int, threshold_bits: float
                    ) -> ReadClassification:
@@ -44,15 +98,12 @@ def from_agreement(agreement: jax.Array, proto_species: jax.Array,
     The substrate-independent tail of step 4: reduce per-prototype
     agreement to per-species scores, threshold (paper Eq. 2), categorize.
     Execution backends (:mod:`repro.pipeline.backend`) produce the
-    agreement matrix; this is shared by all of them.
+    agreement matrix; this is shared by all of them.  Sharded execution
+    runs :func:`partial_scores` per prototype shard, :func:`merge_scores`
+    across shards, and the same :func:`from_scores` tail.
     """
-    scores = assoc_memory.species_scores(agreement, proto_species,
-                                         num_species)
-    hits = scores >= jnp.asarray(threshold_bits, scores.dtype)
-    n = hits.sum(axis=-1)
-    category = jnp.where(n == 0, UNMAPPED, jnp.where(n == 1, UNIQUE, MULTI))
-    return ReadClassification(hits=hits, scores=scores,
-                              category=category.astype(jnp.int32))
+    return from_scores(partial_scores(agreement, proto_species, num_species),
+                       threshold_bits)
 
 
 def classify(queries: jax.Array, refdb: RefDB, space: HDSpace, *,

@@ -23,6 +23,7 @@ import threading
 from typing import Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
@@ -61,6 +62,34 @@ PREFILL_RULES: Rules = dict(TRAIN_RULES, fsdp="data")
 # alone fit HBM for every assigned arch once the KV cache is seq-sharded.
 DECODE_RULES: Rules = dict(TRAIN_RULES, kv_seq="model", fsdp=None,
                            residual_seq=None)
+
+# Demeter profiling: the AM search (queries x prototypes agreement) is
+# partitioned over the *prototype* axis — the in-memory-HDC analogue of
+# splitting the associative memory across crossbar arrays.  Reads and the
+# packed HD dimension stay replicated: per-shard partial species scores
+# merge with an elementwise max (classifier.merge_scores), so the only
+# cross-device traffic is a (B, num_species) pmax.
+PROFILE_RULES: Rules = {
+    "reads": None,            # query batch: replicated (every shard scores it)
+    "protos": "shard",        # prototype rows: split across the mesh
+    "hd_words": None,         # packed HD dim: contiguous within a shard
+    "species": None,          # per-species scores: replicated after merge
+}
+
+
+def make_profile_mesh(num_shards: int | None = None) -> Mesh:
+    """1-D ``('shard',)`` mesh over the first ``num_shards`` local devices.
+
+    The profiling analogue of ``launch.mesh``: prototype-axis model
+    parallelism only (reads are cheap to replicate; the AM is not).
+    """
+    devices = jax.devices()
+    n = len(devices) if num_shards is None else num_shards
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"num_shards must be in [1, {len(devices)}] (local devices), "
+            f"got {n}")
+    return Mesh(np.asarray(devices[:n]), ("shard",))
 
 
 @contextlib.contextmanager

@@ -20,19 +20,22 @@ from repro.kernels import hamming_am as _hamming_am
 from repro.kernels import hdc_encoder as _hdc_encoder
 
 
-def pad_to_multiple(x: jax.Array, axis: int, multiple: int) -> jax.Array:
-    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``multiple``.
+def pad_to_multiple(x: jax.Array, axis: int, multiple: int,
+                    fill=0) -> jax.Array:
+    """Pad ``x`` along ``axis`` up to the next multiple of ``multiple``.
 
-    Shared by the Pallas wrappers (block alignment) and the accel crossbar
-    tiling (:mod:`repro.accel.crossbar`), which both need trailing-zero
-    padding that downstream math treats as inert.
+    Shared by the Pallas wrappers (block alignment), the accel crossbar
+    tiling (:mod:`repro.accel.crossbar`), and the prototype-axis sharding
+    (:mod:`repro.pipeline.sharded`).  The default zero fill is inert to
+    downstream math; sharding passes ``fill=num_species`` for the species
+    tags so the segment reduction drops padding rows.
     """
     pad = (-x.shape[axis]) % multiple
     if pad == 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+    return jnp.pad(x, widths, constant_values=fill)
 
 
 _pad_to = pad_to_multiple

@@ -47,6 +47,11 @@ def profile(genomes: dict, source: ReadSource | tuple, *,
           f"({rep.total_reads / max(t_query, 1e-9):.0f} reads/s) | "
           f"AM {db.memory_bytes() / 1e6:.2f} MB "
           f"({db.num_prototypes} prototypes)")
+    shards = getattr(session.backend, "num_shards", 1)
+    if shards > 1:
+        from repro.pipeline import per_device_bytes
+        print(f"sharded {shards} ways ({session.backend.base.name} base): "
+              f"{per_device_bytes(db, shards) / 1e6:.2f} MB per device")
     print(f"reads: {rep.total_reads}  unmapped: {rep.unmapped_reads}  "
           f"multi: {rep.multi_reads}")
     print("\nspecies-level abundance (step 5):")
@@ -104,6 +109,17 @@ def main() -> None:
                     help="backend-specific option, repeatable (e.g. "
                          "--backend pcm_sim --backend-option preset=pcm "
                          "--backend-option read_sigma=0.05)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="size of the 1-D ('shard',) profiling mesh. One "
+                         "shard lives on each mesh device, so this and "
+                         "--shards are the same knob (given both, they "
+                         "must agree); grow the host device count with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--shards", type=int, default=None, metavar="N",
+                    help="shard the RefDB prototype axis N ways: wraps the "
+                         "chosen backend in the 'sharded' backend (reports "
+                         "stay bit-identical; each device holds 1/N of the "
+                         "database)")
     ap.add_argument("--list-backends", action="store_true",
                     help="print the registered backend names and exit")
     args = ap.parse_args()
@@ -116,14 +132,30 @@ def main() -> None:
         ap.error(f"unknown backend {args.backend!r}; available: "
                  f"{', '.join(available_backends())}")
 
+    options = dict(_parse_option(s) for s in args.backend_option)
+    backend = args.backend
+    if args.mesh is not None and args.shards is not None \
+            and args.mesh != args.shards:
+        ap.error(f"--mesh {args.mesh} conflicts with --shards "
+                 f"{args.shards}: the mesh holds one shard per device, "
+                 f"so the two must agree (or give just one)")
+    shards = args.shards if args.shards is not None else args.mesh
+    if shards is not None and backend != "sharded":
+        # --shards N means "this backend, N ways": the sharded backend
+        # wraps it as its base, same reports, 1/N database per device.
+        options = {"base": backend, "shards": shards, **options}
+        backend = "sharded"
+    elif shards is not None:
+        options.setdefault("shards", shards)
+
     config = ProfilerConfig(
         space=HDSpace(dim=args.dim, ngram=args.ngram,
                       z_threshold=args.z_threshold),
         window=args.window, stride=args.stride,
-        batch_size=args.batch_size, backend=args.backend,
-        backend_options=dict(_parse_option(s) for s in args.backend_option))
+        batch_size=args.batch_size, backend=backend,
+        backend_options=options)
     try:                      # surface bad --backend-option values as CLI
-        resolve_backend(args.backend, config)   # errors, not tracebacks
+        resolve_backend(config.backend, config)  # errors, not tracebacks
     except ValueError as e:
         ap.error(str(e))
 

@@ -26,7 +26,10 @@ from repro.pipeline.backend import (Backend, available_backends,
 from repro.pipeline.source import (ArraySource, FastqSource, IterableSource,
                                    ReadBatch, ReadSource, SyntheticSource,
                                    as_source, prefetch)
+from repro.pipeline import refdb_store
 from repro.pipeline.session import BatchResult, ProfilingSession
+from repro.pipeline.sharded import (ShardedBackend, pad_refdb,
+                                    per_device_bytes, place_refdb)
 
 # Self-registering backends living outside this package.  Imported last:
 # the accel modules import pipeline submodules, which are fully loaded by
@@ -38,5 +41,6 @@ __all__ = [
     "Backend", "available_backends", "register_backend", "resolve_backend",
     "ArraySource", "FastqSource", "IterableSource", "ReadBatch",
     "ReadSource", "SyntheticSource", "as_source", "prefetch",
-    "BatchResult", "ProfilingSession",
+    "BatchResult", "ProfilingSession", "ShardedBackend", "pad_refdb",
+    "per_device_bytes", "place_refdb", "refdb_store",
 ]

@@ -27,11 +27,22 @@ Registered backends:
   pcm_sim          digital encoder + simulated PCM-crossbar AM search
                    (:mod:`repro.accel`; bit-exact at zero device noise,
                    configurably non-ideal via ``backend_options``).
+  sharded          prototype-axis model parallelism over a device mesh,
+                   wrapping any of the above as its ``base``
+                   (:mod:`repro.pipeline.sharded`, built on
+                   ``repro.distributed.sharding``).
 
 All are bit-exact twins at default options (enforced by
-``tests/test_pipeline.py``); a future ``sharded`` backend built on
-``repro.distributed.sharding`` plugs into the same registry without
-touching any caller.
+``tests/test_pipeline.py`` and, across mesh sizes, by
+``tests/test_sharded.py``).  Backends may additionally expose two
+optional capabilities the session discovers by name:
+
+  ``place_refdb(db) -> RefDB``   device placement after build/load
+                                 (pad + distribute across a mesh);
+  ``species_scores(queries, prototypes, proto_species, num_species)``
+                                 fused agreement + per-species reduction,
+                                 merged across shards (skips the
+                                 per-prototype agreement round-trip).
 """
 
 from __future__ import annotations

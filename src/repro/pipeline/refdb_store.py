@@ -1,0 +1,194 @@
+"""Versioned, crash-safe on-disk persistence for the HD reference database.
+
+Replaces the pickle cache that ``ProfilingSession.build_or_load_refdb``
+used through PR 3.  Pickle had three production problems: a truncated
+write (crash, full disk, or a concurrent builder) poisoned every later
+load with an opaque ``UnpicklingError``; the format carried no version or
+provenance, so nothing could detect that the bytes on disk no longer
+matched the code or config that wrote them; and loading executed
+arbitrary bytecode from a cache directory.
+
+The store writes one ``refdb_<key>.npz`` file per cache entry: a plain
+numpy archive holding the three RefDB arrays plus a JSON *manifest*
+embedded under the ``manifest`` key.  Manifest fields:
+
+    format_version   integer; bumped on any layout change.  A mismatch
+                     (or absence) makes ``load`` return None — callers
+                     rebuild instead of misinterpreting bytes.
+    refdb_fingerprint / genomes_digest
+                     the two halves of the cache key, recorded for
+                     provenance (``manifest(path)`` exposes them).
+    space / window / stride
+                     the content-determining config, human-readable
+                     (passed through ``config_fields`` by the session).
+    num_species, num_prototypes, species_names, genome_lengths
+                     RefDB metadata (the static pytree fields).
+    dim_words        packed width W of the prototype rows.
+
+Writes are atomic: the archive is serialized to a same-directory
+``*.tmp-<pid>-…`` file and published with ``os.replace``, so readers see
+either the previous entry or the complete new one, never a torn file.
+Loads are *tolerant by contract*: any undecodable entry — a legacy
+pickle from before this format, a truncated npz, a manifest version from
+the future — logs nothing, raises nothing, and returns None, which makes
+every corruption mode equivalent to a cache miss (auto-rebuild).
+
+``build_streaming`` builds and persists genome-by-genome through
+:class:`repro.core.assoc_memory.RefDBBuilder`, so the raw windows of at
+most one reference genome are ever resident alongside the growing
+prototype rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+from typing import Callable, Iterable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.assoc_memory import RefDB, RefDBBuilder
+
+#: Bump on any change to the array layout or manifest schema.  Readers
+#: accept exactly this version; everything else is a miss.
+FORMAT_VERSION = 1
+
+_MAGIC = "demeter-refdb"
+
+
+def save(path: str | pathlib.Path, db: RefDB, *,
+         refdb_fingerprint: str = "", genomes_digest: str = "",
+         config_fields: dict | None = None) -> pathlib.Path:
+    """Atomically write ``db`` (npz arrays + embedded JSON manifest).
+
+    The archive is staged in a sibling temp file and published with
+    ``os.replace`` — a crash mid-write leaves at worst a ``*.tmp-*``
+    stray, never a torn entry; concurrent builders race benignly (last
+    complete write wins, both are valid).
+
+    Args:
+      config_fields: JSON-primitive provenance merged into the manifest
+        (the session records the content-determining config: ``space``,
+        ``window``, ``stride``).  Core schema keys win on collision.
+    """
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    manifest = {
+        **(config_fields or {}),
+        "magic": _MAGIC,
+        "format_version": FORMAT_VERSION,
+        "refdb_fingerprint": refdb_fingerprint,
+        "genomes_digest": genomes_digest,
+        "num_species": int(db.num_species),
+        "num_prototypes": int(db.prototypes.shape[0]),
+        "dim_words": int(db.prototypes.shape[1]),
+        "species_names": list(db.species_names),
+        "genome_lengths": [int(x) for x in np.asarray(db.genome_lengths)],
+    }
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name + ".tmp-")
+    try:
+        # Stream the archive straight into the staging file: no second
+        # in-memory copy of a database that may be most of host RAM.
+        with os.fdopen(fd, "wb") as f:
+            np.savez(
+                f,
+                manifest=np.frombuffer(
+                    json.dumps(manifest, sort_keys=True).encode(),
+                    dtype=np.uint8),
+                prototypes=np.asarray(db.prototypes),
+                proto_species=np.asarray(db.proto_species),
+                genome_lengths=np.asarray(db.genome_lengths),
+            )
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)           # atomic publish
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return path
+
+
+def manifest(path: str | pathlib.Path) -> dict | None:
+    """The entry's JSON manifest, or None if unreadable/not this format."""
+    try:
+        with np.load(path) as z:
+            m = json.loads(bytes(z["manifest"]).decode())
+    except Exception:
+        return None
+    if not isinstance(m, dict) or m.get("magic") != _MAGIC:
+        return None
+    return m
+
+
+def load(path: str | pathlib.Path) -> RefDB | None:
+    """Load a store entry; None on *any* defect (the auto-rebuild contract).
+
+    A missing file, a legacy pickle from before this format, a truncated
+    archive, a wrong ``format_version``, or arrays inconsistent with their
+    manifest all return None — callers treat every one as a cache miss
+    and rebuild, so a bad entry can never poison later runs.
+    """
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    m = manifest(path)
+    if m is None or m.get("format_version") != FORMAT_VERSION:
+        return None
+    try:
+        with np.load(path) as z:
+            protos = z["prototypes"]
+            proto_species = z["proto_species"]
+            genome_lengths = z["genome_lengths"]
+    except Exception:
+        return None
+    names = tuple(m.get("species_names", ()))
+    if (protos.shape[0] != m.get("num_prototypes")
+            or protos.shape[1] != m.get("dim_words")
+            or proto_species.shape != (protos.shape[0],)
+            or genome_lengths.shape != (len(names),)
+            or len(names) != m.get("num_species")):
+        return None
+    return RefDB(
+        prototypes=jnp.asarray(protos),
+        proto_species=jnp.asarray(proto_species),
+        genome_lengths=jnp.asarray(genome_lengths),
+        num_species=len(names),
+        species_names=names,
+    )
+
+
+def build_streaming(genomes: dict[str, np.ndarray] |
+                    Iterable[tuple[str, np.ndarray]],
+                    builder: RefDBBuilder, *,
+                    path: str | pathlib.Path | None = None,
+                    refdb_fingerprint: str = "", genomes_digest: str = "",
+                    config_fields: dict | None = None,
+                    on_genome: Callable[[str, int], None] | None = None
+                    ) -> RefDB:
+    """Build a RefDB genome-by-genome and (optionally) persist it.
+
+    Feeds each ``(name, tokens)`` through ``builder.add_genome`` — raw
+    windows for only one genome are live at a time — then assembles the
+    RefDB and, when ``path`` is given, publishes it atomically.
+
+    Args:
+      on_genome: progress hook ``(name, n_prototypes_so_far)`` per genome.
+    """
+    items = genomes.items() if isinstance(genomes, dict) else genomes
+    total = 0
+    for name, toks in items:
+        block = builder.add_genome(name, toks)
+        total += len(block)
+        if on_genome is not None:
+            on_genome(name, total)
+    db = builder.finish()
+    if path is not None:
+        save(path, db, refdb_fingerprint=refdb_fingerprint,
+             genomes_digest=genomes_digest, config_fields=config_fields)
+    return db

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import pickle
 import pathlib
 from typing import Callable
 
@@ -30,7 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import assoc_memory, classifier
-from repro.core.assoc_memory import RefDB
+from repro.core.assoc_memory import RefDB, RefDBBuilder
+from repro.pipeline import refdb_store
 from repro.pipeline.backend import Backend, resolve_backend
 from repro.pipeline.config import ProfilerConfig
 from repro.pipeline.report import ProfileAccumulator, ProfileReport
@@ -67,15 +67,18 @@ class ProfilingSession:
         self._from_agreement = jax.jit(
             classifier.from_agreement,
             static_argnames=("num_species", "threshold_bits"))
+        self._from_scores = jax.jit(
+            classifier.from_scores, static_argnames=("threshold_bits",))
 
     # -- Step 2 ------------------------------------------------------------
     def build_refdb(self, genomes: dict[str, np.ndarray]) -> RefDB:
         """Encode the reference genomes into the AM through the backend."""
-        self.refdb = assoc_memory.build_refdb(
+        db = assoc_memory.build_refdb(
             genomes, self.space, window=self.config.window,
             stride=self.config.effective_stride,
             batch_size=self.config.batch_size,
             encode_fn=self.backend.encode)
+        self.refdb = self._place(db)
         self.refdb_loaded_from_cache = False
         return self.refdb
 
@@ -83,9 +86,9 @@ class ProfilingSession:
                          genomes: dict[str, np.ndarray]) -> pathlib.Path:
         """Cache location keyed by every input that determines RefDB
         content: the config's RefDB fingerprint (space/window/stride) plus
-        a digest of the reference genomes themselves."""
+        an order-insensitive digest of the reference genomes themselves."""
         key = f"{self.config.refdb_fingerprint()}_{_genomes_digest(genomes)}"
-        return pathlib.Path(cache_dir) / f"refdb_{key}.pkl"
+        return pathlib.Path(cache_dir) / f"refdb_{key}.npz"
 
     def build_or_load_refdb(self, genomes: dict[str, np.ndarray], *,
                             cache_dir: str | pathlib.Path | None = None
@@ -94,24 +97,45 @@ class ProfilingSession:
 
         The key covers every input that can change the built prototypes —
         space, window, stride, and the reference genomes (names + token
-        content) — so neither a config change nor a swapped reference
-        database can silently reuse a stale cache entry (the paper's
-        step-1 config check).  ``batch_size``/``backend`` are excluded:
-        they cannot affect the prototypes (backends are bit-exact twins),
-        so tuning them reuses the cache instead of rebuilding.
+        content, insertion-order-insensitive) — so neither a config change
+        nor a swapped reference database can silently reuse a stale cache
+        entry (the paper's step-1 config check).  ``batch_size``/``backend``
+        are excluded: they cannot affect the prototypes (backends are
+        bit-exact twins), so tuning them reuses the cache instead of
+        rebuilding.
+
+        Entries are persisted through :mod:`repro.pipeline.refdb_store`
+        (versioned npz + JSON manifest, written atomically): a truncated
+        file, a legacy pickle cache from an older checkout, or a
+        format-version mismatch all read as a miss and trigger a clean
+        rebuild — never a crash or a silently wrong database.  The build
+        itself streams genome-by-genome through
+        :class:`~repro.core.assoc_memory.RefDBBuilder`.
         """
         if cache_dir is None:
             return self.build_refdb(genomes)
         cache = self.refdb_cache_path(cache_dir, genomes)
         self.refdb_cache_file = cache
-        if cache.exists():
-            self.refdb = pickle.loads(cache.read_bytes())
+        db = refdb_store.load(cache)
+        if db is not None:
+            self.refdb = self._place(db)
             self.refdb_loaded_from_cache = True
             return self.refdb
-        db = self.build_refdb(genomes)
-        cache.parent.mkdir(parents=True, exist_ok=True)
-        cache.write_bytes(pickle.dumps(db))
-        return db
+        builder = RefDBBuilder(
+            self.space, window=self.config.window,
+            stride=self.config.effective_stride,
+            batch_size=self.config.batch_size,
+            encode_fn=self.backend.encode)
+        db = refdb_store.build_streaming(
+            genomes, builder, path=cache,
+            refdb_fingerprint=self.config.refdb_fingerprint(),
+            genomes_digest=_genomes_digest(genomes),
+            config_fields={"space": dataclasses.asdict(self.space),
+                           "window": self.config.window,
+                           "stride": self.config.effective_stride})
+        self.refdb = self._place(db)
+        self.refdb_loaded_from_cache = False
+        return self.refdb
 
     # -- Step 3 ------------------------------------------------------------
     def encode_reads(self, tokens, lengths) -> jax.Array:
@@ -121,8 +145,22 @@ class ProfilingSession:
     # -- Step 4 ------------------------------------------------------------
     def classify_queries(self, queries: jax.Array, refdb: RefDB | None = None
                          ) -> classifier.ReadClassification:
-        """AM search + threshold over pre-encoded ``(B, W)`` query vectors."""
+        """AM search + threshold over pre-encoded ``(B, W)`` query vectors.
+
+        Backends exposing the fused ``species_scores`` capability (the
+        ``sharded`` backend: agreement + per-species reduction inside one
+        ``shard_map``, merged with a pmax) skip the per-prototype
+        agreement round-trip; everyone else routes through ``agreement``
+        and the shared :func:`~repro.core.classifier.from_agreement` tail.
+        Both paths are bit-identical.
+        """
         db = self._require_refdb(refdb)
+        fused = getattr(self.backend, "species_scores", None)
+        if fused is not None:
+            scores = fused(queries, db.prototypes, db.proto_species,
+                           db.num_species)
+            return self._from_scores(
+                scores, threshold_bits=self.space.threshold_bits)
         agree = self.backend.agreement(queries, db.prototypes)
         return self._from_agreement(
             agree, db.proto_species, num_species=db.num_species,
@@ -183,6 +221,18 @@ class ProfilingSession:
         return acc.finalize(np.asarray(db.genome_lengths), db.species_names)
 
     # ----------------------------------------------------------------------
+    def _place(self, db: RefDB) -> RefDB:
+        """Run the backend's device-placement step, if it has one.
+
+        The ``sharded`` backend pads the prototype axis to its mesh and
+        distributes the database across devices (one shard per device);
+        single-device backends have no hook and the db passes through.
+        Placement happens here — on build *and* on cache load — so every
+        way a session acquires a RefDB ends device-resident the same way.
+        """
+        place = getattr(self.backend, "place_refdb", None)
+        return db if place is None else place(db)
+
     def _require_refdb(self, refdb: RefDB | None) -> RefDB:
         db = refdb if refdb is not None else self.refdb
         if db is None:
@@ -193,9 +243,19 @@ class ProfilingSession:
 
 
 def _genomes_digest(genomes: dict[str, np.ndarray]) -> str:
-    """Stable hash of the reference database content (names + tokens)."""
-    h = hashlib.sha256()
+    """Stable, order-insensitive hash of the reference content.
+
+    Each genome hashes as its (name, tokens) pair; the per-genome digests
+    are *sorted* before the final hash, so the same reference set built
+    from a dict in a different insertion order hits the same cache entry.
+    (The cached RefDB is self-describing — ``species_names`` records the
+    species order of the build that wrote it — so a load under a
+    different insertion order still reports every species correctly.)
+    """
+    parts = []
     for name, toks in genomes.items():
-        h.update(name.encode())
+        h = hashlib.sha256(name.encode())
+        h.update(b"\x00")
         h.update(np.ascontiguousarray(toks, dtype=np.int32).tobytes())
-    return h.hexdigest()[:16]
+        parts.append(h.digest())
+    return hashlib.sha256(b"".join(sorted(parts))).hexdigest()[:16]

@@ -163,14 +163,25 @@ class ProfileHandle:
 
 
 class ProfilingService:
-    """Multi-tenant profiling over one shared RefDB + backend."""
+    """Multi-tenant profiling over one shared RefDB + backend.
+
+    The shared database may itself be sharded: when the session's backend
+    is ``sharded``, ``build_or_load_refdb`` has already padded the
+    prototype axis and distributed it across the device mesh, and every
+    cohort the service pumps through ``classify_batch`` runs the
+    shard_map'd AM search — many tenants, one multi-device database, no
+    service-level changes (requests stay bit-identical to sequential
+    runs; ``tests/test_sharded.py`` pins this on an 8-way mesh).
+    """
 
     def __init__(self, session: ProfilingSession, *, max_active: int = 8,
                  max_queue: int = 64,
                  buckets: Sequence[int] | None = None):
         """Args:
           session: a session whose RefDB is already built/loaded (the one
-            expensive shared structure; requests only read it).
+            expensive shared structure; requests only read it — for the
+            ``sharded`` backend it is already device-placed, one shard
+            per device).
           max_active: how many requests interleave reads at once.
           max_queue: bound on requests waiting behind the active set.
           buckets: allowed read-length paddings for cohort shapes

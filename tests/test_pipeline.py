@@ -35,7 +35,7 @@ def sample():
 
 def test_registry_names():
     assert {"reference", "reference_packed", "pallas_matmul",
-            "pallas_packed"} <= set(available_backends())
+            "pallas_packed", "pcm_sim", "sharded"} <= set(available_backends())
 
 
 def test_unknown_backend_rejected():
@@ -118,7 +118,7 @@ def test_cache_reused_across_backends(tmp_path, sample):
     s2 = ProfilingSession(_config(backend="pallas_matmul", batch_size=32))
     db = s2.build_or_load_refdb(sample.genomes, cache_dir=tmp_path)
     assert s2.refdb_loaded_from_cache
-    assert len(list(tmp_path.glob("refdb_*.pkl"))) == 1
+    assert len(list(tmp_path.glob("refdb_*.npz"))) == 1
     np.testing.assert_array_equal(np.asarray(db.prototypes),
                                   np.asarray(s1.refdb.prototypes))
 
@@ -153,7 +153,7 @@ def test_stride_gets_distinct_cache_entries(tmp_path, sample):
     db2 = s2.build_or_load_refdb(sample.genomes, cache_dir=tmp_path)
     assert s1.refdb_cache_path(tmp_path, sample.genomes) \
         != s2.refdb_cache_path(tmp_path, sample.genomes)
-    assert len(list(tmp_path.glob("refdb_*.pkl"))) == 2
+    assert len(list(tmp_path.glob("refdb_*.npz"))) == 2
     # overlapping stride really does build a different database
     assert db2.num_prototypes > db1.num_prototypes
     # and the second call with an equal config loads from cache, bit-exact
@@ -162,6 +162,27 @@ def test_stride_gets_distinct_cache_entries(tmp_path, sample):
     assert s3.refdb_loaded_from_cache
     np.testing.assert_array_equal(np.asarray(db3.prototypes),
                                   np.asarray(db2.prototypes))
+
+
+def test_cache_key_ignores_genome_insertion_order(tmp_path, sample):
+    """Regression: the same reference set in a different dict order must
+    hit the same cache entry (the digest used to hash in iteration
+    order, so a reordered FASTA rebuilt an identical database)."""
+    s1 = ProfilingSession(_config())
+    s1.build_or_load_refdb(sample.genomes, cache_dir=tmp_path)
+    reordered = dict(reversed(list(sample.genomes.items())))
+    assert list(reordered) != list(sample.genomes)
+    s2 = ProfilingSession(_config())
+    assert s2.refdb_cache_path(tmp_path, reordered) \
+        == s1.refdb_cache_path(tmp_path, sample.genomes)
+    db = s2.build_or_load_refdb(reordered, cache_dir=tmp_path)
+    assert s2.refdb_loaded_from_cache
+    assert len(list(tmp_path.glob("refdb_*.npz"))) == 1
+    # the cached entry is self-describing: species order is the original
+    # build's, recorded in species_names, so reports stay name-correct
+    assert db.species_names == tuple(sample.genomes.keys())
+    np.testing.assert_array_equal(np.asarray(db.prototypes),
+                                  np.asarray(s1.refdb.prototypes))
 
 
 def test_cache_key_covers_genome_content(tmp_path, sample):
@@ -176,7 +197,7 @@ def test_cache_key_covers_genome_content(tmp_path, sample):
     s2 = ProfilingSession(_config())
     s2.build_or_load_refdb(other, cache_dir=tmp_path)
     assert not s2.refdb_loaded_from_cache
-    assert len(list(tmp_path.glob("refdb_*.pkl"))) == 2
+    assert len(list(tmp_path.glob("refdb_*.npz"))) == 2
 
 
 # -- ReadSource ------------------------------------------------------------

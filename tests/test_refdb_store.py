@@ -1,0 +1,219 @@
+"""The persistent RefDB store: versioned format, manifest, atomic write,
+and the auto-rebuild contract (every defect reads as a cache miss)."""
+
+import json
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core.hd_space import HDSpace
+from repro.core.assoc_memory import RefDBBuilder, build_refdb
+from repro.genomics import synth
+from repro.pipeline import ProfilerConfig, ProfilingSession, refdb_store
+
+SP = HDSpace(dim=512, ngram=5, z_threshold=3.0)
+SPEC = synth.CommunitySpec(num_species=3, genome_len=4_000, seed=7)
+
+
+@pytest.fixture(scope="module")
+def genomes():
+    return synth.make_reference_genomes(SPEC)
+
+
+@pytest.fixture(scope="module")
+def db(genomes):
+    return build_refdb(genomes, SP, window=1024)
+
+
+def _assert_same_db(a, b):
+    np.testing.assert_array_equal(np.asarray(a.prototypes),
+                                  np.asarray(b.prototypes))
+    np.testing.assert_array_equal(np.asarray(a.proto_species),
+                                  np.asarray(b.proto_species))
+    np.testing.assert_array_equal(np.asarray(a.genome_lengths),
+                                  np.asarray(b.genome_lengths))
+    assert a.num_species == b.num_species
+    assert a.species_names == b.species_names
+
+
+# -- roundtrip + manifest ---------------------------------------------------
+
+def test_save_load_roundtrip(tmp_path, db):
+    path = tmp_path / "refdb_x.npz"
+    refdb_store.save(path, db, refdb_fingerprint="fp", genomes_digest="gd")
+    back = refdb_store.load(path)
+    assert back is not None
+    _assert_same_db(back, db)
+
+
+def test_manifest_fields(tmp_path, db):
+    path = tmp_path / "refdb_x.npz"
+    refdb_store.save(path, db, refdb_fingerprint="fp", genomes_digest="gd")
+    m = refdb_store.manifest(path)
+    assert m["format_version"] == refdb_store.FORMAT_VERSION
+    assert m["refdb_fingerprint"] == "fp" and m["genomes_digest"] == "gd"
+    assert m["num_species"] == db.num_species
+    assert m["num_prototypes"] == db.prototypes.shape[0]
+    assert m["dim_words"] == db.prototypes.shape[1]
+    assert tuple(m["species_names"]) == db.species_names
+    assert m["genome_lengths"] == [int(x) for x in
+                                   np.asarray(db.genome_lengths)]
+
+
+def test_atomic_write_leaves_no_partial_entry(tmp_path, db):
+    """The published path appears only complete; staging files are temp-
+    named so a reader can never open a half-written entry."""
+    path = tmp_path / "refdb_x.npz"
+    refdb_store.save(path, db)
+    entries = [p.name for p in tmp_path.iterdir()]
+    assert entries == ["refdb_x.npz"]           # no stray tmp files
+    assert refdb_store.load(path) is not None
+    refdb_store.save(path, db)                  # overwrite is atomic too
+    assert refdb_store.load(path) is not None
+
+
+# -- the auto-rebuild contract: every defect is a miss ----------------------
+
+def test_load_missing_returns_none(tmp_path):
+    assert refdb_store.load(tmp_path / "nope.npz") is None
+
+
+def test_load_legacy_pickle_returns_none(tmp_path, db):
+    """A pickle cache from before this format must read as a miss, not
+    crash (the pre-PR cache files were raw pickles)."""
+    path = tmp_path / "refdb_x.npz"
+    path.write_bytes(pickle.dumps(db))
+    assert refdb_store.load(path) is None
+    assert refdb_store.manifest(path) is None
+
+
+def test_load_truncated_returns_none(tmp_path, db):
+    path = tmp_path / "refdb_x.npz"
+    refdb_store.save(path, db)
+    blob = path.read_bytes()
+    path.write_bytes(blob[:len(blob) // 2])
+    assert refdb_store.load(path) is None
+
+
+def test_load_garbage_returns_none(tmp_path):
+    path = tmp_path / "refdb_x.npz"
+    path.write_bytes(b"not an archive at all")
+    assert refdb_store.load(path) is None
+
+
+def test_load_future_format_version_returns_none(tmp_path, db):
+    import io
+    path = tmp_path / "refdb_x.npz"
+    refdb_store.save(path, db)
+    with np.load(path) as z:
+        m = json.loads(bytes(z["manifest"]).decode())
+        arrays = {k: z[k] for k in z.files if k != "manifest"}
+    m["format_version"] = refdb_store.FORMAT_VERSION + 1
+    buf = io.BytesIO()
+    np.savez(buf, manifest=np.frombuffer(
+        json.dumps(m).encode(), dtype=np.uint8), **arrays)
+    path.write_bytes(buf.getvalue())
+    assert refdb_store.load(path) is None
+
+
+def test_load_inconsistent_arrays_returns_none(tmp_path, db):
+    """Arrays that disagree with their manifest (bit-rot, hand edits)
+    must not load into a half-plausible RefDB."""
+    import io
+    path = tmp_path / "refdb_x.npz"
+    refdb_store.save(path, db)
+    with np.load(path) as z:
+        m = bytes(z["manifest"])
+        arrays = {k: z[k] for k in z.files if k != "manifest"}
+    arrays["proto_species"] = arrays["proto_species"][:-1]   # truncate one
+    buf = io.BytesIO()
+    np.savez(buf, manifest=np.frombuffer(m, dtype=np.uint8), **arrays)
+    path.write_bytes(buf.getvalue())
+    assert refdb_store.load(path) is None
+
+
+# -- streaming build --------------------------------------------------------
+
+def test_build_streaming_matches_build_refdb(tmp_path, genomes, db):
+    seen = []
+    builder = RefDBBuilder(SP, window=1024)
+    path = tmp_path / "refdb_s.npz"
+    out = refdb_store.build_streaming(
+        genomes, builder, path=path,
+        on_genome=lambda name, total: seen.append((name, total)))
+    _assert_same_db(out, db)
+    _assert_same_db(refdb_store.load(path), db)
+    assert [n for n, _ in seen] == list(genomes)
+    assert seen[-1][1] == db.prototypes.shape[0]    # monotone running total
+    assert [t for _, t in seen] == sorted(t for _, t in seen)
+
+
+def test_builder_rejects_duplicates_and_empty():
+    builder = RefDBBuilder(SP, window=1024)
+    with pytest.raises(ValueError, match="no genomes"):
+        builder.finish()
+    builder.add_genome("a", np.zeros(100, np.int32))
+    with pytest.raises(ValueError, match="already added"):
+        builder.add_genome("a", np.zeros(100, np.int32))
+
+
+def test_builder_failed_add_leaves_state_clean(genomes):
+    """A genome whose encode raises commits nothing: it can be retried,
+    and finish() never books a species with zero prototype rows."""
+    calls = {"n": 0}
+    good_encode = RefDBBuilder(SP, window=1024)._encode
+
+    def flaky(tokens, lengths):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("device fell over")
+        return good_encode(tokens, lengths)
+
+    builder = RefDBBuilder(SP, window=1024, encode_fn=flaky)
+    name, toks = next(iter(genomes.items()))
+    with pytest.raises(RuntimeError, match="fell over"):
+        builder.add_genome(name, toks)
+    builder.add_genome(name, toks)              # retry works: not "already added"
+    db = builder.finish()
+    assert db.num_species == 1
+    assert db.species_names == (name,)
+    assert (np.asarray(db.proto_species) == 0).all()
+
+
+# -- session integration ----------------------------------------------------
+
+def _config(**kw):
+    kw.setdefault("space", SP)
+    kw.setdefault("window", 1024)
+    kw.setdefault("batch_size", 16)
+    return ProfilerConfig(**kw)
+
+
+def test_session_rebuilds_over_poisoned_cache(tmp_path, genomes):
+    """A legacy-pickle (or corrupt) entry at the exact cache path triggers
+    a clean rebuild that replaces it with a valid store entry."""
+    s = ProfilingSession(_config())
+    path = s.refdb_cache_path(tmp_path, genomes)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_bytes(pickle.dumps({"legacy": "pickle"}))
+    db = s.build_or_load_refdb(genomes, cache_dir=tmp_path)
+    assert not s.refdb_loaded_from_cache            # rebuilt, no crash
+    assert refdb_store.load(path) is not None       # and repaired on disk
+    s2 = ProfilingSession(_config())
+    s2.build_or_load_refdb(genomes, cache_dir=tmp_path)
+    assert s2.refdb_loaded_from_cache
+    np.testing.assert_array_equal(np.asarray(s2.refdb.prototypes),
+                                  np.asarray(db.prototypes))
+
+
+def test_session_cache_entry_carries_provenance(tmp_path, genomes):
+    s = ProfilingSession(_config())
+    s.build_or_load_refdb(genomes, cache_dir=tmp_path)
+    m = refdb_store.manifest(s.refdb_cache_file)
+    assert m["refdb_fingerprint"] == s.config.refdb_fingerprint()
+    assert m["genomes_digest"]                      # non-empty digest half
+    # the content-determining config rides along, human-readable
+    assert m["window"] == s.config.window
+    assert m["stride"] == s.config.effective_stride
+    assert m["space"]["dim"] == SP.dim
