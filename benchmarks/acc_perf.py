@@ -17,8 +17,6 @@ throughput = 1 / max(stage times) — the paper's own bottleneck analysis
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import common
 from benchmarks.hw import V5E
 

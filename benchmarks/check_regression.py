@@ -1,0 +1,118 @@
+"""Benchmark-regression gate: BENCH_smoke.json vs benchmarks/baseline.json.
+
+CI runs this right after ``benchmarks/run.py --smoke``::
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+
+It fails (exit 1) when, for any backend present in the baseline,
+
+* ``relative_throughput`` (reads/s normalized to the same run's
+  ``reference`` backend, so runner speed cancels) dropped more than
+  ``--tolerance`` (default 20%) below the baseline ratio, or
+* ``intermediate_bytes_per_read`` increased at all — the traffic model
+  is deterministic, so any increase is a real dataflow regression (e.g.
+  the fused path re-materializing the encoded matrix).
+
+Backends in the current run but not the baseline are reported and pass
+(new backends enter the gate when the baseline is refreshed).
+
+Refresh after an intentional perf change::
+
+    PYTHONPATH=src python -m benchmarks.run --smoke
+    PYTHONPATH=src python -m benchmarks.check_regression --update
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+BASELINE = pathlib.Path(__file__).resolve().parent / "baseline.json"
+#: Per-backend fields carried into the baseline (the stable, comparable
+#: subset — absolute reads/s is runner-dependent and deliberately left out).
+BASELINE_FIELDS = ("relative_throughput", "intermediate_bytes_per_read")
+
+
+def load(path: pathlib.Path) -> dict:
+    try:
+        return json.loads(path.read_text())
+    except FileNotFoundError:
+        raise SystemExit(f"missing {path}; run "
+                         f"`python -m benchmarks.run --smoke` first")
+
+
+def update_baseline(current: dict, path: pathlib.Path = BASELINE) -> dict:
+    """Write the comparable subset of ``current`` as the new baseline."""
+    baseline = {
+        "schema": current["schema"],
+        "backends": {
+            name: {f: r[f] for f in BASELINE_FIELDS}
+            for name, r in current["backends"].items()
+        },
+    }
+    path.write_text(json.dumps(baseline, indent=2, sort_keys=True) + "\n")
+    return baseline
+
+
+def check(current: dict, baseline: dict, tolerance: float = 0.20
+          ) -> list[str]:
+    """All regression messages (empty == gate green)."""
+    problems = []
+    cur = current["backends"]
+    for name, base in baseline["backends"].items():
+        if name not in cur:
+            problems.append(f"{name}: present in baseline but not measured")
+            continue
+        got = cur[name]
+        floor = base["relative_throughput"] * (1.0 - tolerance)
+        if got["relative_throughput"] < floor:
+            problems.append(
+                f"{name}: relative throughput {got['relative_throughput']:.4f}"
+                f" < {floor:.4f} (baseline "
+                f"{base['relative_throughput']:.4f} - {tolerance:.0%})")
+        if got["intermediate_bytes_per_read"] \
+                > base["intermediate_bytes_per_read"]:
+            problems.append(
+                f"{name}: intermediate bytes/read grew "
+                f"{base['intermediate_bytes_per_read']} -> "
+                f"{got['intermediate_bytes_per_read']}")
+    if not current.get("bit_exact", False):
+        problems.append("backend reports were not bit-identical")
+    return problems
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("bench", nargs="?", default="BENCH_smoke.json",
+                    help="benchmark JSON produced by run.py --smoke")
+    ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed relative-throughput drop (0.20 = 20%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="refresh the baseline from the current run "
+                         "instead of gating")
+    args = ap.parse_args(argv)
+
+    current = load(pathlib.Path(args.bench))
+    if args.update:
+        update_baseline(current, pathlib.Path(args.baseline))
+        print(f"baseline refreshed from {args.bench} -> {args.baseline}")
+        return
+    baseline = load(pathlib.Path(args.baseline))
+    for name, r in sorted(current["backends"].items()):
+        marker = "" if name in baseline["backends"] else "  (not gated yet)"
+        print(f"{name}: rel={r['relative_throughput']:.4f} "
+              f"bytes/read={r['intermediate_bytes_per_read']}{marker}")
+    problems = check(current, baseline, args.tolerance)
+    if problems:
+        print("\nREGRESSION GATE FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        raise SystemExit(1)
+    print("\nregression gate: green")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,8 +10,56 @@ accelerated version).
 
 from __future__ import annotations
 
+import dataclasses
+
 from benchmarks import common
-from repro.pipeline import ArraySource
+from repro.core import HDSpace
+from repro.pipeline import ArraySource, ProfilerConfig, ProfilingSession
+
+
+def fused_vs_two_kernel(community=None, emit=common.emit,
+                        sample: str = "kylo", cap: int = 128) -> dict:
+    """Fused megakernel vs the two-kernel Pallas path, same reads.
+
+    The comparison the fused backend exists for: identical encode math,
+    identical agreement — the only difference is whether the encoded
+    ``(B, W)`` matrix round-trips through HBM between the kernels.  Reads
+    are capped (interpret mode on CPU is orders slower than real TPU
+    kernels; ratios, bytes/read, and the bit-exactness check are what
+    transfer).  Emits per-backend us/read plus the analytic intermediate
+    HBM bytes/read (see ``benchmarks.smoke.intermediate_bytes_per_read``).
+    """
+    from benchmarks.smoke import intermediate_bytes_per_read
+
+    community = community or common.afs_small()
+    toks, lens, *_ = community.samples[sample]
+    toks, lens = toks[:cap], lens[:cap]
+    # CPU-sane space: the W-axis still tiles (W=64 words, bw=64).
+    space = HDSpace(dim=2048, ngram=16, z_threshold=5.0)
+    config = ProfilerConfig(space=space, window=4096, batch_size=cap,
+                            backend="reference")
+    out, reports = {}, {}
+    db = None
+    for name in ("reference", "pallas_matmul", "pallas_fused"):
+        prof = ProfilingSession(dataclasses.replace(config, backend=name))
+        if db is None:
+            db = prof.build_refdb(community.genomes)
+        prof.refdb = db               # bit-exact twins: one shared build
+        src = ArraySource(toks, lens)
+        prof.profile(src)             # warmup (compile)
+        secs, rep = common.timeit(lambda: prof.profile(src))
+        reports[name] = rep.to_json()
+        us = secs / len(toks) * 1e6
+        bytes_per_read = intermediate_bytes_per_read(name, space)
+        out[name] = (us, bytes_per_read)
+        emit(f"query.fused_cmp.{name}.us_per_read", us,
+             f"{bytes_per_read}B/read-intermediate")
+    assert reports["pallas_fused"] == reports["reference"], \
+        "pallas_fused report diverged from reference"
+    assert reports["pallas_matmul"] == reports["reference"], \
+        "pallas_matmul report diverged from reference"
+    emit("query.fused_cmp.bit_exact", 0.0, "True")
+    return out
 
 
 def run(community=None, emit=common.emit, sample: str = "kylo") -> dict:
@@ -44,6 +92,7 @@ def run(community=None, emit=common.emit, sample: str = "kylo") -> dict:
         out[pname] = (us_per_read, mreads_per_min)
         emit(f"query.{pname}.us_per_read", us_per_read,
              f"{mreads_per_min:.4f}Mreads/min")
+    fused_vs_two_kernel(community, emit, sample)
     return out
 
 

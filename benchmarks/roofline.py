@@ -184,6 +184,12 @@ def demeter_hdc_terms(batch: int = 65536, read_len: int = 150,
     zero-collective by launch/dryrun_hdc.py `query_a2a`): reads sharded
     over ALL 256 chips end-to-end, D unsharded, prototypes replicated
     (10 MB) — no contraction collective exists at all.
+
+    fused (kernels/fused_profile.py, the Acc-Demeter dataflow): the
+    read_parallel layout run through the encode->search megakernel — the
+    encoded queries never round-trip through HBM, so the ``d_dev/8 * 2``
+    intermediate term of the memory numerator vanishes and the per-read
+    HBM traffic drops to tokens-in + the shared prototype stream.
     """
     sp = common.PROD_SPACE
     g = read_len - sp.ngram + 1
@@ -192,14 +198,15 @@ def demeter_hdc_terms(batch: int = 65536, read_len: int = 150,
         d_dev = sp.dim / 16                # D over model axis=16
         # one psum of partial agreements (B_dev x S int32) over model=16
         link = 2 * b_dev * num_protos * 4 * (15 / 16)
-    else:                                  # read_parallel
+    else:                                  # read_parallel / fused
         b_dev = batch / chips
         d_dev = sp.dim
         link = 0.0
     enc_ops = b_dev * g * d_dev * 1.25
     mm_flops = 2.0 * b_dev * num_protos * d_dev
     compute_t = enc_ops / V5E.vpu_ops + mm_flops / V5E.bf16_flops
-    hbm = b_dev * (read_len + d_dev / 8 * 2) + num_protos * d_dev / 8
+    q_intermediate = 0.0 if variant == "fused" else b_dev * d_dev / 8 * 2
+    hbm = b_dev * read_len + q_intermediate + num_protos * d_dev / 8
     memory_t = hbm / V5E.hbm_bw
     coll_t = link / V5E.ici_bw
     terms = {"compute_s": compute_t, "memory_s": memory_t,
@@ -232,7 +239,7 @@ def markdown_table() -> str:
             f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
             f"| {t['collective_s']:.3e} | {t['dominant']} "
             f"| {t['roofline_fraction']:.2f} | {t['useful_flops_ratio']:.2f} |")
-    for variant in ("d_contract", "read_parallel"):
+    for variant in ("d_contract", "read_parallel", "fused"):
         h = demeter_hdc_terms(variant=variant)
         rows.append(
             f"| demeter_hdc ({variant}) | query_64k | 16x16 "
@@ -256,10 +263,11 @@ def run(emit=common.emit) -> None:
         emit(f"roofline.{d['arch']}.{d['shape']}.{d['mesh']}", 0.0,
              f"dom={t['dominant']};frac={t['roofline_fraction']:.2f};"
              f"useful={t['useful_flops_ratio']:.2f}")
-    for variant in ("d_contract", "read_parallel"):
+    for variant in ("d_contract", "read_parallel", "fused"):
         h = demeter_hdc_terms(variant=variant)
         emit(f"roofline.demeter_hdc.query_64k.{variant}", 0.0,
              f"dom={h['dominant']};frac={h['roofline_fraction']:.2f};"
+             f"mem_us={h['memory_s'] * 1e6:.1f};"
              f"reads/s/chip={h['reads_per_s_per_chip']:.0f}")
     emit("roofline.cells_analyzed", 0.0, f"{ok}/{n}")
 

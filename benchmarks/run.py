@@ -14,6 +14,11 @@ Prints ``name,us_per_call,derived`` CSV (see benchmarks.common.emit).
                           (grow the sweep with
                           XLA_FLAGS=--xla_force_host_platform_device_count=N)
   roofline    §Roofline three-term analysis from dry-run artifacts
+
+``--smoke`` switches to the CI benchmark smoke instead: a tiny sample
+through every hot-path backend, emitting machine-readable
+``BENCH_smoke.json`` for the regression gate
+(``python -m benchmarks.check_regression``); see benchmarks/smoke.py.
 """
 
 from __future__ import annotations
@@ -26,6 +31,10 @@ from benchmarks import (accel_sim, accuracy, acc_perf, build_time, common,
 
 
 def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        from benchmarks import smoke
+        smoke.main([a for a in sys.argv[1:] if a != "--smoke"])
+        return
     only = sys.argv[1] if len(sys.argv) > 1 else None
     community = common.afs_small()
     print("name,us_per_call,derived")

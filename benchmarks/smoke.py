@@ -1,0 +1,192 @@
+"""CI benchmark smoke: reads/s + intermediate HBM bytes/read per backend.
+
+``python -m benchmarks.run --smoke`` (or ``python -m benchmarks.smoke``)
+profiles one tiny synthetic sample through each hot-path backend and
+writes a machine-readable ``BENCH_smoke.json``:
+
+    {"schema": 1, "jax": ..., "platform": ...,
+     "config": {...}, "num_reads": ...,
+     "bit_exact": true,
+     "backends": {
+        "pallas_fused": {"reads_per_s": ..., "us_per_read": ...,
+                         "relative_throughput": ...,
+                         "intermediate_bytes_per_read": 0}, ...}}
+
+``relative_throughput`` is each backend's reads/s divided by the same
+run's *family anchor* (jnp backends vs ``reference``, Pallas backends vs
+``pallas_matmul`` — see ``ANCHORS``).  The regression gate
+(:mod:`benchmarks.check_regression`) compares THIS ratio against
+``benchmarks/baseline.json``, so absolute runner speed cancels and a >20%
+relative slowdown of any backend fails CI no matter the machine.  The
+anchors themselves are gated by the ``bit_exact`` check plus their
+family partners' ratios (an anchor can't silently regress without every
+partner's ratio moving).
+
+``intermediate_bytes_per_read`` is the analytical HBM traffic of the
+query path's *intermediates* — everything between raw tokens in and
+agreement scores out (see :func:`intermediate_bytes_per_read`).  It is
+deterministic, so the gate allows no increase at all: the fused
+megakernel's 0 bytes/read is pinned forever.
+
+Refresh the baseline after an intentional perf change with:
+
+    PYTHONPATH=src python -m benchmarks.run --smoke
+    PYTHONPATH=src python -m benchmarks.check_regression --update
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+
+from benchmarks import common
+from repro.core import HDSpace
+from repro.pipeline import ArraySource, ProfilerConfig, ProfilingSession
+
+SCHEMA = 1
+
+#: The hot-path lineup the gate tracks (pcm_sim is covered by accel-smoke;
+#: sharded by shard-smoke — both are wrappers around these primitives).
+BACKENDS = ("reference", "reference_packed", "pallas_matmul",
+            "pallas_packed", "pallas_fused")
+
+#: Normalization anchor per backend (its own execution family's
+#: two-kernel baseline); see the comment at the normalization site.
+ANCHORS = {
+    "reference": "reference",
+    "reference_packed": "reference",
+    "pallas_matmul": "pallas_matmul",
+    "pallas_packed": "pallas_matmul",
+    "pallas_fused": "pallas_matmul",
+}
+
+# Small enough that interpret-mode Pallas stays in CI seconds, big enough
+# that per-read timing dominates dispatch overhead.
+SMOKE_SPACE = HDSpace(dim=512, ngram=8, z_threshold=3.0)
+SMOKE_CONFIG = ProfilerConfig(space=SMOKE_SPACE, window=1024,
+                              batch_size=64, backend="reference")
+
+
+def intermediate_bytes_per_read(backend: str, space: HDSpace) -> int:
+    """Analytical HBM bytes of query-path *intermediates*, per read.
+
+    Counts only traffic the kernel organization itself creates between
+    "tokens in" and "scores out" (what fusion can eliminate) — not the
+    token read or score write every backend shares, and not the
+    prototype stream, which is identical across backends:
+
+      two-kernel ±1 matmul   packed query write+read (4B/word each) plus
+                             the ±1 bf16 expansion write+read (2B/bit);
+      two-kernel packed      packed query write+read only;
+      pallas_fused           0 — the encoded tile never leaves VMEM.
+    """
+    w_bytes = space.num_words * 4
+    if backend in ("reference", "pallas_matmul"):
+        return 2 * w_bytes + 2 * space.dim * 2
+    if backend in ("reference_packed", "pallas_packed"):
+        return 2 * w_bytes
+    if backend == "pallas_fused":
+        return 0
+    raise ValueError(f"no traffic model for backend {backend!r}")
+
+
+def run_smoke(out_path: str | pathlib.Path = "BENCH_smoke.json",
+              num_reads: int = 256, rounds: int = 5,
+              emit=common.emit) -> dict:
+    """Time every backend on one shared sample; write ``out_path``."""
+    community = common.make_community(
+        "SMOKE", num_species=4, genome_len=12_000,
+        reads_per_sample=num_reads, seed=7)
+    toks, lens, *_ = community.samples["kylo"]
+    source = ArraySource(toks, lens)
+
+    import dataclasses
+    sessions: dict[str, ProfilingSession] = {}
+    reports: dict[str, str] = {}
+    db = None
+    for name in BACKENDS:
+        session = ProfilingSession(
+            dataclasses.replace(SMOKE_CONFIG, backend=name))
+        if db is None:
+            db = session.build_refdb(community.genomes)
+        session.refdb = db            # bit-exact twins: one shared build
+        reports[name] = session.profile(source).to_json()  # warmup+check
+        sessions[name] = session
+
+    # Timing rounds are INTERLEAVED across backends (round-robin, best
+    # pass per backend): the gate compares throughput *ratios*, and with
+    # per-backend timing windows any machine-speed drift between windows
+    # lands straight in the ratio.  Interleaving puts every backend in
+    # every window, so drift cancels and best-of-R converges per backend.
+    # Fast (jnp) backends additionally repeat within each round until
+    # ~0.25s has elapsed: a lone ~ms pass is granularity-and-GC noise.
+    best = {name: float("inf") for name in BACKENDS}
+    for _ in range(rounds):
+        for name, session in sessions.items():
+            spent = 0.0
+            while spent < 0.25:
+                secs, _ = common.timeit(lambda: session.profile(source))
+                best[name] = min(best[name], secs)
+                spent += secs
+
+    results: dict[str, dict] = {}
+    for name, secs in best.items():
+        us = secs / num_reads * 1e6
+        results[name] = {
+            "reads_per_s": num_reads / secs,
+            "us_per_read": us,
+            "intermediate_bytes_per_read":
+                intermediate_bytes_per_read(name, SMOKE_SPACE),
+        }
+        emit(f"smoke.{name}.us_per_read", us,
+             f"{num_reads / secs:.1f}reads/s")
+
+    # Normalize each backend inside its own execution family: jnp
+    # backends against `reference`, Pallas (interpret-mode on CPU)
+    # against `pallas_matmul`.  Cross-family ratios mix two runtimes
+    # that respond differently to runner load (BLAS threading vs the
+    # Pallas interpreter) and are too volatile to gate at 20%;
+    # within-family ratios are what a kernel regression actually moves.
+    for name, r in results.items():
+        anchor = ANCHORS[name]
+        r["anchor"] = anchor
+        r["relative_throughput"] = (r["reads_per_s"]
+                                    / results[anchor]["reads_per_s"])
+
+    bit_exact = all(r == reports["reference"] for r in reports.values())
+    payload = {
+        "schema": SCHEMA,
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "config": SMOKE_CONFIG.to_dict(),
+        "num_reads": num_reads,
+        "bit_exact": bit_exact,
+        "backends": results,
+    }
+    out = pathlib.Path(out_path)
+    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    emit("smoke.bit_exact", 0.0, str(bit_exact))
+    emit("smoke.json", 0.0, str(out))
+    if not bit_exact:
+        raise SystemExit(
+            "smoke FAILED: backend reports are not bit-identical")
+    return payload
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="BENCH_smoke.json",
+                    help="where to write the benchmark JSON")
+    ap.add_argument("--reads", type=int, default=256)
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="interleaved timing rounds (best pass counts)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run_smoke(args.out, num_reads=args.reads, rounds=args.rounds)
+
+
+if __name__ == "__main__":
+    main()

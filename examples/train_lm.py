@@ -37,7 +37,6 @@ def main():
     args = ap.parse_args()
 
     # register the config under a private name so the driver can find it
-    import repro.configs as configs
     mod = type(sys)("repro.configs.repro_100m")
     mod.CONFIG = CFG_100M
     mod.SMOKE = dataclasses.replace(CFG_100M, n_layers=2, d_model=64,

@@ -14,8 +14,6 @@ The AM is immutable after build (PCM write-once discipline, paper §5.4);
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -20,7 +20,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def pipeline_stages(n_layers: int, n_stages: int) -> list[tuple[int, int]]:
@@ -90,10 +90,10 @@ def pipelined_apply(stage_params, x: jax.Array, stage_fn: Callable,
         mask = (stage == n_stages - 1).astype(outputs.dtype)
         return jax.lax.psum(outputs * mask, axis)
 
+    from repro.distributed.sharding import shard_map_compat
     specs_params = jax.tree.map(lambda _: P(axis), stage_params)
-    out = jax.shard_map(
+    out = shard_map_compat(
         per_pod, mesh=mesh,
         in_specs=(specs_params, P()), out_specs=P(),
-        check_vma=False,
     )(stage_params, micro)
     return out.reshape(b, *x.shape[1:])

@@ -1,0 +1,161 @@
+"""Fused encode->search Pallas megakernel (the whole query hot path).
+
+Acc-Demeter's headline efficiency comes from *never materializing* the
+encoded read hypervectors off-chip: the encoder unit streams each read's
+n-gram tokens and the finished HD vector flows straight into the AM
+crossbar (paper §5).  The software pipeline so far ran the two kernels
+separately — ``hdc_encoder`` writes the full ``(B, W)`` encoded matrix to
+HBM, ``hamming_am``/``am_matmul`` reads it back.  This kernel is the TPU
+realization of the paper's dataflow: one grid cell encodes a
+``(bb, bw)`` word tile of the query batch *in VMEM* and immediately folds
+it into the Hamming accumulator against every prototype's matching word
+tile, so the encoded queries live only as a VMEM temporary.
+
+Per grid cell ``(i, j)``:
+
+  1. **Encode** the word tile exactly as ``hdc_encoder._kernel`` does:
+     gather-free IM lookup (4 predicated selects), per-bit bundling
+     counters in ``(bb, 32, bw)`` scratch, majority threshold with the
+     tie-break vector, re-pack to ``(bb, bw)`` uint32 — all VMEM.
+  2. **Search**: XOR the fresh tile against the prototypes' ``(S, bw)``
+     word tile and accumulate popcounts into the persistent ``(bb, S)``
+     Hamming scratch.
+  3. On the last word tile, flush ``agreement = dim - hamming`` — the
+     only HBM write of the whole query path besides the final scores.
+
+Grid: ``(B/bb, W/bw)`` with the word-tile axis innermost ("arbitrary":
+it carries the accumulator), batch tiles parallel.  Bit-exact with
+``reference`` encode + agreement by construction — the encode math is
+byte-for-byte the encoder kernel's, and ``dim - popcount(xor)`` is the
+same exact integer identity both AM kernels use.
+
+VMEM per cell: ``S*bw*4`` (prototype tile) + ``bb*S*4`` (accumulator) +
+``bb*32*bw*4`` (counters); callers bound S per call by chunking the
+prototype axis (see ``ops.fused_agreement``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pallas_compat import CompilerParams, VMEM, interpret_default
+
+WORD_BITS = 32
+
+
+def _unpack(words: jax.Array) -> jax.Array:
+    """(bb, bw) uint32 -> (bb, 32, bw) int32 bits (bit b in sublane b)."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, :, None]
+    return ((words[:, None, :] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+
+
+def _pack(bits: jax.Array) -> jax.Array:
+    """(bb, 32, bw) {0,1} -> (bb, bw) uint32."""
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    return (bits.astype(jnp.uint32) * weights[None, :, None]).sum(
+        axis=1, dtype=jnp.uint32)
+
+
+def _kernel(tokens_ref, len_ref, im_ref, tie_ref, p_ref, o_ref,
+            counts_ref, acc_ref, *, n: int, alphabet: int, g: int, dim: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # -- encode the (bb, bw) word tile (same math as hdc_encoder._kernel) --
+    toks = tokens_ref[...]                       # (bb, L) int32
+    m = jnp.maximum(len_ref[...] - (n - 1), 0)   # (bb, 1) valid grams
+    counts_ref[...] = jnp.zeros_like(counts_ref)
+    bb = counts_ref.shape[0]
+    bw = counts_ref.shape[-1]
+
+    if g > 0:
+        def body(i, _):
+            window = jax.lax.dynamic_slice(toks, (0, i), (bb, n))  # (bb, n)
+            gram = jnp.zeros((bb, bw), jnp.uint32)
+            for jj in range(n):                   # bind: XOR of rho^j(B[c])
+                tok_j = window[:, jj][:, None]    # (bb, 1)
+                for a in range(alphabet):         # gather-free IM lookup
+                    row = im_ref[jj, a, :][None, :]
+                    gram = jnp.bitwise_xor(
+                        gram, jnp.where(tok_j == a, row, jnp.uint32(0)))
+            valid = (i < m[:, 0])[:, None, None]  # (bb, 1, 1)
+            counts_ref[...] += jnp.where(valid, _unpack(gram), 0)
+            return 0
+
+        jax.lax.fori_loop(0, g, body, 0)
+
+    counts = counts_ref[...]                      # (bb, 32, bw)
+    twice = 2 * counts
+    m_b = m[:, 0][:, None, None]
+    tie_bits = _unpack(tie_ref[...])[0:1]         # (1, 32, bw)
+    bits = jnp.where(twice == m_b, tie_bits,
+                     (twice > m_b).astype(jnp.int32))
+    q = _pack(bits)                               # (bb, bw) — VMEM only
+
+    # -- fold the finished tile straight into the AM search ----------------
+    x = jnp.bitwise_xor(q[:, None, :], p_ref[...][None, :, :])
+    acc_ref[...] += jnp.bitwise_count(x).astype(jnp.int32).sum(axis=-1)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = dim - acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "alphabet", "dim", "bb",
+                                             "bw", "interpret"))
+def fused_profile(tokens: jax.Array, lengths: jax.Array,
+                  im_rolled: jax.Array, tie: jax.Array,
+                  p_packed: jax.Array, *, n: int, dim: int,
+                  alphabet: int = 4, bb: int = 8, bw: int = 128,
+                  interpret: bool | None = None) -> jax.Array:
+    """Agreement of every read against every prototype, single kernel.
+
+    Args:
+      tokens: ``(B, L)`` int32 symbol ids in [0, alphabet).
+      lengths: ``(B, 1)`` int32 true lengths.
+      im_rolled: ``(N, alphabet, W)`` uint32 — ``item_memory.rolled``.
+      tie: ``(1, W)`` uint32 tie-break vector.
+      p_packed: ``(S, W)`` uint32 packed prototypes (zero-padded words
+        and rows are inert: pad words XOR to zero against the pad words
+        of the encoded queries, which are also zero).
+      dim: the LOGICAL HD dimension D (<= 32*W).
+
+    Returns:
+      ``(B, S)`` int32 agreement counts in [0, dim] — bit-identical to
+      ``am_agreement(hdc_encode(...), p_packed)``.
+    """
+    b, length = tokens.shape
+    n_im, a_im, w = im_rolled.shape
+    s, w2 = p_packed.shape
+    assert n_im == n and a_im == alphabet and w == w2, (n_im, a_im, w, w2)
+    g = max(length - n + 1, 0)
+    bb, bw = min(bb, b), min(bw, w)
+    assert b % bb == 0 and w % bw == 0, (
+        f"(B={b}, W={w}) must tile by (bb={bb}, bw={bw}); pad upstream")
+    grid = (b // bb, w // bw)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, alphabet=alphabet, g=g, dim=dim),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, length), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, alphabet, bw), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((1, bw), lambda i, j: (0, j)),
+            pl.BlockSpec((s, bw), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, s), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s), jnp.int32),
+        scratch_shapes=[VMEM((bb, WORD_BITS, bw), jnp.int32),
+                        VMEM((bb, s), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret_default(interpret),
+    )(tokens, lengths, im_rolled, tie, p_packed)

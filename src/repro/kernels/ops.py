@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core import bitops, item_memory
 from repro.core.hd_space import HDSpace
 from repro.kernels import am_matmul as _am_matmul
+from repro.kernels import fused_profile as _fused_profile
 from repro.kernels import hamming_am as _hamming_am
 from repro.kernels import hdc_encoder as _hdc_encoder
 
@@ -92,3 +93,47 @@ def hdc_encode(tokens: jax.Array, lengths: jax.Array, im: jax.Array,
         toks, lens, im_rolled, tie[None, :], n=space.ngram,
         alphabet=space.alphabet_size, bw=bw)
     return out[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("space", "bb", "bw", "bs"))
+def fused_agreement(tokens: jax.Array, lengths: jax.Array, im: jax.Array,
+                    tie: jax.Array, prototypes: jax.Array, space: HDSpace,
+                    *, bb: int = 8, bw: int = 128, bs: int = 4096
+                    ) -> jax.Array:
+    """Fused steps 3+4: read tokens -> agreement, no encoded HBM matrix.
+
+    One :func:`repro.kernels.fused_profile.fused_profile` call per
+    prototype chunk: the encoded query tile lives only in VMEM, so the
+    ``(B, W)`` packed matrix (and the ±1 bf16 expansion of the matmul
+    path) never touches HBM.  Bit-identical to
+    ``am_agreement(hdc_encode(tokens, lengths, im, tie, space), p, dim)``.
+
+    Args:
+      tokens: ``(B, L)`` int32 symbol ids; lengths: ``(B,)`` true lengths.
+      prototypes: ``(S, W)`` uint32 packed prototypes.
+      bb / bw: batch / word-tile sizes (VMEM shape knobs).
+      bs: prototype rows per kernel call — bounds the ``(S, bw)``
+        prototype tile and ``(bb, S)`` accumulator resident in VMEM.
+
+    Returns:
+      ``(B, S)`` int32 agreement in [0, space.dim].
+    """
+    b, s = tokens.shape[0], prototypes.shape[0]
+    im_rolled = item_memory.rolled(im, space.ngram)
+    bb = min(bb, 8 * ((b + 7) // 8))
+    toks = _pad_to(tokens.astype(jnp.int32), 0, max(bb, 8))
+    lens = _pad_to(lengths.astype(jnp.int32)[:, None], 0, max(bb, 8))
+    bw = min(bw, space.num_words)
+    # Pad the word axis to the tile: zero IM/tie/prototype words encode
+    # (and score) as zeros, so padding is inert to the exact agreement.
+    im_rolled = _pad_to(im_rolled, 2, bw)
+    tie_row = _pad_to(tie[None, :], 1, bw)
+    protos = _pad_to(jnp.asarray(prototypes), 1, bw)
+    cols = []
+    for c0 in range(0, s, bs):
+        chunk = _pad_to(protos[c0:min(c0 + bs, s)], 0, 128)
+        cols.append(_fused_profile.fused_profile(
+            toks, lens, im_rolled, tie_row, chunk, n=space.ngram,
+            dim=space.dim, alphabet=space.alphabet_size, bb=bb,
+            bw=bw)[:, :min(bs, s - c0)])
+    return jnp.concatenate(cols, axis=1)[:b] if len(cols) > 1 else cols[0][:b]

@@ -18,8 +18,6 @@ try:  # jax >= 0.4.31 style
             return pltpu.CompilerParams(**kw)
         return pltpu.TPUCompilerParams(**kw)  # older spelling
 except ImportError:  # pragma: no cover - pallas-tpu always importable in CI
-    import jax.numpy as jnp
-
     def VMEM(shape, dtype):
         return jax.ShapeDtypeStruct(shape, dtype)
 

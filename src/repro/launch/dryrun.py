@@ -27,15 +27,13 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import ModelConfig
-from repro.configs import ALIASES, all_archs, get_config
+from repro.configs import all_archs, get_config
 from repro.configs import shapes as shapes_mod
 from repro.distributed import param_specs, sharding
 from repro.launch.mesh import make_production_mesh
-from repro.models import lm
 from repro.serve import serve_step
 from repro.train import train_step as ts
 

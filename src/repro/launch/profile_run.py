@@ -140,13 +140,23 @@ def main() -> None:
                  f"{args.shards}: the mesh holds one shard per device, "
                  f"so the two must agree (or give just one)")
     shards = args.shards if args.shards is not None else args.mesh
-    if shards is not None and backend != "sharded":
-        # --shards N means "this backend, N ways": the sharded backend
-        # wraps it as its base, same reports, 1/N database per device.
-        options = {"base": backend, "shards": shards, **options}
-        backend = "sharded"
-    elif shards is not None:
-        options.setdefault("shards", shards)
+    if shards is not None:
+        # An explicit flag must never be silently overridden by a
+        # conflicting backend-option (same contract as --mesh vs --shards
+        # above: disagreement is an error, not a quiet winner).
+        if "shards" in options and options["shards"] != shards:
+            ap.error(f"--shards {shards} conflicts with "
+                     f"--backend-option shards={options['shards']}")
+        if backend != "sharded":
+            if "base" in options and options["base"] != backend:
+                ap.error(f"--backend {backend} conflicts with "
+                         f"--backend-option base={options['base']}")
+            # --shards N means "this backend, N ways": the sharded backend
+            # wraps it as its base, same reports, 1/N database per device.
+            options = {**options, "base": backend, "shards": shards}
+            backend = "sharded"
+        else:
+            options["shards"] = shards
 
     config = ProfilerConfig(
         space=HDSpace(dim=args.dim, ngram=args.ngram,

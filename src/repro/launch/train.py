@@ -13,7 +13,6 @@ distributed/fault_tolerance.py).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

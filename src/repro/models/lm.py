@@ -15,14 +15,12 @@ Entry points:
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.distributed import sharding
-from repro.models import attention, blocks, layers, ssm as ssm_mod
+from repro.models import blocks, layers, ssm as ssm_mod
 
 Params = dict
 

@@ -27,6 +27,7 @@ from repro.pipeline.source import (ArraySource, FastqSource, IterableSource,
                                    ReadBatch, ReadSource, SyntheticSource,
                                    as_source, prefetch)
 from repro.pipeline import refdb_store
+from repro.pipeline.fused import PallasFusedBackend
 from repro.pipeline.session import BatchResult, ProfilingSession
 from repro.pipeline.sharded import (ShardedBackend, pad_refdb,
                                     per_device_bytes, place_refdb)
@@ -41,6 +42,7 @@ __all__ = [
     "Backend", "available_backends", "register_backend", "resolve_backend",
     "ArraySource", "FastqSource", "IterableSource", "ReadBatch",
     "ReadSource", "SyntheticSource", "as_source", "prefetch",
-    "BatchResult", "ProfilingSession", "ShardedBackend", "pad_refdb",
-    "per_device_bytes", "place_refdb", "refdb_store",
+    "BatchResult", "PallasFusedBackend", "ProfilingSession",
+    "ShardedBackend", "pad_refdb", "per_device_bytes", "place_refdb",
+    "refdb_store",
 ]

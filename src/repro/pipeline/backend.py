@@ -24,6 +24,8 @@ Registered backends:
   reference_packed pure-jnp encoder + packed XOR+popcount agreement.
   pallas_matmul    Pallas encoder kernel + MXU ±1 matmul kernel.
   pallas_packed    Pallas encoder kernel + VPU popcount kernel.
+  pallas_fused     fused encode->search megakernel: the encoded queries
+                   never leave VMEM (:mod:`repro.pipeline.fused`).
   pcm_sim          digital encoder + simulated PCM-crossbar AM search
                    (:mod:`repro.accel`; bit-exact at zero device noise,
                    configurably non-ideal via ``backend_options``).
@@ -42,7 +44,18 @@ optional capabilities the session discovers by name:
   ``species_scores(queries, prototypes, proto_species, num_species)``
                                  fused agreement + per-species reduction,
                                  merged across shards (skips the
-                                 per-prototype agreement round-trip).
+                                 per-prototype agreement round-trip);
+  ``tokens_agreement(tokens, lengths, prototypes)``
+                                 steps 3+4 fused — raw read tokens to
+                                 agreement with no encoded HBM matrix
+                                 (``pallas_fused``, and ``sharded``
+                                 wrapping a base that has it);
+  ``tokens_species_scores(tokens, lengths, prototypes, proto_species,
+                          num_species)``
+                                 the fully fused form of the above
+                                 (``sharded`` over a fused base: encode +
+                                 search + species reduction per shard,
+                                 one pmax of (B, species) cross-device).
 """
 
 from __future__ import annotations
@@ -79,6 +92,20 @@ BackendFactory = Callable[[ProfilerConfig], Backend]
 
 _REGISTRY: dict[str, BackendFactory] = {}
 
+#: Backends that register themselves when their module is imported.  The
+#: registry resolves these lazily, so ``available_backends()`` and the
+#: unknown-backend error are complete even when only this module (not the
+#: ``repro.pipeline`` package, which imports them eagerly) has been
+#: imported — e.g. ``profile_run --list-backends`` sees every backend no
+#: matter which import path reached the registry first.  Third-party
+#: backends registered after import via :func:`register_backend` appear
+#: the moment they register (nothing is cached).
+_LAZY_MODULES: dict[str, str] = {
+    "pallas_fused": "repro.pipeline.fused",
+    "pcm_sim": "repro.accel.backend_pcm",
+    "sharded": "repro.pipeline.sharded",
+}
+
 
 def register_backend(name: str) -> Callable[[BackendFactory], BackendFactory]:
     """Decorator: register a ``ProfilerConfig -> Backend`` factory by name."""
@@ -91,12 +118,15 @@ def register_backend(name: str) -> Callable[[BackendFactory], BackendFactory]:
 
 
 def available_backends() -> tuple[str, ...]:
-    """Names of every registered backend, sorted."""
-    return tuple(sorted(_REGISTRY))
+    """Names of every registered backend (lazy entry points included)."""
+    return tuple(sorted(set(_REGISTRY) | set(_LAZY_MODULES)))
 
 
 def resolve_backend(name: str, config: ProfilerConfig) -> Backend:
     """Instantiate the backend registered under ``name`` for ``config``."""
+    if name not in _REGISTRY and name in _LAZY_MODULES:
+        import importlib
+        importlib.import_module(_LAZY_MODULES[name])  # registers on import
     try:
         factory = _REGISTRY[name]
     except KeyError:

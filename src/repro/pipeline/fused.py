@@ -1,0 +1,94 @@
+"""``pallas_fused``: the fused encode->search backend.
+
+One :func:`repro.kernels.fused_profile.fused_profile` megakernel runs
+Demeter steps 3 and 4 together — each read's k-mer stream is encoded
+tile-by-tile in VMEM and every finished dim-tile folds straight into the
+agreement accumulator against the prototypes' matching tile, so the
+``(batch, dim)`` encoded query matrix never round-trips through HBM
+(Acc-Demeter's in-memory dataflow, paper §5; same insight as Karunaratne
+et al., *In-memory hyperdimensional computing*).
+
+The backend exposes the fusion as the ``tokens_agreement`` capability;
+:meth:`~repro.pipeline.session.ProfilingSession.classify_batch` dispatches
+to it when present, so both ``profile()`` and the serving layer
+(:class:`~repro.serve.profiler_service.ProfilingService`) run the fused
+path with no changes of their own.  The Backend-protocol primitives
+``encode`` / ``agreement`` remain (the standalone Pallas kernels): the
+RefDB build still needs a bare encoder, and a ``sharded`` wrapper calls
+``tokens_agreement`` per shard when fusing and ``agreement`` otherwise.
+
+Options (``ProfilerConfig.backend_options``, all validated here so a bad
+tile size is a :class:`ValueError` at session construction — never a
+Pallas shape crash mid-profile):
+
+    bb  batch-tile rows, power of two (default 8).
+    bw  word-tile lanes, positive (default 128; clamped to W).
+    bs  prototype rows per kernel call (default 4096) — bounds the
+        VMEM-resident prototype tile and agreement accumulator.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.pipeline.backend import _BackendBase, register_backend
+from repro.pipeline.config import ProfilerConfig
+
+#: option name -> (default, validator description)
+_TILE_OPTIONS = ("bb", "bw", "bs")
+_DEFAULTS = {"bb": 8, "bw": 128, "bs": 4096}
+
+
+def _validated_tiles(config: ProfilerConfig) -> dict[str, int]:
+    """Read bb/bw/bs from ``backend_options``, failing with friendly errors."""
+    tiles = dict(_DEFAULTS)
+    for name, value in config.backend_options:
+        if name not in _TILE_OPTIONS:
+            raise ValueError(
+                f"pallas_fused got unknown option {name!r}; it takes only "
+                f"tile sizes {_TILE_OPTIONS} (ints)")
+        if isinstance(value, bool) or not isinstance(value, int) or value < 1:
+            raise ValueError(
+                f"pallas_fused option {name!r} must be a positive int, "
+                f"got {value!r}")
+        tiles[name] = value
+    if tiles["bb"] & (tiles["bb"] - 1):
+        raise ValueError(
+            f"pallas_fused option 'bb' must be a power of two so every "
+            f"padded batch tiles evenly, got {tiles['bb']}")
+    return tiles
+
+
+@register_backend("pallas_fused")
+class PallasFusedBackend(_BackendBase):
+    """Fused encode->search megakernel (interpret mode on CPU)."""
+
+    name = "pallas_fused"
+
+    def __init__(self, config: ProfilerConfig):
+        super().__init__(config)
+        self.tiles = _validated_tiles(config)
+
+    # -- Backend protocol (standalone kernels; RefDB build + sharded) ------
+    def encode(self, tokens: jax.Array, lengths: jax.Array) -> jax.Array:
+        from repro.kernels import ops
+        return ops.hdc_encode(tokens, lengths, self.im, self.tie, self.space)
+
+    def agreement(self, queries: jax.Array, prototypes: jax.Array
+                  ) -> jax.Array:
+        from repro.kernels import ops
+        return ops.am_agreement(queries, prototypes, self.space.dim,
+                                "matmul")
+
+    # -- fused capability (ProfilingSession.classify_batch dispatch) -------
+    def tokens_agreement(self, tokens: jax.Array, lengths: jax.Array,
+                         prototypes: jax.Array) -> jax.Array:
+        """Steps 3+4 fused: ``(B, L)`` tokens -> ``(B, S)`` agreement.
+
+        The encoded queries exist only as VMEM tiles inside the kernel.
+        """
+        from repro.kernels import ops
+        t = self.tiles
+        return ops.fused_agreement(
+            tokens, lengths, self.im, self.tie, prototypes, self.space,
+            bb=t["bb"], bw=min(t["bw"], self.space.num_words), bs=t["bs"])

@@ -114,16 +114,24 @@ def save(path: str | pathlib.Path, db: RefDB, *,
     return path
 
 
-def manifest(path: str | pathlib.Path) -> dict | None:
-    """The entry's JSON manifest, or None if unreadable/not this format."""
+def _manifest_from(z) -> dict | None:
+    """Decode + magic-check the manifest member of an open archive."""
     try:
-        with np.load(path) as z:
-            m = json.loads(bytes(z["manifest"]).decode())
+        m = json.loads(bytes(z["manifest"]).decode())
     except Exception:
         return None
     if not isinstance(m, dict) or m.get("magic") != _MAGIC:
         return None
     return m
+
+
+def manifest(path: str | pathlib.Path) -> dict | None:
+    """The entry's JSON manifest, or None if unreadable/not this format."""
+    try:
+        with np.load(path) as z:
+            return _manifest_from(z)
+    except Exception:
+        return None
 
 
 def load(path: str | pathlib.Path) -> RefDB | None:
@@ -137,11 +145,13 @@ def load(path: str | pathlib.Path) -> RefDB | None:
     path = pathlib.Path(path)
     if not path.exists():
         return None
-    m = manifest(path)
-    if m is None or m.get("format_version") != FORMAT_VERSION:
-        return None
     try:
+        # One archive open for manifest + arrays: a warm-cache session
+        # startup shouldn't parse the zip directory twice.
         with np.load(path) as z:
+            m = _manifest_from(z)
+            if m is None or m.get("format_version") != FORMAT_VERSION:
+                return None
             protos = z["prototypes"]
             proto_species = z["proto_species"]
             genome_lengths = z["genome_lengths"]

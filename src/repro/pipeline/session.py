@@ -39,9 +39,14 @@ from repro.pipeline.source import as_source, prefetch
 
 @dataclasses.dataclass(frozen=True)
 class BatchResult:
-    """What the per-batch callback sees: one classified read batch."""
+    """What the per-batch callback sees: one classified read batch.
+
+    ``queries`` is ``None`` when the backend fused encode into the AM
+    search (``tokens_agreement`` capability): the whole point of that
+    path is that the encoded ``(B, W)`` matrix is never materialized.
+    """
     index: int
-    queries: jax.Array                                  # (B, W) packed
+    queries: jax.Array | None                           # (B, W) packed
     classification: classifier.ReadClassification      # over all B rows
     num_valid: int                                      # real rows (<= B)
 
@@ -178,6 +183,16 @@ class ProfilingSession:
         so any backend, kernel, or dispatch change lands in both paths at
         once.
 
+        Capability dispatch (most-fused first, all bit-identical):
+
+        1. ``tokens_species_scores`` — encode + search + species
+           reduction in one backend call (``sharded`` over a fused base).
+        2. ``tokens_agreement`` — fused encode->search (``pallas_fused``):
+           the encoded queries never touch HBM; ``queries`` is ``None``
+           on the returned :class:`BatchResult`.
+        3. fallback — separate ``encode`` then :meth:`classify_queries`
+           (which itself prefers a ``species_scores`` capability).
+
         Args:
           tokens: ``(B, L)`` int32 padded read tokens.
           lengths: ``(B,)`` int32 true read lengths (0 for padding rows).
@@ -185,9 +200,26 @@ class ProfilingSession:
           num_valid: how many leading rows are real reads (default: all).
           index: stream position recorded on the :class:`BatchResult`.
         """
-        q = self.encode_reads(tokens, lengths)
-        res = self.classify_queries(q, refdb)
-        n = len(q) if num_valid is None else num_valid
+        db = self._require_refdb(refdb)
+        toks, lens = jnp.asarray(tokens), jnp.asarray(lengths)
+        fused_full = getattr(self.backend, "tokens_species_scores", None)
+        fused = getattr(self.backend, "tokens_agreement", None)
+        if fused_full is not None:
+            scores = fused_full(toks, lens, db.prototypes,
+                                db.proto_species, db.num_species)
+            res = self._from_scores(
+                scores, threshold_bits=self.space.threshold_bits)
+            q = None
+        elif fused is not None:
+            agree = fused(toks, lens, db.prototypes)
+            res = self._from_agreement(
+                agree, db.proto_species, num_species=db.num_species,
+                threshold_bits=self.space.threshold_bits)
+            q = None
+        else:
+            q = self.encode_reads(toks, lens)
+            res = self.classify_queries(q, db)
+        n = len(toks) if num_valid is None else num_valid
         return BatchResult(index=index, queries=q, classification=res,
                            num_valid=n)
 

@@ -48,34 +48,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-try:                                    # jax >= 0.6 moved it to the top level
-    from jax import shard_map as _shard_map_raw  # type: ignore[attr-defined]
-except ImportError:
-    from jax.experimental.shard_map import shard_map as _shard_map_raw
-
 from repro.core import assoc_memory
 from repro.core.assoc_memory import RefDB
 from repro.distributed import sharding
+from repro.distributed.sharding import shard_map_compat as _shard_map
 from repro.kernels.ops import pad_to_multiple
 from repro.pipeline.backend import register_backend, resolve_backend
 from repro.pipeline.config import ProfilerConfig
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs):
-    """shard_map with replication checking off, across jax spellings.
-
-    Pallas kernels have no replication rule, so the check must be
-    disabled for Pallas-based base backends; the flag is ``check_vma`` on
-    current jax and ``check_rep`` on older releases.
-    """
-    for flag in ("check_vma", "check_rep"):
-        try:
-            return _shard_map_raw(f, mesh=mesh, in_specs=in_specs,
-                                  out_specs=out_specs, **{flag: False})
-        except TypeError:
-            continue
-    return _shard_map_raw(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs)
 
 #: Options consumed by this backend; everything else is forwarded to the
 #: base backend's config (e.g. pcm_sim device knobs under base=pcm_sim).
@@ -165,6 +144,18 @@ class ShardedBackend:
         self._agreement = jax.jit(self._agreement_impl)
         self._scores = jax.jit(self._scores_impl,
                                static_argnames=("num_species",))
+        # A fused base (tokens_agreement capability, e.g. pallas_fused)
+        # stays fused under sharding: each shard streams the raw tokens
+        # through the megakernel against its local prototypes — the
+        # crossbar-per-array dataflow — so the capabilities are exposed
+        # only when the base has them (instance attributes, so the
+        # session's getattr dispatch sees exactly what the base offers).
+        if getattr(self.base, "tokens_agreement", None) is not None:
+            self.tokens_agreement = self._tokens_agreement
+            self.tokens_species_scores = self._tokens_species_scores
+            self._tok_agree = jax.jit(self._tokens_agreement_impl)
+            self._tok_scores = jax.jit(self._tokens_scores_impl,
+                                       static_argnames=("num_species",))
 
     # -- step 3: reads are replicated; encoding is the base's, bit-exact --
     def encode(self, tokens: jax.Array, lengths: jax.Array) -> jax.Array:
@@ -215,6 +206,54 @@ class ShardedBackend:
             per_shard, mesh=self.mesh,
             in_specs=(P(None, None), P("shard", None), P("shard")),
             out_specs=P(None, None))(q, p, ps)
+
+    # -- steps 3+4 fused per shard (only when the base is fused) ----------
+    def _tokens_agreement(self, tokens: jax.Array, lengths: jax.Array,
+                          prototypes: jax.Array) -> jax.Array:
+        """Fused encode->search per shard: tokens in, agreement out.
+
+        The (replicated, tiny) token stream reaches every shard, which
+        runs the base megakernel against its local prototype slice — the
+        encoded queries never exist off-VMEM on *any* device.
+        """
+        s = prototypes.shape[0]
+        p = pad_to_multiple(jnp.asarray(prototypes), 0, self.num_shards)
+        return self._tok_agree(jnp.asarray(tokens), jnp.asarray(lengths),
+                               p)[:, :s]
+
+    def _tokens_agreement_impl(self, t, l, p):
+        return _shard_map(
+            lambda tb, lb, pb: self.base.tokens_agreement(tb, lb, pb),
+            mesh=self.mesh,
+            in_specs=(P(None, None), P(None), P("shard", None)),
+            out_specs=P(None, "shard"))(t, l, p)
+
+    def _tokens_species_scores(self, tokens: jax.Array, lengths: jax.Array,
+                               prototypes: jax.Array,
+                               proto_species: jax.Array, num_species: int
+                               ) -> jax.Array:
+        """Fully fused: encode + search + species reduction in-shard.
+
+        Cross-device traffic is the one ``(B, num_species)`` pmax, same
+        as :meth:`species_scores` — but nothing upstream of it ever
+        materializes either.
+        """
+        p = pad_to_multiple(jnp.asarray(prototypes), 0, self.num_shards)
+        ps = pad_to_multiple(jnp.asarray(proto_species), 0, self.num_shards,
+                             fill=num_species)
+        return self._tok_scores(jnp.asarray(tokens), jnp.asarray(lengths),
+                                p, ps, num_species=num_species)
+
+    def _tokens_scores_impl(self, t, l, p, ps, *, num_species):
+        def per_shard(tb, lb, pb, psb):
+            agree = self.base.tokens_agreement(tb, lb, pb)
+            partial = assoc_memory.species_scores(agree, psb, num_species)
+            return jax.lax.pmax(partial, "shard")
+
+        return _shard_map(
+            per_shard, mesh=self.mesh,
+            in_specs=(P(None, None), P(None), P("shard", None), P("shard")),
+            out_specs=P(None, None))(t, l, p, ps)
 
     # -- device placement (ProfilingSession hook) -------------------------
     def place_refdb(self, db: RefDB) -> RefDB:

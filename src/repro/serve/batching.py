@@ -27,7 +27,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

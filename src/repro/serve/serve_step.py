@@ -7,8 +7,6 @@ one row per sequence.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -10,8 +10,6 @@ difference between 1 TB of logits and ~34 GB across the pod.
 from __future__ import annotations
 
 import dataclasses
-import functools
-
 import jax
 import jax.numpy as jnp
 

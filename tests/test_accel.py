@@ -7,8 +7,7 @@ import numpy as np
 import pytest
 
 from repro.accel import (CrossbarConfig, DeviceConfig, accel_cost,
-                         adc_quantize, crossbar_agreement, noise_sweep,
-                         split_options)
+                         adc_quantize, noise_sweep)
 from repro.core.hd_space import HDSpace
 from repro.genomics import synth
 from repro.pipeline import (ArraySource, ProfilerConfig, ProfilingSession,

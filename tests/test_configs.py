@@ -2,7 +2,7 @@
 
 import pytest
 
-from repro.configs import ALIASES, all_archs, get_config
+from repro.configs import all_archs, get_config
 from repro.configs import shapes as shapes_mod
 
 # (arch, expected TOTAL params, tolerance) — active counts for MoE noted.

@@ -10,7 +10,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.checkpoint import checkpointer as ck
 from repro.configs import get_config
@@ -22,7 +21,9 @@ from repro.train import train_step as ts
 
 
 def _amesh(shape, names):
-    return AbstractMesh(shape, names)
+    # AbstractMesh's constructor drifted across jax releases; the compat
+    # helper handles both spellings (device-free, so no mesh leaks).
+    return sharding.abstract_mesh(shape, names)
 
 
 # -- sharding rules (AbstractMesh: no devices needed) ----------------------------

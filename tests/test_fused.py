@@ -1,0 +1,201 @@
+"""`pallas_fused` megakernel: bit-exactness against `reference` on every
+entry point (kernel, backend, session, sharded wrapping, ProfilingService
+interleaving), odd-shape coverage, and the friendly tile-size validation."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import assoc_memory, encoder, item_memory
+from repro.core.hd_space import HDSpace
+from repro.genomics import synth
+from repro.kernels import ops
+from repro.pipeline import (ArraySource, ProfilerConfig, ProfilingSession,
+                            SyntheticSource, available_backends,
+                            resolve_backend)
+
+SP = HDSpace(dim=512, ngram=5, z_threshold=3.0)
+SPEC = synth.CommunitySpec(num_species=4, genome_len=6_000, seed=11)
+
+
+def _config(**kw):
+    kw.setdefault("space", SP)
+    kw.setdefault("window", 1024)
+    kw.setdefault("batch_size", 16)
+    kw.setdefault("backend", "pallas_fused")
+    return ProfilerConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def sample():
+    return SyntheticSource(SPEC, num_reads=64, present=[0, 2])
+
+
+def _reference_agreement(space, toks, lens, protos):
+    import jax.numpy as jnp
+    im = item_memory.make_item_memory(space)
+    tie = item_memory.make_tie_break(space)
+    q = encoder.encode(jnp.asarray(toks), jnp.asarray(lens), im, tie, space)
+    return np.asarray(assoc_memory.agreement_matmul(
+        q, jnp.asarray(protos), space.dim))
+
+
+def _fused_agreement(space, toks, lens, protos, **tiles):
+    import jax.numpy as jnp
+    im = item_memory.make_item_memory(space)
+    tie = item_memory.make_tie_break(space)
+    return np.asarray(ops.fused_agreement(
+        jnp.asarray(toks), jnp.asarray(lens), im, tie,
+        jnp.asarray(protos), space, **tiles))
+
+
+# -- kernel-level parity on odd shapes --------------------------------------
+
+@pytest.mark.parametrize("dim,ngram,b,length,s,tiles", [
+    (512, 5, 16, 60, 7, {}),                      # plain
+    (1056, 8, 4, 50, 5, {"bw": 8}),               # W=33: dim not a multiple
+                                                  # of the word tile
+    (512, 8, 1, 40, 3, {}),                       # batch of 1
+    (512, 8, 5, 6, 9, {}),                        # reads shorter than ngram
+    (2048, 16, 12, 150, 300, {"bs": 128}),        # prototype-axis chunking
+    (512, 5, 16, 60, 7, {"bb": 4, "bw": 4}),      # tiny tiles
+])
+def test_fused_kernel_matches_reference(dim, ngram, b, length, s, tiles):
+    space = HDSpace(dim=dim, ngram=ngram, z_threshold=3.0)
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, 4, (b, length)).astype(np.int32)
+    lens = rng.integers(0, length + 1, b).astype(np.int32)
+    protos = np.asarray(item_memory.make_item_memory(space))  # any packed
+    protos = np.tile(protos, (s // len(protos) + 1, 1))[:s]
+    np.testing.assert_array_equal(
+        _fused_agreement(space, toks, lens, protos, **tiles),
+        _reference_agreement(space, toks, lens, protos))
+
+
+# -- backend + session ------------------------------------------------------
+
+def test_fused_backend_registered():
+    assert "pallas_fused" in available_backends()
+
+
+def test_fused_profile_matches_reference(sample):
+    ref = ProfilingSession(_config(backend="reference"))
+    ref.build_refdb(sample.genomes)
+    fused = ProfilingSession(_config())
+    fused.build_refdb(sample.genomes)
+    assert fused.profile(sample).to_json() == ref.profile(sample).to_json()
+
+
+def test_fused_batchresult_has_no_queries(sample):
+    """The fusion's whole point: the encoded matrix is never materialized,
+    so the per-batch callback sees ``queries=None``."""
+    s = ProfilingSession(_config())
+    s.build_refdb(sample.genomes)
+    seen = []
+    s.profile(sample, on_batch=seen.append)
+    assert seen and all(b.queries is None for b in seen)
+    assert sum(b.num_valid for b in seen) == 64
+
+
+def test_fused_partial_tail_batch(sample):
+    """A read count not divisible by batch_size (nor the batch tile)."""
+    ref = ProfilingSession(_config(backend="reference"))
+    ref.build_refdb(sample.genomes)
+    s = ProfilingSession(_config())
+    s.build_refdb(sample.genomes)
+    src = ArraySource(sample.tokens[:21], sample.lengths[:21])
+    assert s.profile(src).to_json() == ref.profile(src).to_json()
+
+
+def test_fused_tile_options_through_config(sample):
+    """Non-default tiles change nothing but the schedule."""
+    ref = ProfilingSession(_config(backend="reference"))
+    ref.build_refdb(sample.genomes)
+    s = ProfilingSession(_config(backend_options={"bb": 4, "bw": 4,
+                                                  "bs": 8}))
+    s.build_refdb(sample.genomes)
+    assert s.profile(sample).to_json() == ref.profile(sample).to_json()
+
+
+# -- sharded wrapping -------------------------------------------------------
+
+def test_fused_under_sharded_wrapping(sample):
+    ref = ProfilingSession(_config(backend="reference"))
+    ref.build_refdb(sample.genomes)
+    s = ProfilingSession(_config(backend="sharded",
+                                 backend_options={"base": "pallas_fused"}))
+    be = s.backend
+    assert getattr(be, "tokens_agreement", None) is not None
+    assert getattr(be, "tokens_species_scores", None) is not None
+    s.build_refdb(sample.genomes)
+    assert s.profile(sample).to_json() == ref.profile(sample).to_json()
+
+
+def test_sharded_over_unfused_base_exposes_no_tokens_capability():
+    s = ProfilingSession(_config(backend="sharded",
+                                 backend_options={"base": "reference"}))
+    assert getattr(s.backend, "tokens_agreement", None) is None
+    assert getattr(s.backend, "tokens_species_scores", None) is None
+
+
+# -- ProfilingService interleaving ------------------------------------------
+
+def test_fused_through_profiling_service(sample):
+    """Two interleaved requests over the fused backend produce reports
+    bit-identical to sequential ``session.profile`` runs."""
+    from repro.serve.profiler_service import ProfilingService
+
+    s = ProfilingSession(_config(batch_size=8))
+    s.build_refdb(sample.genomes)
+    a = ArraySource(sample.tokens[:40], sample.lengths[:40])
+    b = ArraySource(sample.tokens[40:], sample.lengths[40:])
+    service = ProfilingService(s, max_active=2)
+    ha, hb = service.submit(a), service.submit(b)
+    service.run_until_idle()
+    assert ha.result(timeout=60).to_json() == s.profile(a).to_json()
+    assert hb.result(timeout=60).to_json() == s.profile(b).to_json()
+
+
+# -- option validation (bugfix satellite) -----------------------------------
+
+@pytest.mark.parametrize("options,match", [
+    ({"bb": 3}, "power of two"),
+    ({"bb": 0}, "positive int"),
+    ({"bw": -1}, "positive int"),
+    ({"bs": 0}, "positive int"),
+    ({"bb": True}, "positive int"),
+    ({"bw": "wide"}, "positive int"),
+    ({"block": 64}, "unknown option"),
+])
+def test_fused_tile_validation_is_friendly(options, match):
+    """Bad tile sizes fail at session construction with a ValueError —
+    never a Pallas shape crash mid-profile."""
+    with pytest.raises(ValueError, match=match):
+        ProfilingSession(_config(backend_options=options))
+
+
+# -- registry completeness (bugfix satellite) --------------------------------
+
+def test_backends_visible_without_package_import():
+    """`--list-backends` and the unknown-backend error must include every
+    backend even when only `repro.pipeline.backend` was imported (the
+    lazily-registered entry points)."""
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.pipeline.backend import available_backends\n"
+         "print(','.join(available_backends()))"],
+        env={**os.environ,
+             "PYTHONPATH": os.pathsep.join(
+                 filter(None, ["src", os.environ.get("PYTHONPATH")]))},
+        capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    names = set(out.stdout.strip().split(","))
+    assert {"pallas_fused", "pcm_sim", "sharded"} <= names
+
+
+def test_unknown_backend_error_lists_lazy_backends():
+    with pytest.raises(ValueError, match="pallas_fused"):
+        resolve_backend("no_such_backend", _config(backend="reference"))

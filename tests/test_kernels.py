@@ -1,6 +1,5 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bit-exact."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -10,7 +9,6 @@ from repro.core.hd_space import HDSpace
 from repro.kernels import ops, ref
 from repro.kernels.am_matmul import am_matmul
 from repro.kernels.hamming_am import hamming_am
-from repro.kernels.hdc_encoder import hdc_encode
 
 RNG = np.random.default_rng(42)
 

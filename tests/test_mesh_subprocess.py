@@ -10,8 +10,6 @@ import pathlib
 import subprocess
 import sys
 
-import pytest
-
 REPO = pathlib.Path(__file__).resolve().parent.parent
 
 
@@ -103,8 +101,9 @@ est = comp.init_state({'w': jnp.zeros((16,))})
 def f(gl):
     out, _ = comp.compressed_psum({'w': gl[0]}, est, 'data')
     return out['w']
-got = jax.jit(jax.shard_map(f, mesh=mesh2, in_specs=P('data'),
-                            out_specs=P(), check_vma=False))(g)
+from repro.distributed.sharding import shard_map_compat
+got = jax.jit(shard_map_compat(f, mesh=mesh2, in_specs=P('data'),
+                               out_specs=P()))(g)
 np.testing.assert_allclose(np.asarray(got), np.asarray(g.mean(0)), atol=0.02)
 print('pipeline + compressed psum OK')
 """)

@@ -12,7 +12,6 @@ import numpy as np
 import pytest
 
 from repro.configs import all_archs, get_config
-from repro.data import lm_data
 from repro.models import lm
 from repro.train import train_step as ts
 from repro.train.optimizer import OptConfig

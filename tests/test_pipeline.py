@@ -35,7 +35,8 @@ def sample():
 
 def test_registry_names():
     assert {"reference", "reference_packed", "pallas_matmul",
-            "pallas_packed", "pcm_sim", "sharded"} <= set(available_backends())
+            "pallas_packed", "pallas_fused", "pcm_sim",
+            "sharded"} <= set(available_backends())
 
 
 def test_unknown_backend_rejected():

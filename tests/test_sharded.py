@@ -123,7 +123,6 @@ def test_place_refdb_preserves_values(reference):
 
 
 def test_per_device_bytes():
-    import dataclasses
     import jax.numpy as jnp
     from repro.core.assoc_memory import RefDB
     db = RefDB(prototypes=jnp.zeros((10, 16), jnp.uint32),
