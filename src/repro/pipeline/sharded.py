@@ -259,4 +259,3 @@ class ShardedBackend:
     def place_refdb(self, db: RefDB) -> RefDB:
         """Pad + distribute a built/loaded RefDB across the shard mesh."""
         return place_refdb(db, self.mesh)
-
