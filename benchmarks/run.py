@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV (see benchmarks.common.emit).
   energy      Table 3   energy breakdown + Mbp/J
   accel_sim   §5/Table 3 PCM-substrate noise sweep + analytical cost model
   serve_perf  §1 system   ProfilingService reads/s + p50/p99 request latency
+  tenant_serve §1 system  registry+router fleet reads/s + delta hot-swap
+                          publish/drain latency
   shard_scaling  §scale   sharded-AM reads/s + RefDB bytes/device vs shards
                           (grow the sweep with
                           XLA_FLAGS=--xla_force_host_platform_device_count=N)
@@ -27,7 +29,7 @@ import sys
 
 from benchmarks import (accel_sim, accuracy, acc_perf, build_time, common,
                         energy, memory, query_perf, roofline, serve_perf,
-                        shard_scaling)
+                        shard_scaling, tenant_serve)
 
 
 def main() -> None:
@@ -59,6 +61,8 @@ def main() -> None:
         accel_sim.run(community)
     if want("serve_perf"):
         serve_perf.run(community)
+    if want("tenant_serve"):
+        tenant_serve.run(community)
     if want("shard_scaling"):
         shard_scaling.run(community)
     if want("roofline"):

@@ -1,0 +1,157 @@
+"""Multi-tenant serving benchmark: fleet throughput through the
+registry + router control plane, and the cost of a live delta hot-swap.
+
+The paper's system framing is continuous food monitoring — in
+production that means several tenants sharing reference databases that
+are updated under live traffic.  Measures, per ``(tenants, workers)``
+cell over one shared database:
+
+  tenant.{backend}.t{T}.w{W}.reads_per_s   fleet sustained reads/s
+  tenant.{backend}.t{T}.w{W}.p50_ms        median request latency
+  tenant.{backend}.t{T}.w{W}.p99_ms        tail request latency
+
+and for the live-update path (one tenant submitting while an
+add-species delta publishes):
+
+  tenant.swap.publish_ms    registry apply_delta -> new version serving
+                            (delta build + atomic publish + router swap)
+  tenant.swap.drain_ms      old version in-flight work fully drained
+                            after the swap (the zero-downtime window)
+
+``--smoke`` shrinks the community and the sweep so CI runs the full
+create/route/swap/drain cycle in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import HDSpace
+from repro.genomics import synth
+from repro.pipeline import ArraySource, ProfilerConfig
+from repro.serve import RefDBRegistry, TenantRouter
+
+SMOKE_SPACE = HDSpace(dim=512, ngram=8, z_threshold=3.0)
+
+
+def _fleet_cell(registry: RefDBRegistry, sources, *, tenants: int,
+                workers: int) -> dict:
+    """One (tenants, workers) measurement: route all requests, collect."""
+    router = TenantRouter(registry)
+    names = [f"t{i}" for i in range(tenants)]
+    per_tenant = {n: sources[i::tenants] for i, n in enumerate(names)}
+    for n in names:
+        router.add_tenant(n, database="bench", max_active=8,
+                          max_queue=len(per_tenant[n]))
+    # warmup: compile the cohort shapes on a throwaway request
+    w = router.submit(per_tenant[names[0]][0], tenant=names[0])
+    router.run_until_idle()
+    w.result(timeout=0)
+
+    handles = []
+    router.start(workers)
+    try:
+        t0 = time.perf_counter()
+        for n in names:
+            for src in per_tenant[n]:
+                handles.append(router.submit(src, tenant=n, block=True,
+                                             timeout=600))
+        reports = [h.result(timeout=600) for h in handles]
+        wall = time.perf_counter() - t0
+    finally:
+        router.stop()
+        router.close()
+    lat_ms = [h.latency_s * 1e3 for h in handles]
+    reads = sum(r.total_reads for r in reports)
+    return {"reads_per_s": reads / max(wall, 1e-9),
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99))}
+
+
+def _swap_cell(registry: RefDBRegistry, sources, delta_genomes) -> dict:
+    """Publish an add-species delta under traffic; time publish + drain."""
+    router = TenantRouter(registry)
+    router.add_tenant("t0", database="bench", max_active=8,
+                      max_queue=len(sources))
+    old = router.serving_version("bench")
+    handles = [router.submit(s, tenant="t0") for s in sources]
+    router.start(1)
+    try:
+        t0 = time.perf_counter()
+        registry.apply_delta("bench", add=delta_genomes)
+        publish_s = time.perf_counter() - t0          # serving is now new
+        assert router.serving_version("bench") > old
+        while router.draining_versions("bench"):      # old version drains
+            time.sleep(0.002)
+        drain_s = time.perf_counter() - t0 - publish_s
+        for h in handles:
+            h.result(timeout=600)
+    finally:
+        router.stop()
+        router.close()
+    return {"publish_ms": publish_s * 1e3, "drain_ms": max(drain_s, 0) * 1e3}
+
+
+def run(community=None, emit=common.emit, *, smoke: bool = False) -> dict:
+    if smoke:
+        spec = synth.CommunitySpec(num_species=4, genome_len=8_000, seed=13)
+        genomes = synth.make_reference_genomes(spec)
+        ab = np.full(4, 0.25)
+        toks, lens, _ = synth.sample_reads(genomes, ab, 256, spec)
+        config = ProfilerConfig(space=SMOKE_SPACE, window=1024,
+                                batch_size=32)
+        cells = [(2, 1)]
+        num_requests = 8
+    else:
+        community = community or common.afs_small()
+        genomes = community.genomes
+        toks, lens, *_ = community.samples["kylo"]
+        config = common.BENCH_CONFIG
+        cells = [(1, 1), (4, 1), (4, 2)]
+        num_requests = 16
+
+    registry = RefDBRegistry(
+        root=tempfile.mkdtemp(prefix="bench-registry-"))
+    registry.create("bench", genomes, config)
+    sources = [ArraySource(toks[i::num_requests], lens[i::num_requests])
+               for i in range(num_requests)]
+    rng = np.random.default_rng(14)
+    glen = len(next(iter(genomes.values())))
+    delta = {"sp_delta": rng.integers(0, 4, glen, dtype=np.int32)}
+
+    out: dict = {}
+    for tenants, workers in cells:
+        cell = _fleet_cell(registry, sources, tenants=tenants,
+                           workers=workers)
+        out[(tenants, workers)] = cell
+        tag = f"tenant.{config.backend}.t{tenants}.w{workers}"
+        emit(f"{tag}.reads_per_s", cell["reads_per_s"],
+             f"{num_requests}req/{workers}worker")
+        emit(f"{tag}.p50_ms", cell["p50_ms"],
+             f"p99={cell['p99_ms']:.1f}ms")
+
+    swap = _swap_cell(registry, sources, delta)
+    out["swap"] = swap
+    emit("tenant.swap.publish_ms", swap["publish_ms"],
+         "delta build+publish+router swap")
+    emit("tenant.swap.drain_ms", swap["drain_ms"],
+         "old version drained under traffic")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny community + single cell (CI-sized)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -149,6 +149,90 @@ def build_refdb(genomes: dict[str, np.ndarray], space: HDSpace, *,
     return builder.finish()
 
 
+def remove_species(db: RefDB, names) -> RefDB:
+    """Drop species (and their prototype rows) from a RefDB.
+
+    The surviving rows are byte-identical to the original build — removal
+    never re-encodes — and species ids are remapped to stay contiguous.
+    Because ``proto_species`` is non-decreasing and the remap is monotone,
+    the invariant :func:`species_scores` relies on survives.  Raises on
+    unknown names and on removing every species (an AM must stay
+    non-empty; delete the database instead).
+    """
+    drop = set(names)
+    unknown = drop - set(db.species_names)
+    if unknown:
+        raise KeyError(f"cannot remove unknown species {sorted(unknown)}; "
+                       f"database has {list(db.species_names)}")
+    if len(drop) == db.num_species:
+        raise ValueError("refusing to remove every species (an associative "
+                         "memory cannot be empty); delete the database")
+    if not drop:
+        return db
+    keep = np.array([i for i, n in enumerate(db.species_names)
+                     if n not in drop], np.int32)
+    remap = np.full(db.num_species, -1, np.int32)
+    remap[keep] = np.arange(len(keep), dtype=np.int32)
+    ps = np.asarray(db.proto_species)
+    rows = np.isin(ps, keep)
+    return RefDB(
+        prototypes=jnp.asarray(np.asarray(db.prototypes)[rows]),
+        proto_species=jnp.asarray(remap[ps[rows]]),
+        genome_lengths=jnp.asarray(np.asarray(db.genome_lengths)[keep]),
+        num_species=len(keep),
+        species_names=tuple(db.species_names[i] for i in keep),
+    )
+
+
+def add_species(db: RefDB, addition: RefDB) -> RefDB:
+    """Append another RefDB's species to ``db`` (incremental add delta).
+
+    ``addition`` is a streaming build of only the *new* genomes (same
+    space/window/stride — the caller guarantees build-config parity; the
+    packed widths are checked here).  Appending keeps ``proto_species``
+    non-decreasing: new species take ids ``db.num_species ..``.  The
+    existing rows are untouched, so queries against surviving species are
+    bit-identical before and after the delta.
+    """
+    if db.prototypes.shape[1] != addition.prototypes.shape[1]:
+        raise ValueError(
+            f"packed width mismatch: database W={db.prototypes.shape[1]}, "
+            f"addition W={addition.prototypes.shape[1]} (different HD "
+            f"space/dim — deltas must be built with the database's config)")
+    clash = set(db.species_names) & set(addition.species_names)
+    if clash:
+        raise ValueError(
+            f"species already present: {sorted(clash)} (remove them first "
+            f"to replace, or rename the additions)")
+    return RefDB(
+        prototypes=jnp.concatenate(
+            [jnp.asarray(db.prototypes), jnp.asarray(addition.prototypes)]),
+        proto_species=jnp.concatenate(
+            [jnp.asarray(db.proto_species),
+             jnp.asarray(addition.proto_species) + db.num_species]),
+        genome_lengths=jnp.concatenate(
+            [jnp.asarray(db.genome_lengths),
+             jnp.asarray(addition.genome_lengths)]),
+        num_species=db.num_species + addition.num_species,
+        species_names=db.species_names + addition.species_names,
+    )
+
+
+def apply_delta(db: RefDB, *, add: RefDB | None = None,
+                remove=()) -> RefDB:
+    """One incremental update: remove species, then append new ones.
+
+    Remove-before-add makes an in-place genome refresh a single delta
+    (``remove=["x"], add=<rebuilt x>``).  The result is a plain host
+    RefDB; callers re-run backend placement (``place_refdb``) when
+    serving it.
+    """
+    out = remove_species(db, remove) if remove else db
+    if add is not None:
+        out = add_species(out, add)
+    return out
+
+
 def agreement_matmul(queries: jax.Array, prototypes: jax.Array,
                      dim: int) -> jax.Array:
     """Agreement scores via the +-1 matmul identity (MXU formulation).

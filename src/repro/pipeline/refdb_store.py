@@ -24,6 +24,11 @@ embedded under the ``manifest`` key.  Manifest fields:
     num_species, num_prototypes, species_names, genome_lengths
                      RefDB metadata (the static pytree fields).
     dim_words        packed width W of the prototype rows.
+    version / parent_version / delta
+                     live-update provenance (only on snapshots written by
+                     the serving registry): the version number, the
+                     version it was derived from, and the add/remove
+                     delta that produced it.
 
 Writes are atomic: the archive is serialized to a same-directory
 ``*.tmp-<pid>-…`` file and published with ``os.replace``, so readers see
@@ -61,7 +66,9 @@ _MAGIC = "demeter-refdb"
 
 def save(path: str | pathlib.Path, db: RefDB, *,
          refdb_fingerprint: str = "", genomes_digest: str = "",
-         config_fields: dict | None = None) -> pathlib.Path:
+         config_fields: dict | None = None,
+         version: int | None = None, parent_version: int | None = None,
+         delta: dict | None = None) -> pathlib.Path:
     """Atomically write ``db`` (npz arrays + embedded JSON manifest).
 
     The archive is staged in a sibling temp file and published with
@@ -73,11 +80,24 @@ def save(path: str | pathlib.Path, db: RefDB, *,
       config_fields: JSON-primitive provenance merged into the manifest
         (the session records the content-determining config: ``space``,
         ``window``, ``stride``).  Core schema keys win on collision.
+      version / parent_version / delta: live-update provenance, recorded
+        by the serving registry (:mod:`repro.serve.registry`): the
+        snapshot's version number, the version it was derived from, and
+        the delta that produced it (``{"added": [...], "removed":
+        [...]}``).  Omitted from the manifest when None, so plain
+        session-cache entries are byte-stable across this change.
     """
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
+    provenance = {
+        k: v for k, v in (("version", version),
+                          ("parent_version", parent_version),
+                          ("delta", delta))
+        if v is not None
+    }
     manifest = {
         **(config_fields or {}),
+        **provenance,
         "magic": _MAGIC,
         "format_version": FORMAT_VERSION,
         "refdb_fingerprint": refdb_fingerprint,

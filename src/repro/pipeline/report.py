@@ -35,10 +35,33 @@ class ProfileReport:
         order = np.argsort(-self.abundance)[:k]
         return [(self.species_names[i], float(self.abundance[i])) for i in order]
 
+    # -- derived abundance summary (core.abundance semantics) ---------------
+    @property
+    def mapped_reads(self) -> int:
+        return self.total_reads - self.unmapped_reads
+
+    @property
+    def unmapped_fraction(self) -> float:
+        """Fraction of reads the AM search mapped to no species."""
+        return self.unmapped_reads / self.total_reads if self.total_reads \
+            else 0.0
+
+    @property
+    def multi_fraction(self) -> float:
+        """Fraction of reads that hit more than one species (split in
+        phase 2 by :func:`repro.core.abundance.split_multi_counts`)."""
+        return self.multi_reads / self.total_reads if self.total_reads \
+            else 0.0
+
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
         """JSON-primitive dict: the machine-readable run artifact shared by
-        ``profile_run --json`` and ``ProfilingService`` report snapshots."""
+        ``profile_run --json`` and ``ProfilingService`` report snapshots.
+
+        ``mapped_reads`` / ``unmapped_fraction`` / ``multi_fraction`` are
+        derived from the stored counts — :meth:`from_dict` recomputes
+        rather than trusts them, so the round-trip stays exact.
+        """
         return {
             "species_names": list(self.species_names),
             "abundance": [float(x) for x in self.abundance],
@@ -47,6 +70,9 @@ class ProfileReport:
             "total_reads": int(self.total_reads),
             "unmapped_reads": int(self.unmapped_reads),
             "multi_reads": int(self.multi_reads),
+            "mapped_reads": int(self.mapped_reads),
+            "unmapped_fraction": float(self.unmapped_fraction),
+            "multi_fraction": float(self.multi_fraction),
         }
 
     def to_json(self, indent: int | None = None) -> str:
@@ -113,18 +139,17 @@ class ProfileAccumulator:
         request's reads into shared cohorts reproduces a sequential run's
         report bit-for-bit).
         """
+        # Lazy: repro.core pulls in this module (via core.profiler), so a
+        # top-level import of core.abundance would be circular.
+        from repro.core.abundance import split_multi_counts
+
         s = self.num_species
-        lens = np.maximum(np.asarray(genome_lengths, np.float64), 1.0)
-        rate = self.unique_counts / lens
         multi_counts = np.zeros(s, np.float64)
         if self._multi_hit_rows:
             packed = np.concatenate(self._multi_hit_rows, axis=0)
             m = np.unpackbits(packed, axis=-1, count=s).astype(bool)
-            w = m * rate[None, :]
-            mass = w.sum(axis=-1, keepdims=True)
-            uniform = m / np.maximum(m.sum(axis=-1, keepdims=True), 1)
-            w = np.where(mass > 0, w / np.maximum(mass, 1e-30), uniform)
-            multi_counts = w.sum(axis=0)
+            multi_counts = split_multi_counts(self.unique_counts, m,
+                                              genome_lengths)
 
         mapped = self.unique_counts + multi_counts
         denom = max(mapped.sum(), 1e-30)

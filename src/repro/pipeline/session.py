@@ -57,10 +57,20 @@ BatchCallback = Callable[[BatchResult], None]
 class ProfilingSession:
     """Facade binding a config + backend + (optionally cached) RefDB."""
 
-    def __init__(self, config: ProfilerConfig):
+    def __init__(self, config: ProfilerConfig, *,
+                 backend: Backend | None = None):
+        """Args:
+          backend: pre-resolved backend to use instead of resolving
+            ``config.backend``.  Sessions sharing one backend share its
+            jit caches and any one-time state (programmed pcm_sim
+            conductances, the sharded mesh) — the serving router runs one
+            session per RefDB version on a single shared backend so a
+            hot-swap never recompiles the query path.
+        """
         self.config = config
         self.space = config.space
-        self.backend: Backend = resolve_backend(config.backend, config)
+        self.backend: Backend = (backend if backend is not None
+                                 else resolve_backend(config.backend, config))
         self.refdb: RefDB | None = None
         self.refdb_loaded_from_cache = False
         self.refdb_cache_file: pathlib.Path | None = None
@@ -83,6 +93,19 @@ class ProfilingSession:
             stride=self.config.effective_stride,
             batch_size=self.config.batch_size,
             encode_fn=self.backend.encode)
+        self.refdb = self._place(db)
+        self.refdb_loaded_from_cache = False
+        return self.refdb
+
+    def adopt_refdb(self, db: RefDB) -> RefDB:
+        """Make an externally built/loaded RefDB this session's database.
+
+        Runs the backend's device-placement step, exactly like a build or
+        cache load would — the serving registry hands out plain host
+        databases, and every hot-swap re-places the new version here (the
+        ``sharded`` backend re-pads and re-distributes it across its
+        mesh).
+        """
         self.refdb = self._place(db)
         self.refdb_loaded_from_cache = False
         return self.refdb

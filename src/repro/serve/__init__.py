@@ -1,20 +1,28 @@
-"""Serving layer: the profiler-first service plus the legacy LM stack.
+"""Serving layer: single-DB service, multi-tenant control plane, legacy LM.
 
-New serving work goes through :class:`ProfilingService`
-(:mod:`repro.serve.profiler_service`) on top of the generic
-:class:`FixedShapeScheduler` (:mod:`repro.serve.scheduler`).  The LM
-prefill/decode modules (:mod:`repro.serve.serve_step`,
-:mod:`repro.serve.batching`) are the seed repo's stack, kept working as
-legacy entry points.
+:class:`ProfilingService` (:mod:`repro.serve.profiler_service`) is the
+data plane — many concurrent requests over one RefDB, bit-exact with
+sequential runs — on top of the generic :class:`FixedShapeScheduler`
+(:mod:`repro.serve.scheduler`).  Above it, :class:`RefDBRegistry`
+(:mod:`repro.serve.registry`) owns named databases with versioned,
+delta-updatable snapshots, and :class:`TenantRouter`
+(:mod:`repro.serve.router`) maps tenants to databases with per-tenant
+quotas and zero-downtime hot-swap.  The LM prefill/decode modules
+(:mod:`repro.serve.serve_step`, :mod:`repro.serve.batching`) are the
+seed repo's stack, kept working as legacy entry points.
 """
 
 from repro.serve.scheduler import Cohort, FixedShapeScheduler, pow2_buckets
 from repro.serve.profiler_service import (ProfileHandle, ProfileRequest,
                                           ProfilingService, RequestState,
                                           ServiceOverloaded)
+from repro.serve.registry import RefDBRegistry, RefDBSnapshot
+from repro.serve.router import RoutedHandle, TenantRouter, TenantSpec
 
 __all__ = [
     "Cohort", "FixedShapeScheduler", "pow2_buckets",
     "ProfileHandle", "ProfileRequest", "ProfilingService", "RequestState",
     "ServiceOverloaded",
+    "RefDBRegistry", "RefDBSnapshot",
+    "RoutedHandle", "TenantRouter", "TenantSpec",
 ]

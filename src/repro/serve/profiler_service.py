@@ -287,14 +287,24 @@ class ProfilingService:
             self._work.notify_all()
         return True
 
+    @property
+    def idle(self) -> bool:
+        """True when nothing is queued, active, or buffered in cohorts.
+
+        The drain condition: an idle service has every admitted request
+        terminal.  The tenant router retires an old RefDB version's
+        service the moment it reports idle.
+        """
+        with self._lock:
+            return not (self._queued or self._active or len(self._sched))
+
     def run_until_idle(self) -> None:
         """Pump cohorts on the calling thread until no work remains."""
         while True:
             if self.step():
                 continue
-            with self._lock:
-                if not (self._queued or self._active or len(self._sched)):
-                    return
+            if self.idle:
+                return
 
     # -- background worker --------------------------------------------------
     def start(self) -> "ProfilingService":
@@ -315,22 +325,47 @@ class ProfilingService:
         If the worker died on an unrecoverable error, ``service.error``
         holds it (every live request was FAILED with the same error).
         """
+        if not drain:
+            self.cancel_all()
         with self._work:
             if self._worker is None:
                 return
-            if not drain:
-                for h in list(self._queued) + list(self._active):
-                    self._cancel_locked(h)
             self._stopping = True
             self._work.notify_all()
         self._worker.join(timeout)
         self._worker = None
+
+    def cancel_all(self) -> int:
+        """Best-effort cancel of every queued/active request; returns the
+        number actually cancelled (requests mid-cohort may complete)."""
+        with self._work:
+            n = 0
+            for h in list(self._queued) + list(self._active):
+                n += bool(self._cancel_locked(h))
+            self._work.notify_all()
+            return n
 
     def __enter__(self) -> "ProfilingService":
         return self.start()
 
     def __exit__(self, *exc) -> None:
         self.stop(drain=exc == (None, None, None))
+
+    def fail_all(self, error: BaseException) -> None:
+        """Record a service-fatal error and fail every live request.
+
+        The containment of last resort when per-request isolation could
+        not hold (the backend itself died mid-cohort): the service
+        refuses new work, and every ``result()``/blocking ``submit()``
+        caller wakes immediately with ``error``.  Used by the internal
+        worker and by any external pump (the tenant router) driving
+        :meth:`step` itself.
+        """
+        with self._work:
+            self.error = error
+            for h in list(self._active) + list(self._queued):
+                self._fail_locked(h, error)
+            self._work.notify_all()
 
     def _pump(self) -> None:
         while True:
@@ -339,12 +374,8 @@ class ProfilingService:
             except BaseException as e:
                 # A failure the per-request isolation could not contain
                 # (e.g. the backend itself died mid-cohort).  Don't die
-                # silently: record it and fail every live request so
-                # result()/blocking submit() callers wake immediately.
-                with self._work:
-                    self.error = e
-                    for h in list(self._active) + list(self._queued):
-                        self._fail_locked(h, e)
+                # silently — see fail_all.
+                self.fail_all(e)
                 return
             with self._work:
                 if not did:

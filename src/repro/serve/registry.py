@@ -1,0 +1,347 @@
+"""`RefDBRegistry`: named reference databases with versioned live updates.
+
+Production food monitoring is not one static database: a service hosts
+*many* reference sets (food, clinical, environmental), and each one's
+genomes change under live traffic — new contaminant species get added,
+withdrawn references get removed.  The registry is the control plane for
+that: it owns a set of **named databases**, each a chain of **versioned
+immutable snapshots**, and publishes updates atomically so the serving
+layer (:class:`repro.serve.router.TenantRouter`) can hot-swap without
+downtime.
+
+    registry = RefDBRegistry(root="dbs/")            # root=None: in-memory
+    registry.create("food", genomes, config)         # -> version 1
+    snap = registry.apply_delta("food", add={"listeria": toks})   # -> v2
+    registry.apply_delta("food", remove=["species_00"])           # -> v3
+    registry.current("food").db                      # newest RefDB
+
+Deltas are **incremental**: an add encodes only the new genomes (one
+streaming :class:`~repro.core.assoc_memory.RefDBBuilder` pass, same
+space/window/stride as the original build, so the new prototype rows are
+bit-identical to what a from-scratch build would produce) and a remove
+drops rows without re-encoding, via
+:func:`repro.core.assoc_memory.apply_delta`.  Every snapshot records its
+``version``, ``parent_version`` and the delta that produced it in the
+:mod:`repro.pipeline.refdb_store` manifest — the provenance chain back to
+the full build.
+
+Publishing is atomic at both layers.  On disk each snapshot is its own
+``v<N>.npz`` store entry (atomic temp + ``os.replace``) and the
+``CURRENT.json`` pointer flips to it with another ``os.replace``, so a
+concurrent loader always observes a complete old-or-new version, never a
+torn one.  In memory the current-version pointer swaps under the registry
+lock, then subscribers (the router's auto-swap hook) are notified outside
+it.
+
+Snapshots hand out *host-resident* databases; placement (sharding across
+a device mesh, programming simulated PCM conductances) happens when a
+serving session adopts one (:meth:`ProfilingSession.adopt_refdb`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import re
+import tempfile
+import threading
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import assoc_memory
+from repro.core.assoc_memory import RefDB, RefDBBuilder
+from repro.pipeline import refdb_store
+from repro.pipeline.config import ProfilerConfig
+from repro.pipeline.session import _genomes_digest
+
+_NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+#: CURRENT.json pointer schema version.
+_POINTER_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RefDBSnapshot:
+    """One immutable published version of a named database."""
+
+    database: str
+    version: int                        # 1-based, monotone per database
+    db: RefDB                           # host-resident (unplaced)
+    parent_version: int | None = None   # None for the initial full build
+    delta: dict | None = None           # {"added": [...], "removed": [...]}
+    path: pathlib.Path | None = None    # on-disk entry (None in-memory)
+
+    @property
+    def species(self) -> tuple[str, ...]:
+        return self.db.species_names
+
+
+class _Entry:
+    """Registry-internal mutable state of one named database."""
+
+    def __init__(self, name: str, config: ProfilerConfig, encode_fn=None):
+        self.name = name
+        self.config = config
+        self.encode_fn = encode_fn
+        self.snapshots: dict[int, RefDBSnapshot] = {}
+        self.current_version = 0
+        # Serializes builds/deltas per database so version numbers are a
+        # gapless chain even under concurrent writers; the registry-wide
+        # lock is only held for pointer reads/swaps.
+        self.mutate = threading.Lock()
+
+
+class RefDBRegistry:
+    """Named, versioned RefDBs with atomic publish and live deltas."""
+
+    def __init__(self, root: str | pathlib.Path | None = None):
+        """Args:
+          root: snapshot directory (one subdirectory per database).  None
+            keeps everything in memory — versioning, deltas, and hot-swap
+            all work; nothing survives the process.
+        """
+        self.root = pathlib.Path(root) if root is not None else None
+        self._lock = threading.RLock()
+        self._entries: dict[str, _Entry] = {}
+        self._subscribers: list[Callable[[RefDBSnapshot], None]] = []
+
+    # -- creation -----------------------------------------------------------
+    def create(self, name: str, genomes: dict[str, np.ndarray],
+               config: ProfilerConfig, *, encode_fn=None,
+               on_genome: Callable[[str, int], None] | None = None
+               ) -> RefDBSnapshot:
+        """Build and publish version 1 of a new named database.
+
+        The build streams genome-by-genome through
+        :class:`RefDBBuilder`; ``config`` pins the content-determining
+        fields (space/window/stride) every later delta must match.
+
+        Args:
+          encode_fn: optional encoder override (kept for this database's
+            future deltas too).  The default reference encoder is
+            bit-exact with every backend, so serving through any backend
+            needs no override.
+          on_genome: streaming-build progress hook ``(name, total_rows)``.
+        """
+        if not _NAME_RE.match(name):
+            raise ValueError(
+                f"invalid database name {name!r} (need alphanumeric plus "
+                f"'._-', not starting with a separator)")
+        with self._lock:
+            if name in self._entries:
+                raise ValueError(f"database {name!r} already exists "
+                                 f"(apply_delta to update it)")
+            entry = _Entry(name, config, encode_fn)
+            self._entries[name] = entry
+        try:
+            with entry.mutate:
+                builder = self._builder(entry)
+                db = refdb_store.build_streaming(genomes, builder,
+                                                 on_genome=on_genome)
+                snap = self._publish(
+                    entry, db, parent=None, delta=None,
+                    genomes_digest=_genomes_digest(genomes))
+        except BaseException:
+            with self._lock:
+                self._entries.pop(name, None)   # failed create leaves no stub
+            raise
+        self._notify(snap)
+        return snap
+
+    # -- live updates -------------------------------------------------------
+    def apply_delta(self, name: str, *,
+                    add: dict[str, np.ndarray] | None = None,
+                    remove: Sequence[str] = ()) -> RefDBSnapshot:
+        """Publish version N+1 = current version with species added/removed.
+
+        Incremental: only ``add``'s genomes are encoded (streamed through
+        a fresh builder under the database's pinned config), ``remove``
+        drops prototype rows without touching the rest.  Removal applies
+        first, so replacing a genome is one delta (``remove=[x],
+        add={x: new_tokens}``).  The new snapshot is written and the
+        current pointer flipped atomically; subscribers are notified
+        after the in-memory swap.
+        """
+        if not add and not remove:
+            raise ValueError("empty delta: pass add= genomes and/or "
+                             "remove= species names")
+        entry = self._entry(name)
+        with entry.mutate:
+            base = self.current(name)
+            addition = None
+            if add:
+                builder = self._builder(entry)
+                for gname, toks in add.items():
+                    builder.add_genome(gname, toks)
+                addition = builder.finish()
+            db = assoc_memory.apply_delta(base.db, add=addition,
+                                          remove=tuple(remove))
+            delta = {"added": sorted(add) if add else [],
+                     "removed": sorted(remove)}
+            snap = self._publish(entry, db, parent=base.version, delta=delta)
+        self._notify(snap)
+        return snap
+
+    # -- reads --------------------------------------------------------------
+    def databases(self) -> tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._entries))
+
+    def config(self, name: str) -> ProfilerConfig:
+        """The build config pinned at ``create`` (content fields bind all
+        later deltas; execution fields are just its defaults — the router
+        overrides backend/batch per serving deployment)."""
+        return self._entry(name).config
+
+    def current(self, name: str) -> RefDBSnapshot:
+        """The newest published snapshot of ``name``."""
+        entry = self._entry(name)
+        with self._lock:
+            if entry.current_version == 0:
+                raise KeyError(f"database {name!r} has no published version")
+            return entry.snapshots[entry.current_version]
+
+    def snapshot(self, name: str, version: int) -> RefDBSnapshot:
+        """A specific retained version (every publish is retained)."""
+        entry = self._entry(name)
+        with self._lock:
+            try:
+                return entry.snapshots[version]
+            except KeyError:
+                raise KeyError(
+                    f"database {name!r} has no version {version} "
+                    f"(have {sorted(entry.snapshots)})") from None
+
+    def versions(self, name: str) -> tuple[int, ...]:
+        entry = self._entry(name)
+        with self._lock:
+            return tuple(sorted(entry.snapshots))
+
+    # -- change notification (the router's auto-swap hook) ------------------
+    def subscribe(self, fn: Callable[[RefDBSnapshot], None]
+                  ) -> Callable[[RefDBSnapshot], None]:
+        """Call ``fn(snapshot)`` after every publish; returns ``fn``.
+
+        Called outside registry locks, after the new version is already
+        current — a subscriber that re-reads ``current`` sees it.
+        """
+        with self._lock:
+            self._subscribers.append(fn)
+        return fn
+
+    def unsubscribe(self, fn: Callable[[RefDBSnapshot], None]) -> None:
+        with self._lock:
+            if fn in self._subscribers:
+                self._subscribers.remove(fn)
+
+    # -- persistence --------------------------------------------------------
+    @classmethod
+    def open(cls, root: str | pathlib.Path) -> "RefDBRegistry":
+        """Reopen a persisted registry: every database's CURRENT version.
+
+        Only the current snapshot of each database is loaded into memory
+        (older versions stay on disk for audit via their manifests); the
+        version counter continues from the published chain.
+        """
+        root = pathlib.Path(root)
+        reg = cls(root)
+        for pointer in sorted(root.glob("*/CURRENT.json")):
+            try:
+                meta = json.loads(pointer.read_text())
+            except (OSError, json.JSONDecodeError):
+                continue                      # torn dir: skip, don't poison
+            if meta.get("pointer_version") != _POINTER_VERSION:
+                continue
+            name = meta["database"]
+            path = pointer.parent / meta["file"]
+            db = refdb_store.load(path)
+            if db is None:
+                continue                      # defect reads as absent
+            m = refdb_store.manifest(path) or {}
+            entry = _Entry(name, ProfilerConfig.from_dict(meta["config"]))
+            snap = RefDBSnapshot(
+                database=name, version=int(meta["version"]), db=db,
+                parent_version=m.get("parent_version"),
+                delta=m.get("delta"), path=path)
+            entry.snapshots[snap.version] = snap
+            entry.current_version = snap.version
+            reg._entries[name] = entry
+        return reg
+
+    # -- internals ----------------------------------------------------------
+    def _entry(self, name: str) -> _Entry:
+        with self._lock:
+            try:
+                return self._entries[name]
+            except KeyError:
+                raise KeyError(
+                    f"unknown database {name!r}; registry has "
+                    f"{list(sorted(self._entries))}") from None
+
+    def _builder(self, entry: _Entry) -> RefDBBuilder:
+        c = entry.config
+        return RefDBBuilder(c.space, window=c.window,
+                            stride=c.effective_stride,
+                            batch_size=c.batch_size,
+                            encode_fn=entry.encode_fn)
+
+    def _publish(self, entry: _Entry, db: RefDB, *, parent: int | None,
+                 delta: dict | None, genomes_digest: str = ""
+                 ) -> RefDBSnapshot:
+        """Write (optional) + swap the current pointer; runs under
+        ``entry.mutate`` so versions are a gapless chain."""
+        version = entry.current_version + 1
+        path = None
+        if self.root is not None:
+            d = self.root / entry.name
+            path = d / f"v{version:04d}.npz"
+            c = entry.config
+            refdb_store.save(
+                path, db,
+                refdb_fingerprint=c.refdb_fingerprint(),
+                genomes_digest=genomes_digest,
+                config_fields={"space": dataclasses.asdict(c.space),
+                               "window": c.window,
+                               "stride": c.effective_stride,
+                               "database": entry.name},
+                version=version, parent_version=parent, delta=delta)
+            self._flip_pointer(d, entry, version, path.name)
+        snap = RefDBSnapshot(database=entry.name, version=version, db=db,
+                             parent_version=parent, delta=delta, path=path)
+        with self._lock:
+            entry.snapshots[version] = snap
+            entry.current_version = version
+        return snap
+
+    def _flip_pointer(self, d: pathlib.Path, entry: _Entry, version: int,
+                      filename: str) -> None:
+        """Atomically repoint CURRENT.json at the new snapshot file."""
+        meta = {
+            "pointer_version": _POINTER_VERSION,
+            "database": entry.name,
+            "version": version,
+            "file": filename,
+            "config": entry.config.to_dict(),
+        }
+        fd, tmp = tempfile.mkstemp(dir=d, prefix="CURRENT.json.tmp-")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(meta, f, sort_keys=True, indent=2)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, d / "CURRENT.json")
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def _notify(self, snap: RefDBSnapshot) -> None:
+        with self._lock:
+            subs = list(self._subscribers)
+        for fn in subs:
+            fn(snap)

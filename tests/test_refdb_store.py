@@ -133,6 +133,65 @@ def test_load_inconsistent_arrays_returns_none(tmp_path, db):
     assert refdb_store.load(path) is None
 
 
+# -- concurrent hot-swap: publish racing load -------------------------------
+
+def test_concurrent_load_during_publish(tmp_path, genomes, db):
+    """A loader racing a publisher always sees a complete old-or-new
+    version — never a partial read, never a spurious cache miss.
+
+    This is the property the serving registry's hot-swap rests on:
+    ``save`` stages to a temp file and ``os.replace``s into place, so
+    every ``load`` observes exactly one fully-written snapshot.
+    """
+    import threading
+
+    db_b = build_refdb({k: v for k, v in list(genomes.items())[:2]},
+                       SP, window=1024)
+    path = tmp_path / "refdb_hot.npz"
+    refdb_store.save(path, db, refdb_fingerprint="a")
+    stop = threading.Event()
+    failures: list[str] = []
+
+    def publisher():
+        for i in range(30):
+            new, fp = (db_b, "b") if i % 2 == 0 else (db, "a")
+            refdb_store.save(path, new, refdb_fingerprint=fp)
+        stop.set()
+
+    def loader():
+        while True:
+            got = refdb_store.load(path)
+            if got is None:                       # spurious miss
+                failures.append("load returned None mid-publish")
+                return
+            if got.num_species == db.num_species:
+                want = db
+            elif got.num_species == db_b.num_species:
+                want = db_b
+            else:
+                failures.append(f"torn read: {got.num_species} species")
+                return
+            try:
+                _assert_same_db(got, want)
+            except AssertionError as e:           # partial content
+                failures.append(f"mixed versions: {e}")
+                return
+            if stop.is_set():
+                return
+
+    readers = [threading.Thread(target=loader) for _ in range(2)]
+    writer = threading.Thread(target=publisher)
+    for t in readers:
+        t.start()
+    writer.start()
+    writer.join(120)
+    for t in readers:
+        t.join(120)
+    assert not failures, failures[0]
+    m = refdb_store.manifest(path)
+    assert m["refdb_fingerprint"] in ("a", "b")   # last publish intact
+
+
 # -- streaming build --------------------------------------------------------
 
 def test_build_streaming_matches_build_refdb(tmp_path, genomes, db):

@@ -1,0 +1,290 @@
+"""RefDB registry + tenant router: the live-serving control plane.
+
+Acceptance contract (ISSUE 6): under traffic on the ``reference``,
+``pallas_fused``, and ``sharded`` backends, requests admitted before a
+hot-swap produce reports bit-identical to a sequential run on the old
+database version, requests admitted after see the new version, and
+per-tenant quota overflow raises ``ServiceOverloaded`` without
+disturbing other tenants.  Plus: delta add/remove correctness against
+fresh builds, atomic versioned persistence, and registry reopen.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import assoc_memory
+from repro.core.assoc_memory import build_refdb
+from repro.core.hd_space import HDSpace
+from repro.genomics import synth
+from repro.pipeline import (ArraySource, ProfilerConfig, ProfilingSession,
+                            SyntheticSource)
+from repro.serve import (RefDBRegistry, ServiceOverloaded, TenantRouter)
+
+SP = HDSpace(dim=512, ngram=5, z_threshold=3.0)
+SPEC = synth.CommunitySpec(num_species=4, genome_len=6_000, seed=11)
+
+
+def _config(**kw):
+    kw.setdefault("space", SP)
+    kw.setdefault("window", 1024)
+    kw.setdefault("batch_size", 16)
+    return ProfilerConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def sample():
+    return SyntheticSource(SPEC, num_reads=144, present=[0, 2])
+
+
+@pytest.fixture(scope="module")
+def extra():
+    """One genuinely new species for add-deltas."""
+    rng = np.random.default_rng(99)
+    return {"sp_new": rng.integers(0, 4, 6_000, dtype=np.int32)}
+
+
+def _slices(sample, n):
+    return [ArraySource(sample.tokens[i::n], sample.lengths[i::n])
+            for i in range(n)]
+
+
+def _same_db(a, b):
+    np.testing.assert_array_equal(np.asarray(a.prototypes),
+                                  np.asarray(b.prototypes))
+    np.testing.assert_array_equal(np.asarray(a.proto_species),
+                                  np.asarray(b.proto_species))
+    np.testing.assert_array_equal(np.asarray(a.genome_lengths),
+                                  np.asarray(b.genome_lengths))
+    assert a.num_species == b.num_species
+    assert a.species_names == b.species_names
+
+
+# -- acceptance: zero-downtime swap, bit for bit ----------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas_fused", "sharded"])
+def test_swap_under_traffic_bit_exact(tmp_path, sample, extra, backend):
+    """Admitted-before requests run on v1 exactly; admitted-after on v2.
+
+    The pre-swap requests are still queued/in-flight when the delta
+    publishes — the strongest form of the contract: admission version,
+    not completion time, decides what a request sees.
+    """
+    cfg = _config(backend=backend)
+    reg = RefDBRegistry(root=tmp_path / backend)
+    snap1 = reg.create("food", sample.genomes, cfg)
+    router = TenantRouter(reg)
+    router.add_tenant("acme", database="food", max_active=8, max_queue=8)
+
+    srcs = _slices(sample, 6)
+    pre = [router.submit(s, tenant="acme") for s in srcs[:3]]
+    snap2 = reg.apply_delta("food", add=extra)      # auto hot-swap
+    assert router.serving_version("food") == snap2.version == 2
+    post = [router.submit(s, tenant="acme") for s in srcs[3:]]
+    router.run_until_idle()
+
+    seq1 = ProfilingSession(cfg)
+    seq1.adopt_refdb(snap1.db)
+    seq2 = ProfilingSession(cfg)
+    seq2.adopt_refdb(snap2.db)
+    for h, src in zip(pre, srcs[:3]):
+        assert h.version == 1
+        assert h.result(timeout=300).to_json() == seq1.profile(src).to_json()
+    for h, src in zip(post, srcs[3:]):
+        assert h.version == 2
+        assert h.result(timeout=300).to_json() == seq2.profile(src).to_json()
+        # the new species is visible to post-swap requests
+        assert "sp_new" in h.result(timeout=0).species_names
+    assert ("food", 1) in router.retired            # old version drained
+    router.close()
+
+
+def test_swap_under_live_worker_traffic(tmp_path, sample, extra):
+    """Same contract with background pump workers racing the swap."""
+    cfg = _config(backend="reference")
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, cfg)
+    router = TenantRouter(reg)
+    router.add_tenant("acme", database="food", max_active=2, max_queue=2)
+
+    srcs = _slices(sample, 8)
+    swapped = threading.Event()
+    handles = []
+    router.start(2)
+    try:
+        for i, src in enumerate(srcs):
+            if i == len(srcs) // 2:
+                reg.apply_delta("food", add=extra)
+                swapped.set()
+            handles.append(router.submit(src, tenant="acme",
+                                         block=True, timeout=300))
+        reports = [h.result(timeout=300) for h in handles]
+    finally:
+        router.stop()
+    sessions = {}
+    for h, src, rep in zip(handles, srcs, reports):
+        if h.version not in sessions:
+            s = ProfilingSession(cfg)
+            s.adopt_refdb(reg.snapshot("food", h.version).db)
+            sessions[h.version] = s
+        assert rep.to_json() == sessions[h.version].profile(src).to_json()
+    versions = {h.version for h in handles}
+    assert versions == {1, 2}                       # both sides exercised
+    router.close()
+
+
+# -- per-tenant quotas -------------------------------------------------------
+
+def test_quota_overflow_isolated(tmp_path, sample):
+    cfg = _config(backend="reference")
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, cfg)
+    router = TenantRouter(reg)
+    router.add_tenant("small", database="food", max_active=1, max_queue=0)
+    router.add_tenant("big", database="food", max_active=4, max_queue=4)
+
+    srcs = _slices(sample, 6)
+    h0 = router.submit(srcs[0], tenant="small")
+    with pytest.raises(ServiceOverloaded, match="small"):
+        router.submit(srcs[1], tenant="small")
+    # the other tenant — same database — is untouched by the overflow
+    big = [router.submit(s, tenant="big") for s in srcs[2:6]]
+    router.run_until_idle()
+    for h in [h0, *big]:
+        assert h.result(timeout=300).total_reads > 0
+    # quota frees as requests reach a terminal state
+    h1 = router.submit(srcs[1], tenant="small")
+    router.run_until_idle()
+    assert h1.result(timeout=300).total_reads > 0
+    router.close()
+
+
+def test_unknown_tenant_and_duplicate_registration(tmp_path, sample):
+    cfg = _config(backend="reference")
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, cfg)
+    router = TenantRouter(reg)
+    router.add_tenant("a", database="food")
+    with pytest.raises(KeyError, match="nope"):
+        router.submit(_slices(sample, 1)[0], tenant="nope")
+    with pytest.raises(ValueError, match="already registered"):
+        router.add_tenant("a", database="food")
+    router.close()
+
+
+# -- delta correctness -------------------------------------------------------
+
+def test_add_delta_matches_fresh_build(tmp_path, sample, extra):
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, _config())
+    snap2 = reg.apply_delta("food", add=extra)
+    fresh = build_refdb({**sample.genomes, **extra}, SP, window=1024)
+    _same_db(snap2.db, fresh)
+    assert snap2.parent_version == 1
+    assert snap2.delta == {"added": ["sp_new"], "removed": []}
+
+
+def test_remove_delta_matches_fresh_build(tmp_path, sample):
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, _config())
+    victim = list(sample.genomes)[1]
+    snap2 = reg.apply_delta("food", remove=[victim])
+    fresh = build_refdb(
+        {k: v for k, v in sample.genomes.items() if k != victim},
+        SP, window=1024)
+    _same_db(snap2.db, fresh)
+    assert snap2.delta == {"added": [], "removed": [victim]}
+
+
+def test_genome_refresh_is_one_delta(tmp_path, sample):
+    """Remove-then-add in a single delta = refreshing a species' genome."""
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, _config())
+    name = list(sample.genomes)[0]
+    rng = np.random.default_rng(7)
+    refreshed = {name: rng.integers(0, 4, 6_000, dtype=np.int32)}
+    snap2 = reg.apply_delta("food", add=refreshed, remove=[name])
+    rest = {k: v for k, v in sample.genomes.items() if k != name}
+    _same_db(snap2.db, build_refdb({**rest, **refreshed}, SP, window=1024))
+
+
+def test_delta_rejects_bad_names(tmp_path, sample, extra):
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, _config())
+    with pytest.raises(KeyError):
+        reg.apply_delta("food", remove=["no_such_species"])
+    with pytest.raises(ValueError, match="collide|already"):
+        reg.apply_delta("food", add={list(sample.genomes)[0]:
+                                     extra["sp_new"]})
+    with pytest.raises(ValueError):
+        reg.apply_delta("food", remove=list(sample.genomes))  # remove all
+    assert reg.current("food").version == 1          # nothing published
+
+
+def test_apply_delta_core_roundtrip(sample, extra):
+    """core.assoc_memory.apply_delta keeps the sorted-proto_species
+    invariant and composes add+remove as remove-then-add."""
+    db = build_refdb(sample.genomes, SP, window=1024)
+    addition = build_refdb(extra, SP, window=1024)
+    out = assoc_memory.apply_delta(db, add=addition,
+                                   remove=[list(sample.genomes)[2]])
+    ps = np.asarray(out.proto_species)
+    assert (np.diff(ps) >= 0).all()
+    assert out.num_species == db.num_species         # -1 +1
+    assert "sp_new" in out.species_names
+    assert list(sample.genomes)[2] not in out.species_names
+
+
+# -- versioned persistence ---------------------------------------------------
+
+def test_registry_reopen_resumes_versioning(tmp_path, sample, extra):
+    root = tmp_path / "r"
+    reg = RefDBRegistry(root=root)
+    reg.create("food", sample.genomes, _config())
+    snap2 = reg.apply_delta("food", add=extra)
+
+    back = RefDBRegistry.open(root)
+    assert back.databases() == ("food",)
+    cur = back.current("food")
+    assert cur.version == 2
+    _same_db(cur.db, snap2.db)
+    # versioning continues where it left off, against the loaded state
+    snap3 = back.apply_delta("food", remove=["sp_new"])
+    assert snap3.version == 3 and snap3.parent_version == 2
+    _same_db(snap3.db, build_refdb(sample.genomes, SP, window=1024))
+
+
+def test_registry_snapshot_history(tmp_path, sample, extra):
+    reg = RefDBRegistry(root=tmp_path / "r")
+    snap1 = reg.create("food", sample.genomes, _config())
+    reg.apply_delta("food", add=extra)
+    assert reg.versions("food") == (1, 2)
+    _same_db(reg.snapshot("food", 1).db, snap1.db)   # old version retained
+    with pytest.raises(KeyError):
+        reg.snapshot("food", 9)
+    with pytest.raises(KeyError):
+        reg.current("nope")
+
+
+def test_registry_rejects_bad_database_names(tmp_path, sample):
+    reg = RefDBRegistry(root=tmp_path / "r")
+    for bad in ("", "../evil", "a/b", ".hidden"):
+        with pytest.raises(ValueError):
+            reg.create(bad, sample.genomes, _config())
+
+
+# -- shared backend across swaps ---------------------------------------------
+
+def test_swap_reuses_backend_instance(tmp_path, sample, extra):
+    """Hot-swap must not rebuild the backend (jit caches, device state)."""
+    cfg = _config(backend="reference")
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, cfg)
+    router = TenantRouter(reg)
+    router.add_tenant("a", database="food")
+    before = router._dbs["food"].current.session.backend
+    reg.apply_delta("food", add=extra)
+    after = router._dbs["food"].current.session.backend
+    assert after is before
+    router.close()
