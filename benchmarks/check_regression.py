@@ -11,7 +11,12 @@ It fails (exit 1) when, for any backend present in the baseline,
   ``--tolerance`` (default 20%) below the baseline ratio, or
 * ``intermediate_bytes_per_read`` increased at all — the traffic model
   is deterministic, so any increase is a real dataflow regression (e.g.
-  the fused path re-materializing the encoded matrix).
+  the fused path re-materializing the encoded matrix), or
+* ``observability.enabled_over_disabled`` fell below ``1 -
+  --obs-tolerance`` (default 2%) — the metrics layer's overhead guard:
+  turning observability ON must not cost the hot path more than 2%, and
+  its report must stay bit-identical (which also pins the disabled mode,
+  a strict subset of the enabled one, at zero measurable cost).
 
 Backends in the current run but not the baseline are reported and pass
 (new backends enter the gate when the baseline is refreshed).
@@ -56,8 +61,8 @@ def update_baseline(current: dict, path: pathlib.Path = BASELINE) -> dict:
     return baseline
 
 
-def check(current: dict, baseline: dict, tolerance: float = 0.20
-          ) -> list[str]:
+def check(current: dict, baseline: dict, tolerance: float = 0.20,
+          obs_tolerance: float = 0.02) -> list[str]:
     """All regression messages (empty == gate green)."""
     problems = []
     cur = current["backends"]
@@ -80,6 +85,18 @@ def check(current: dict, baseline: dict, tolerance: float = 0.20
                 f"{got['intermediate_bytes_per_read']}")
     if not current.get("bit_exact", False):
         problems.append("backend reports were not bit-identical")
+    observability = current.get("observability")
+    if observability is not None:
+        ratio = observability["enabled_over_disabled"]
+        floor = 1.0 - obs_tolerance
+        if ratio < floor:
+            problems.append(
+                f"observability: enabled/disabled throughput ratio "
+                f"{ratio:.4f} < {floor:.4f} (metrics layer costs more "
+                f"than {obs_tolerance:.0%} on the hot path)")
+        if not observability.get("bit_exact", False):
+            problems.append(
+                "observability: enabling metrics changed the report")
     return problems
 
 
@@ -90,6 +107,9 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--baseline", default=str(BASELINE))
     ap.add_argument("--tolerance", type=float, default=0.20,
                     help="allowed relative-throughput drop (0.20 = 20%%)")
+    ap.add_argument("--obs-tolerance", type=float, default=0.02,
+                    help="allowed throughput cost of enabling the"
+                         " metrics layer (0.02 = 2%%)")
     ap.add_argument("--update", action="store_true",
                     help="refresh the baseline from the current run "
                          "instead of gating")
@@ -105,7 +125,10 @@ def main(argv: list[str] | None = None) -> None:
         marker = "" if name in baseline["backends"] else "  (not gated yet)"
         print(f"{name}: rel={r['relative_throughput']:.4f} "
               f"bytes/read={r['intermediate_bytes_per_read']}{marker}")
-    problems = check(current, baseline, args.tolerance)
+    if "observability" in current:
+        print(f"observability: enabled/disabled="
+              f"{current['observability']['enabled_over_disabled']:.4f}")
+    problems = check(current, baseline, args.tolerance, args.obs_tolerance)
     if problems:
         print("\nREGRESSION GATE FAILED:", file=sys.stderr)
         for p in problems:

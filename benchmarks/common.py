@@ -19,6 +19,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro import obs
 from repro.baselines import ClarkLike, Kraken2Like, MetaCacheLike
 from repro.core import HDSpace
 from repro.genomics import synth
@@ -89,6 +90,22 @@ def make_profilers(backend: str | None = None) -> dict:
         "metacache": MetaCacheLike(),
         "clark": ClarkLike(k=21),
     }
+
+
+def latency_percentiles_ms(latencies_s: "list[float]") -> tuple[float, float]:
+    """``(p50_ms, p99_ms)`` via the serving stack's shared histogram.
+
+    Folds per-request latencies into an
+    :class:`~repro.obs.metrics.HistogramState` over the same
+    ``TIME_BUCKETS_S`` the live ``serve_*`` metrics use, so benchmark
+    percentiles and production-snapshot percentiles come from one
+    estimator (bucketed linear interpolation) instead of two competing
+    definitions of "p99".
+    """
+    state = obs.HistogramState(obs.TIME_BUCKETS_S)
+    for s in latencies_s:
+        state.observe(s)
+    return state.percentile(50) * 1e3, state.percentile(99) * 1e3
 
 
 def timeit(fn: Callable, *, repeats: int = 1) -> tuple[float, object]:

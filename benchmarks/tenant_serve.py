@@ -66,11 +66,11 @@ def _fleet_cell(registry: RefDBRegistry, sources, *, tenants: int,
     finally:
         router.stop()
         router.close()
-    lat_ms = [h.latency_s * 1e3 for h in handles]
+    p50, p99 = common.latency_percentiles_ms(
+        [h.latency_s for h in handles])
     reads = sum(r.total_reads for r in reports)
     return {"reads_per_s": reads / max(wall, 1e-9),
-            "p50_ms": float(np.percentile(lat_ms, 50)),
-            "p99_ms": float(np.percentile(lat_ms, 99))}
+            "p50_ms": p50, "p99_ms": p99}
 
 
 def _swap_cell(registry: RefDBRegistry, sources, delta_genomes) -> dict:

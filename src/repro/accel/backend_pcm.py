@@ -28,6 +28,8 @@ import functools
 
 import jax
 
+from repro import obs
+from repro.accel import device
 from repro.accel.crossbar import (CrossbarConfig, crossbar_read,
                                   program_prototypes)
 from repro.accel.device import DeviceConfig
@@ -103,17 +105,52 @@ class PCMBackend(ReferenceBackend):
         self._read = jax.jit(functools.partial(
             crossbar_read, dim=self.space.dim, xcfg=self.crossbar_config,
             dcfg=self.device_config))
+        # The stats read is a *separate* compiled graph (identical result
+        # math, one extra clip-count output) used only when observability
+        # is on — the plain read path is byte-for-byte what it always was.
+        self._read_stats = jax.jit(functools.partial(
+            crossbar_read, dim=self.space.dim, xcfg=self.crossbar_config,
+            dcfg=self.device_config, with_stats=True))
         self._programmed: tuple[jax.Array, jax.Array, jax.Array] | None = None
+        self._obs = obs.resolve_metrics(None)
+        self._m_prog_events = self._obs.counter(
+            "pcm_program_events_total",
+            "Crossbar programming events (prototype-array cache misses).")
+        self._m_reads = self._obs.counter(
+            "pcm_reads_total", "Crossbar AM read events (one per batch).")
+        self._m_adc_clips = self._obs.counter(
+            "pcm_adc_clips_total",
+            "ADC codes saturated at the converter's range limits.")
+        self._m_stuck = self._obs.gauge(
+            "pcm_stuck_cells",
+            "Stuck-at fault cells in the programmed banks, by polarity.")
 
     def agreement(self, queries: jax.Array, prototypes: jax.Array
                   ) -> jax.Array:
         b, s = queries.shape[0], prototypes.shape[0]
         if isinstance(prototypes, jax.core.Tracer):
             # Inside someone else's jit: programming must stay in-graph
-            # (and tracers must not leak into the cache).
+            # (and tracers must not leak into the cache).  No metrics
+            # here — nothing host-side may touch a traced value.
             g_pos, g_neg = self._program(prototypes)
             return self._read(queries, g_pos, g_neg)[:b, :s]
         if self._programmed is None or self._programmed[0] is not prototypes:
             self._programmed = (prototypes, *self._program(prototypes))
+            if self._obs.enabled:
+                self._note_programmed(self._programmed[1].shape)
         _, g_pos, g_neg = self._programmed
+        if self._obs.enabled:
+            out, clips = self._read_stats(queries, g_pos, g_neg)
+            self._m_reads.inc(1)
+            self._m_adc_clips.inc(int(clips))
+            return out[:b, :s]
         return self._read(queries, g_pos, g_neg)[:b, :s]
+
+    def _note_programmed(self, bank_shape: tuple[int, ...]) -> None:
+        """Record one programming event + the banks' stuck-cell census."""
+        self._m_prog_events.inc(1)
+        for stream, bank in ((0, "pos"), (1, "neg")):
+            n_on, n_off = device.stuck_cell_counts(
+                bank_shape, self.device_config, stream=stream)
+            self._m_stuck.set(n_on, bank=bank, polarity="on")
+            self._m_stuck.set(n_off, bank=bank, polarity="off")

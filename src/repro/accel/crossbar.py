@@ -78,6 +78,13 @@ class CrossbarConfig:
         return 2 * rt * ct
 
 
+def _adc_params(cfg: CrossbarConfig) -> tuple[int, float]:
+    """``(levels, step)`` of the ADC transfer function."""
+    levels = (1 << cfg.adc_bits) - 1
+    step = 1.0 if cfg.lossless else cfg.rows / levels
+    return levels, step
+
+
 def adc_quantize(count: jax.Array, cfg: CrossbarConfig) -> jax.Array:
     """Digitize an analog per-tile match count to the ADC's level grid.
 
@@ -86,14 +93,14 @@ def adc_quantize(count: jax.Array, cfg: CrossbarConfig) -> jax.Array:
     is clamped to exactly one count so quantization is the identity on
     integer counts (the lossless regime).
     """
-    levels = (1 << cfg.adc_bits) - 1
-    step = 1.0 if cfg.lossless else cfg.rows / levels
+    levels, step = _adc_params(cfg)
     code = jnp.clip(jnp.round(count / step), 0, levels)
     return code * step
 
 
 def _bank_counts(qbits: jax.Array, gtiles: jax.Array, read_key: jax.Array,
-                 xcfg: CrossbarConfig, dcfg: DeviceConfig) -> jax.Array:
+                 xcfg: CrossbarConfig, dcfg: DeviceConfig, *,
+                 with_clips: bool = False):
     """Analog partial-count readout of one bank, all tiles at once.
 
     Args:
@@ -101,10 +108,17 @@ def _bank_counts(qbits: jax.Array, gtiles: jax.Array, read_key: jax.Array,
       gtiles: ``(T, S_pad, rows)`` float32 conductances per row tile.
       read_key: key for this bank's read event.
       xcfg / dcfg: geometry and device parameters.
+      with_clips: also count ADC saturation events (codes the converter
+        clamped to its range).  Trace-time static, so the default graph
+        is untouched; the counts come from the same pre-clip codes the
+        quantizer rounds, never a re-derivation.
 
     Returns:
-      ``(B, S_pad)`` float32 accumulated (post-ADC) match counts.
+      ``(B, S_pad)`` float32 accumulated (post-ADC) match counts; with
+      ``with_clips`` a ``(counts, clip_count)`` pair.
     """
+    levels, step = _adc_params(xcfg)
+
     def one_tile(q_tile, g_tile, key):
         active = q_tile.sum(axis=-1, keepdims=True)          # (B, 1)
         current = q_tile @ g_tile.T                          # (B, S_pad) µS
@@ -117,10 +131,18 @@ def _bank_counts(qbits: jax.Array, gtiles: jax.Array, read_key: jax.Array,
         # through to the count — those ARE the non-idealities.
         calibrated = current / (dcfg.drift_factor ** dcfg.drift_calibration)
         count = (calibrated - dcfg.g_off_us * active) / dcfg.g_window_us
-        return adc_quantize(count, xcfg)
+        if not with_clips:
+            return adc_quantize(count, xcfg)
+        code = jnp.round(count / step)
+        clips = jnp.sum((code < 0) | (code > levels), dtype=jnp.int32)
+        return adc_quantize(count, xcfg), clips
 
     keys = jax.random.split(read_key, qbits.shape[0])
-    return jax.vmap(one_tile)(qbits, gtiles, keys).sum(axis=0)
+    out = jax.vmap(one_tile)(qbits, gtiles, keys)
+    if not with_clips:
+        return out.sum(axis=0)
+    counts, clips = out
+    return counts.sum(axis=0), clips.sum()
 
 
 def _to_row_tiles(bits: jax.Array, rows: int) -> jax.Array:
@@ -152,8 +174,8 @@ def program_prototypes(prototypes: jax.Array, xcfg: CrossbarConfig,
 
 
 def crossbar_read(queries: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
-                  dim: int, xcfg: CrossbarConfig, dcfg: DeviceConfig
-                  ) -> jax.Array:
+                  dim: int, xcfg: CrossbarConfig, dcfg: DeviceConfig, *,
+                  with_stats: bool = False):
     """One AM read event against already-programmed conductance banks.
 
     ``(B, W)`` packed queries vs the ``(T, S_pad, rows)`` banks from
@@ -162,6 +184,12 @@ def crossbar_read(queries: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
     prototype columns).  Splitting programming from reading mirrors the
     hardware's write-once/read-many discipline: a profiling session
     programs the AM once and issues one read per batch.
+
+    With ``with_stats`` (trace-time static) the return is a ``(result,
+    adc_clips)`` pair — the result math, noise keys and rounding are
+    identical to the plain read; the extra output just counts the ADC
+    codes that saturated.  The ``pcm_sim`` backend compiles this variant
+    only when observability is enabled.
     """
     qbits = bitops.unpack_bits(queries).astype(jnp.float32)      # (B, D)
     q_pos = _to_row_tiles(qbits, xcfg.rows)
@@ -169,12 +197,15 @@ def crossbar_read(queries: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
 
     # One read event per distinct batch content, reproducibly keyed.
     digest = jnp.sum(queries, dtype=jnp.uint32)
-    counts = (
-        _bank_counts(q_pos, g_pos, device.read_event_key(dcfg, 0, digest),
-                     xcfg, dcfg)
-        + _bank_counts(q_neg, g_neg, device.read_event_key(dcfg, 1, digest),
-                       xcfg, dcfg))
-    return jnp.clip(jnp.round(counts), 0, dim).astype(jnp.int32)
+    pos = _bank_counts(q_pos, g_pos, device.read_event_key(dcfg, 0, digest),
+                       xcfg, dcfg, with_clips=with_stats)
+    neg = _bank_counts(q_neg, g_neg, device.read_event_key(dcfg, 1, digest),
+                       xcfg, dcfg, with_clips=with_stats)
+    if with_stats:
+        (c_pos, k_pos), (c_neg, k_neg) = pos, neg
+        result = jnp.clip(jnp.round(c_pos + c_neg), 0, dim).astype(jnp.int32)
+        return result, k_pos + k_neg
+    return jnp.clip(jnp.round(pos + neg), 0, dim).astype(jnp.int32)
 
 
 def crossbar_agreement(queries: jax.Array, prototypes: jax.Array, dim: int,

@@ -165,6 +165,23 @@ def program_conductances(bits: jax.Array, cfg: DeviceConfig, *,
     return jnp.maximum(g, 0.0)
 
 
+def stuck_cell_counts(shape: tuple[int, ...], cfg: DeviceConfig, *,
+                      stream: int = 0) -> tuple[int, int]:
+    """Census of one bank's stuck-at fault map: ``(stuck_on, stuck_off)``.
+
+    Replays the exact uniform draw :func:`program_conductances` masks
+    with (same key, same shape), so the counts describe the device that
+    was actually programmed — without adding anything to, or pulling
+    anything out of, the programming graph.  Host-side observability
+    only; runs outside any jit.
+    """
+    if cfg.stuck_on_rate == 0.0 and cfg.stuck_off_rate == 0.0:
+        return 0, 0
+    u = jax.random.uniform(_key(cfg, stream, _FAULT), shape)
+    return (int(jnp.sum(u < cfg.stuck_on_rate)),
+            int(jnp.sum(u > 1.0 - cfg.stuck_off_rate)))
+
+
 def read_event_key(cfg: DeviceConfig, stream: int,
                    digest: jax.Array | int) -> jax.Array:
     """Key for one read event on one bank.

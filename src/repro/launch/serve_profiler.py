@@ -36,6 +36,7 @@ submit/interleave/stream/finalize(/swap) cycle in seconds.
 from __future__ import annotations
 
 import argparse
+import json
 import pathlib
 import sys
 import tempfile
@@ -44,6 +45,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import HDSpace
 from repro.genomics import synth
 from repro.pipeline import (ArraySource, ProfilerConfig, ProfilingSession,
@@ -247,17 +249,27 @@ def drive_fleet(*, config: ProfilerConfig, num_species: int, genome_len: int,
           f"{wall:.2f}s | {summary['reads_per_s']:.0f} reads/s | "
           f"p50 {summary['p50_ms']:.0f}ms p99 {summary['p99_ms']:.0f}ms | "
           f"{router.swaps} swap(s), versions {summary['versions']}")
+    metrics = obs.metrics()
     for name, rate in zip(names, rates_hz):
         hs = handles[name]
         lat_t = [h.latency_s for h in hs]
         vs = sorted({h.version for h in hs})
+        treads = sum(r.total_reads for r in reports[name])
         summary["per_tenant"][name] = {
             "rate_hz": rate,
+            "reads": treads,
+            "reads_per_s": treads / max(wall, 1e-9),
             "p50_ms": _percentile(lat_t, 50) * 1e3,
             "p99_ms": _percentile(lat_t, 99) * 1e3,
             "versions": vs,
         }
+        if metrics.enabled:
+            metrics.gauge(
+                "tenant_reads_per_s",
+                "Sustained reads/s per tenant over the drive window.",
+            ).set(summary["per_tenant"][name]["reads_per_s"], tenant=name)
         print(f"  {name}: rate {rate:g}/s | "
+              f"{summary['per_tenant'][name]['reads_per_s']:.0f} reads/s | "
               f"p50 {summary['per_tenant'][name]['p50_ms']:.0f}ms "
               f"p99 {summary['per_tenant'][name]['p99_ms']:.0f}ms | "
               f"versions {vs}")
@@ -324,9 +336,10 @@ def main() -> None:
                     help="request arrival rate in req/s (0 = all at once);"
                          " with --tenants, a comma list gives per-tenant"
                          " rates")
-    ap.add_argument("--tenants", type=int, default=1,
+    ap.add_argument("--tenants", type=int, nargs="?", const=2, default=1,
                     help="> 1 switches to the registry+router fleet driver"
-                         " with a mid-traffic delta hot-swap")
+                         " with a mid-traffic delta hot-swap (bare"
+                         " --tenants means 2)")
     ap.add_argument("--workers", type=int, default=1,
                     help="router pump threads (fleet mode)")
     ap.add_argument("--max-active", type=int, default=8)
@@ -346,45 +359,90 @@ def main() -> None:
                          " with the failing request ids on mismatch")
     ap.add_argument("--json", default=None, metavar="DIR",
                     help="write each request's ProfileReport JSON here")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="enable the observability layer and write the"
+                         " metrics snapshot (+ sampled traces) here")
+    ap.add_argument("--trace", type=int, default=0, metavar="N",
+                    help="record spans for the first N requests"
+                         " (admission -> schedule -> execute -> finalize);"
+                         " implies metrics collection")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device/XLA trace of the"
+                         " serving window into DIR")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI-sized run (implies --check)")
     args = ap.parse_args()
+
+    # Observability is opt-in: the globals flip before any session /
+    # service / router is constructed, so every layer resolves them.
+    reg = rec = None
+    if args.metrics_json or args.trace:
+        reg = obs.enable_metrics()
+        if args.trace:
+            rec = obs.enable_tracing(sample=args.trace)
 
     if args.smoke:
         config = ProfilerConfig(
             space=HDSpace(dim=512, ngram=8, z_threshold=3.0),
             window=1024, batch_size=32, backend=args.backend)
-        if args.tenants > 1:
-            drive_fleet(config=config, num_species=4, genome_len=8_000,
-                        tenants=args.tenants, requests_per_tenant=6,
-                        reads_per_request=32,
-                        rates_hz=[0.0] * args.tenants,
-                        workers=args.workers, max_active=1, max_queue=1,
-                        check=True, store=args.store, json_dir=args.json,
-                        gate_last_on_delta=True)
-        else:
-            drive(config=config, num_species=4, genome_len=8_000,
-                  num_requests=8, reads_per_request=48, rate_hz=0.0,
-                  max_active=4, check=True, json_dir=args.json)
+        with obs.jax_trace(args.jax_profile):
+            if args.tenants > 1:
+                summary = drive_fleet(
+                    config=config, num_species=4, genome_len=8_000,
+                    tenants=args.tenants, requests_per_tenant=6,
+                    reads_per_request=32, rates_hz=[0.0] * args.tenants,
+                    workers=args.workers, max_active=1, max_queue=1,
+                    check=True, store=args.store, json_dir=args.json,
+                    gate_last_on_delta=True)
+            else:
+                summary = drive(
+                    config=config, num_species=4, genome_len=8_000,
+                    num_requests=8, reads_per_request=48, rate_hz=0.0,
+                    max_active=4, check=True, json_dir=args.json)
+        _dump_observability(args, summary, reg, rec)
         return
     config = ProfilerConfig(
         space=HDSpace(dim=args.dim, ngram=args.ngram),
         window=args.window, batch_size=args.batch_size,
         backend=args.backend)
-    if args.tenants > 1:
-        drive_fleet(config=config, num_species=args.species,
-                    genome_len=args.genome_len, tenants=args.tenants,
-                    requests_per_tenant=args.requests,
-                    reads_per_request=args.reads_per_request,
-                    rates_hz=_parse_rates(args.rate, args.tenants),
-                    workers=args.workers, max_active=args.max_active,
-                    check=args.check, store=args.store, json_dir=args.json)
+    with obs.jax_trace(args.jax_profile):
+        if args.tenants > 1:
+            summary = drive_fleet(
+                config=config, num_species=args.species,
+                genome_len=args.genome_len, tenants=args.tenants,
+                requests_per_tenant=args.requests,
+                reads_per_request=args.reads_per_request,
+                rates_hz=_parse_rates(args.rate, args.tenants),
+                workers=args.workers, max_active=args.max_active,
+                check=args.check, store=args.store, json_dir=args.json)
+        else:
+            summary = drive(
+                config=config, num_species=args.species,
+                genome_len=args.genome_len, num_requests=args.requests,
+                reads_per_request=args.reads_per_request,
+                rate_hz=float(args.rate.split(",")[0]),
+                max_active=args.max_active, check=args.check,
+                json_dir=args.json)
+    _dump_observability(args, summary, reg, rec)
+
+
+def _dump_observability(args, summary: dict, reg, rec) -> None:
+    """Write the run's metrics snapshot + sampled traces, if enabled."""
+    if rec is not None:
+        for t in rec.to_dicts():
+            phases = " ".join(f"{s['name']} {s['duration_s'] * 1e3:.1f}ms"
+                              for s in t["spans"][1:])
+            print(f"trace {t['trace_id']} [{t['state']}] "
+                  f"{t['duration_s'] * 1e3:.1f}ms: {phases}")
+    if args.metrics_json is None:
         return
-    drive(config=config, num_species=args.species,
-          genome_len=args.genome_len, num_requests=args.requests,
-          reads_per_request=args.reads_per_request,
-          rate_hz=float(args.rate.split(",")[0]),
-          max_active=args.max_active, check=args.check, json_dir=args.json)
+    payload = {"schema": 1, "run": summary, "metrics": reg.snapshot()}
+    if rec is not None:
+        payload["traces"] = rec.to_dicts()
+    path = pathlib.Path(args.metrics_json)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True))
+    print(f"wrote metrics snapshot to {path}")
 
 
 if __name__ == "__main__":

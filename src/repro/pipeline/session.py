@@ -22,12 +22,14 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import pathlib
+import time
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import assoc_memory, classifier
 from repro.core.assoc_memory import RefDB, RefDBBuilder
 from repro.pipeline import refdb_store
@@ -58,7 +60,8 @@ class ProfilingSession:
     """Facade binding a config + backend + (optionally cached) RefDB."""
 
     def __init__(self, config: ProfilerConfig, *,
-                 backend: Backend | None = None):
+                 backend: Backend | None = None,
+                 metrics: obs.MetricsRegistry | None = None):
         """Args:
           backend: pre-resolved backend to use instead of resolving
             ``config.backend``.  Sessions sharing one backend share its
@@ -66,11 +69,27 @@ class ProfilingSession:
             conductances, the sharded mesh) — the serving router runs one
             session per RefDB version on a single shared backend so a
             hot-swap never recompiles the query path.
+          metrics: observability registry; None resolves the process
+            global (:func:`repro.obs.metrics`, the no-op registry unless
+            observability was enabled).  Recording is host-side only and
+            never enters a jax trace — metrics cannot perturb results.
         """
         self.config = config
         self.space = config.space
         self.backend: Backend = (backend if backend is not None
                                  else resolve_backend(config.backend, config))
+        self._obs = obs.resolve_metrics(metrics)
+        self._m_batch_time = self._obs.histogram(
+            "session_classify_batch_seconds",
+            "classify_batch dispatch wall time per dispatch path "
+            "(async backends: time to hand off, not to complete)",
+            unit="s")
+        self._m_batches = self._obs.counter(
+            "session_classify_batches_total",
+            "classify_batch calls per backend and dispatch path")
+        self._m_transfers = self._obs.counter(
+            "session_host_transfers_total",
+            "device->host array transfers on the query path")
         self.refdb: RefDB | None = None
         self.refdb_loaded_from_cache = False
         self.refdb_cache_file: pathlib.Path | None = None
@@ -227,21 +246,32 @@ class ProfilingSession:
         toks, lens = jnp.asarray(tokens), jnp.asarray(lengths)
         fused_full = getattr(self.backend, "tokens_species_scores", None)
         fused = getattr(self.backend, "tokens_agreement", None)
+        recording = self._obs.enabled
+        t0 = time.perf_counter() if recording else 0.0
         if fused_full is not None:
+            path = "tokens_species_scores"
             scores = fused_full(toks, lens, db.prototypes,
                                 db.proto_species, db.num_species)
             res = self._from_scores(
                 scores, threshold_bits=self.space.threshold_bits)
             q = None
         elif fused is not None:
+            path = "tokens_agreement"
             agree = fused(toks, lens, db.prototypes)
             res = self._from_agreement(
                 agree, db.proto_species, num_species=db.num_species,
                 threshold_bits=self.space.threshold_bits)
             q = None
         else:
+            path = "encode_classify"
             q = self.encode_reads(toks, lens)
             res = self.classify_queries(q, db)
+        if recording:
+            # Host-side timing only — the jax computation is untouched,
+            # so recording can never move a bit of the result.
+            labels = {"backend": self.config.backend, "path": path}
+            self._m_batch_time.observe(time.perf_counter() - t0, **labels)
+            self._m_batches.inc(1, **labels)
         n = len(toks) if num_valid is None else num_valid
         return BatchResult(index=index, queries=q, classification=res,
                            num_valid=n)
@@ -271,9 +301,21 @@ class ProfilingSession:
             n = res.num_valid
             acc.add(np.asarray(res.classification.hits)[:n],
                     np.asarray(res.classification.category)[:n])
+            self.note_host_transfers(2)       # hits + category to host
             if on_batch is not None:
                 on_batch(res)
         return acc.finalize(np.asarray(db.genome_lengths), db.species_names)
+
+    def note_host_transfers(self, n: int) -> None:
+        """Count ``n`` device->host transfers against this session.
+
+        Called wherever classification outputs cross to numpy — here in
+        :meth:`profile` and by the serving demux
+        (:meth:`repro.serve.profiler_service.ProfilingService.step`) —
+        so the snapshot shows how chatty each dispatch path is.
+        """
+        if self._obs.enabled:
+            self._m_transfers.inc(n, backend=self.config.backend)
 
     # ----------------------------------------------------------------------
     def _place(self, db: RefDB) -> RefDB:

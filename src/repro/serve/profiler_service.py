@@ -54,6 +54,8 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
+from repro import obs
+from repro.obs.trace import RequestTimeline
 from repro.pipeline.report import ProfileAccumulator, ProfileReport
 from repro.pipeline.session import ProfilingSession
 from repro.pipeline.source import ReadSource, as_source
@@ -102,9 +104,11 @@ class ProfileHandle:
         self.request_id = request_id
         self.state = RequestState.QUEUED
         self.error: BaseException | None = None
-        self.submitted_at = time.perf_counter()
-        self.started_at: float | None = None
-        self.finished_at: float | None = None
+        # The one request clock: every latency figure (here and on the
+        # router's RoutedHandle) derives from these phase marks, and the
+        # same marks assemble into the request's trace.
+        self.timeline = RequestTimeline()
+        self.timeline.mark("submitted")
         self.reads_admitted = 0
         self.reads_classified = 0
         self._acc: ProfileAccumulator | None = None
@@ -154,12 +158,33 @@ class ProfileHandle:
     def done(self) -> bool:
         return self.state.terminal
 
+    # -- the unified latency clock (all timeline-derived) -------------------
+    @property
+    def submitted_at(self) -> float | None:
+        return self.timeline.at("submitted")
+
+    @property
+    def started_at(self) -> float | None:
+        return self.timeline.at("started")
+
+    @property
+    def finished_at(self) -> float | None:
+        return self.timeline.at("finished")
+
     @property
     def latency_s(self) -> float | None:
         """Submit-to-terminal wall time, once terminal."""
-        if self.finished_at is None:
-            return None
-        return self.finished_at - self.submitted_at
+        return self.timeline.latency_s
+
+    @property
+    def queue_wait_s(self) -> float | None:
+        """Admission wait: submit until the request went RUNNING."""
+        return self.timeline.queue_wait_s
+
+    @property
+    def service_s(self) -> float | None:
+        """Active service time: RUNNING until terminal."""
+        return self.timeline.service_s
 
 
 class ProfilingService:
@@ -176,7 +201,10 @@ class ProfilingService:
 
     def __init__(self, session: ProfilingSession, *, max_active: int = 8,
                  max_queue: int = 64,
-                 buckets: Sequence[int] | None = None):
+                 buckets: Sequence[int] | None = None,
+                 metrics: obs.MetricsRegistry | None = None,
+                 tracer: obs.TraceRecorder | None = None,
+                 obs_labels: dict[str, str] | None = None):
         """Args:
           session: a session whose RefDB is already built/loaded (the one
             expensive shared structure; requests only read it — for the
@@ -186,6 +214,11 @@ class ProfilingService:
           max_queue: bound on requests waiting behind the active set.
           buckets: allowed read-length paddings for cohort shapes
             (default: powers of two up to 4096 — a bounded jit cache).
+          metrics: explicit metrics registry (default: the process
+            global, a no-op unless ``obs.enable_metrics()`` ran).
+          tracer: explicit trace recorder (same default convention).
+          obs_labels: constant labels stamped on every sample this
+            service records (the tenant router sets ``tenant=...``).
         """
         if session.refdb is None:
             raise ValueError(
@@ -209,6 +242,34 @@ class ProfilingService:
         self.error: BaseException | None = None
         self.cohorts_run = 0
         self.reads_classified = 0
+        self._obs = obs.resolve_metrics(metrics)
+        self._tracer = obs.resolve_tracer(tracer)
+        self._labels = dict(obs_labels or {})
+        self._m_admission_wait = self._obs.histogram(
+            "serve_admission_wait_seconds",
+            "Queue wait from submit until the request went RUNNING.",
+            unit="s")
+        self._m_batch_time = self._obs.histogram(
+            "serve_batch_seconds",
+            "Wall time of one cohort classify_batch, demux included.",
+            unit="s")
+        self._m_fill_ratio = self._obs.histogram(
+            "serve_cohort_fill_ratio",
+            "Live rows over total slots per executed cohort.",
+            buckets=obs.RATIO_BUCKETS)
+        self._m_padding_rows = self._obs.counter(
+            "serve_cohort_padding_rows_total",
+            "Wasted (padding) rows across executed cohorts.")
+        self._m_reads = self._obs.counter(
+            "serve_reads_classified_total",
+            "Reads classified and demuxed into request accumulators.")
+        self._m_requests = self._obs.counter(
+            "serve_requests_total",
+            "Requests reaching a terminal state, by outcome.")
+        self._m_queue_depth = self._obs.gauge(
+            "serve_queue_depth", "Requests waiting in admission right now.")
+        self._m_active = self._obs.gauge(
+            "serve_active_requests", "Requests currently interleaving reads.")
 
     # -- admission ----------------------------------------------------------
     def submit(self, request: ProfileRequest | ReadSource | object, *,
@@ -249,6 +310,8 @@ class ProfilingService:
                 or f"req-{next(self._ids)}"
             handle = ProfileHandle(self, request, rid)
             self._queued.append(handle)
+            if self._obs.enabled:
+                self._m_queue_depth.set(len(self._queued), **self._labels)
             self._work.notify_all()
             return handle
 
@@ -276,11 +339,31 @@ class ProfilingService:
         # Classify outside the lock too: the service stays responsive
         # while the backend crunches the batch.
         tokens, lengths, live = self._assemble(cohort)
+        recording = self._obs.enabled
+        t_exec = time.perf_counter() if recording or self._tracer.enabled \
+            else 0.0
         res = self.session.classify_batch(tokens, lengths,
                                           num_valid=len(live))
         hits = np.asarray(res.classification.hits)
         cat = np.asarray(res.classification.category)
+        t_demux = time.perf_counter() if recording or self._tracer.enabled \
+            else 0.0
         with self._work:
+            if recording:
+                slots = self._sched.slots
+                self._m_batch_time.observe(
+                    t_demux - t_exec, backend=self.session.config.backend,
+                    **self._labels)
+                self._m_fill_ratio.observe(len(live) / slots, **self._labels)
+                self._m_padding_rows.inc(slots - len(live), **self._labels)
+                self._m_reads.inc(len(live), **self._labels)
+            # hits + category: two device->host pulls per cohort (the
+            # session guards on its own registry's enabled flag).
+            self.session.note_host_transfers(2)
+            if recording or self._tracer.enabled:
+                for h in {r.handle for r in live}:
+                    h.timeline.mark("first_execute", at=t_exec)
+                    h.timeline.mark("accumulate", at=t_demux)
             self._demux_locked(live, hits, cat)
             self.cohorts_run += 1
             self._finish_exhausted_locked()
@@ -390,7 +473,12 @@ class ProfilingService:
             if h.state is not RequestState.QUEUED:
                 continue                       # cancelled while waiting
             h.state = RequestState.RUNNING
-            h.started_at = time.perf_counter()
+            h.timeline.mark("started")
+            if self._obs.enabled:
+                self._m_admission_wait.observe(
+                    h.queue_wait_s or 0.0, **self._labels)
+                self._m_queue_depth.set(len(self._queued), **self._labels)
+                self._m_active.set(len(self._active) + 1, **self._labels)
             h._acc = ProfileAccumulator(self.session.refdb.num_species)
             h._reads = _iter_reads(h.request.source,
                                    self.session.config.batch_size)
@@ -484,6 +572,7 @@ class ProfilingService:
         for h in list(self._active):
             if h.state is RequestState.RUNNING and h._exhausted \
                     and h.reads_classified == h.reads_admitted:
+                h.timeline.mark("finalize")
                 h._final = self._finalize_locked(h)
                 self._terminate_locked(h, RequestState.DONE)
 
@@ -511,11 +600,17 @@ class ProfilingService:
     def _terminate_locked(self, h: ProfileHandle, state: RequestState
                           ) -> None:
         h.state = state
-        h.finished_at = time.perf_counter()
+        h.timeline.mark("finished")
         if h in self._active:
             self._active.remove(h)
         if h in self._queued:
             self._queued.remove(h)
+        if self._obs.enabled:
+            self._m_requests.inc(1, state=state.value, **self._labels)
+            self._m_queue_depth.set(len(self._queued), **self._labels)
+            self._m_active.set(len(self._active), **self._labels)
+        if self._tracer.enabled:
+            self._tracer.record(h.request_id, h.timeline, state.value)
         close = getattr(h._reads, "close", None)
         if close is not None:
             close()

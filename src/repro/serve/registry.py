@@ -47,10 +47,12 @@ import pathlib
 import re
 import tempfile
 import threading
+import time
 from typing import Callable, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core import assoc_memory
 from repro.core.assoc_memory import RefDB, RefDBBuilder
 from repro.pipeline import refdb_store
@@ -73,10 +75,19 @@ class RefDBSnapshot:
     parent_version: int | None = None   # None for the initial full build
     delta: dict | None = None           # {"added": [...], "removed": [...]}
     path: pathlib.Path | None = None    # on-disk entry (None in-memory)
+    created_at: float = 0.0             # epoch seconds of the publish
 
     @property
     def species(self) -> tuple[str, ...]:
         return self.db.species_names
+
+
+@dataclasses.dataclass(frozen=True)
+class GCResult:
+    """What one :meth:`RefDBRegistry.gc` sweep retired."""
+
+    collected: tuple[tuple[str, int], ...]   # (database, version) pairs
+    reclaimed_bytes: int                     # on-disk bytes unlinked
 
 
 class _Entry:
@@ -88,6 +99,9 @@ class _Entry:
         self.encode_fn = encode_fn
         self.snapshots: dict[int, RefDBSnapshot] = {}
         self.current_version = 0
+        # version -> live-service refcount (routers pin versions they
+        # serve; gc never collects a pinned version).
+        self.pins: dict[int, int] = {}
         # Serializes builds/deltas per database so version numbers are a
         # gapless chain even under concurrent writers; the registry-wide
         # lock is only held for pointer reads/swaps.
@@ -97,16 +111,36 @@ class _Entry:
 class RefDBRegistry:
     """Named, versioned RefDBs with atomic publish and live deltas."""
 
-    def __init__(self, root: str | pathlib.Path | None = None):
+    def __init__(self, root: str | pathlib.Path | None = None, *,
+                 metrics: obs.MetricsRegistry | None = None):
         """Args:
           root: snapshot directory (one subdirectory per database).  None
             keeps everything in memory — versioning, deltas, and hot-swap
             all work; nothing survives the process.
+          metrics: explicit metrics registry (default: the process
+            global, a no-op unless ``obs.enable_metrics()`` ran).
         """
         self.root = pathlib.Path(root) if root is not None else None
         self._lock = threading.RLock()
         self._entries: dict[str, _Entry] = {}
         self._subscribers: list[Callable[[RefDBSnapshot], None]] = []
+        self._obs = obs.resolve_metrics(metrics)
+        self._m_publishes = self._obs.counter(
+            "refdb_publishes_total",
+            "Snapshot versions published, by database.")
+        self._m_build_time = self._obs.histogram(
+            "refdb_build_seconds",
+            "Wall time of a full build or delta, publish included.",
+            unit="s")
+        self._m_live_version = self._obs.gauge(
+            "refdb_current_version",
+            "Newest published version number, by database.")
+        self._m_gc_versions = self._obs.counter(
+            "refdb_gc_versions_total",
+            "Snapshot versions retired by the garbage collector.")
+        self._m_gc_bytes = self._obs.counter(
+            "refdb_gc_reclaimed_bytes_total",
+            "On-disk snapshot bytes reclaimed by the garbage collector.")
 
     # -- creation -----------------------------------------------------------
     def create(self, name: str, genomes: dict[str, np.ndarray],
@@ -138,12 +172,16 @@ class RefDBRegistry:
             self._entries[name] = entry
         try:
             with entry.mutate:
+                t0 = time.perf_counter()
                 builder = self._builder(entry)
                 db = refdb_store.build_streaming(genomes, builder,
                                                  on_genome=on_genome)
                 snap = self._publish(
                     entry, db, parent=None, delta=None,
                     genomes_digest=_genomes_digest(genomes))
+                if self._obs.enabled:
+                    self._m_build_time.observe(time.perf_counter() - t0,
+                                               database=name, kind="create")
         except BaseException:
             with self._lock:
                 self._entries.pop(name, None)   # failed create leaves no stub
@@ -170,6 +208,7 @@ class RefDBRegistry:
                              "remove= species names")
         entry = self._entry(name)
         with entry.mutate:
+            t0 = time.perf_counter()
             base = self.current(name)
             addition = None
             if add:
@@ -182,6 +221,9 @@ class RefDBRegistry:
             delta = {"added": sorted(add) if add else [],
                      "removed": sorted(remove)}
             snap = self._publish(entry, db, parent=base.version, delta=delta)
+            if self._obs.enabled:
+                self._m_build_time.observe(time.perf_counter() - t0,
+                                           database=name, kind="delta")
         self._notify(snap)
         return snap
 
@@ -219,6 +261,120 @@ class RefDBRegistry:
         entry = self._entry(name)
         with self._lock:
             return tuple(sorted(entry.snapshots))
+
+    # -- liveness pins + garbage collection ---------------------------------
+    def pin(self, name: str, version: int) -> None:
+        """Refcount ``version`` as held by a live service.
+
+        The router pins every version it serves (current and draining);
+        :meth:`gc` refuses to collect a pinned version no matter how old
+        or deep in the chain it is.
+        """
+        entry = self._entry(name)
+        with self._lock:
+            if version not in entry.snapshots:
+                raise KeyError(f"database {name!r} has no version "
+                               f"{version} to pin")
+            entry.pins[version] = entry.pins.get(version, 0) + 1
+
+    def release(self, name: str, version: int) -> None:
+        """Drop one pin of ``version`` (idempotent past zero)."""
+        entry = self._entry(name)
+        with self._lock:
+            n = entry.pins.get(version, 0) - 1
+            if n > 0:
+                entry.pins[version] = n
+            else:
+                entry.pins.pop(version, None)
+
+    def pins(self, name: str) -> dict[int, int]:
+        """Live pin counts by version (a copy, for inspection/tests)."""
+        entry = self._entry(name)
+        with self._lock:
+            return dict(entry.pins)
+
+    def gc(self, name: str | None = None, *, keep_last: int = 2,
+           max_age_s: float | None = None) -> "GCResult":
+        """Retire old snapshot versions no live service references.
+
+        A version is collected only when it is **all** of: not the
+        current version, not pinned by any service, not among the
+        ``keep_last`` newest retained versions, and — when ``max_age_s``
+        is given — older than that.  Collection drops the in-memory
+        snapshot and unlinks its on-disk ``v*.npz`` file (on-disk-only
+        versions from before :meth:`open` are swept by the same rules,
+        aged by file mtime).
+
+        Args:
+          name: one database, or None for every database.
+          keep_last: hard floor of newest versions always retained.
+          max_age_s: additionally require a collected version to be at
+            least this old (seconds since publish).
+
+        Returns:
+          :class:`GCResult` with the collected ``(database, version)``
+          pairs and total bytes reclaimed on disk.
+        """
+        if keep_last < 1:
+            raise ValueError("keep_last must be >= 1 (the current "
+                             "version is always retained)")
+        names = [name] if name is not None else list(self.databases())
+        collected: list[tuple[str, int]] = []
+        reclaimed = 0
+        now = time.time()
+        for dbname in names:
+            entry = self._entry(dbname)
+            with entry.mutate:      # serialize against concurrent publish
+                got, nbytes = self._gc_one(entry, keep_last, max_age_s, now)
+            collected.extend((dbname, v) for v in got)
+            reclaimed += nbytes
+        if self._obs.enabled and collected:
+            self._m_gc_versions.inc(len(collected))
+            self._m_gc_bytes.inc(reclaimed)
+        return GCResult(collected=tuple(collected),
+                        reclaimed_bytes=reclaimed)
+
+    def _gc_one(self, entry: _Entry, keep_last: int,
+                max_age_s: float | None, now: float
+                ) -> tuple[list[int], int]:
+        """Collect one database's eligible versions; runs under
+        ``entry.mutate``."""
+        disk: dict[int, pathlib.Path] = {}
+        if self.root is not None:
+            for p in (self.root / entry.name).glob("v*.npz"):
+                try:
+                    disk[int(p.stem[1:])] = p
+                except ValueError:
+                    continue
+        with self._lock:
+            known = sorted(set(entry.snapshots) | set(disk))
+            keep = set(known[-keep_last:])
+            keep.add(entry.current_version)
+            keep.update(v for v, n in entry.pins.items() if n > 0)
+            victims = []
+            for v in known:
+                if v in keep:
+                    continue
+                if max_age_s is not None:
+                    snap = entry.snapshots.get(v)
+                    born = snap.created_at if snap is not None \
+                        else disk[v].stat().st_mtime
+                    if now - born < max_age_s:
+                        continue
+                victims.append(v)
+            for v in victims:
+                entry.snapshots.pop(v, None)
+        nbytes = 0
+        for v in victims:
+            p = disk.get(v)
+            if p is None:
+                continue
+            try:
+                nbytes += p.stat().st_size
+                p.unlink()
+            except OSError:
+                pass                # already gone: nothing reclaimed
+        return victims, nbytes
 
     # -- change notification (the router's auto-swap hook) ------------------
     def subscribe(self, fn: Callable[[RefDBSnapshot], None]
@@ -265,7 +421,8 @@ class RefDBRegistry:
             snap = RefDBSnapshot(
                 database=name, version=int(meta["version"]), db=db,
                 parent_version=m.get("parent_version"),
-                delta=m.get("delta"), path=path)
+                delta=m.get("delta"), path=path,
+                created_at=path.stat().st_mtime)
             entry.snapshots[snap.version] = snap
             entry.current_version = snap.version
             reg._entries[name] = entry
@@ -310,10 +467,14 @@ class RefDBRegistry:
                 version=version, parent_version=parent, delta=delta)
             self._flip_pointer(d, entry, version, path.name)
         snap = RefDBSnapshot(database=entry.name, version=version, db=db,
-                             parent_version=parent, delta=delta, path=path)
+                             parent_version=parent, delta=delta, path=path,
+                             created_at=time.time())
         with self._lock:
             entry.snapshots[version] = snap
             entry.current_version = version
+        if self._obs.enabled:
+            self._m_publishes.inc(1, database=entry.name)
+            self._m_live_version.set(version, database=entry.name)
         return snap
 
     def _flip_pointer(self, d: pathlib.Path, entry: _Entry, version: int,

@@ -51,6 +51,7 @@ import itertools
 import threading
 import time
 
+from repro import obs
 from repro.pipeline.backend import Backend, resolve_backend
 from repro.pipeline.config import ProfilerConfig
 from repro.pipeline.report import ProfileReport
@@ -110,6 +111,19 @@ class RoutedHandle:
     def latency_s(self) -> float | None:
         return self.handle.latency_s
 
+    @property
+    def queue_wait_s(self) -> float | None:
+        return self.handle.queue_wait_s
+
+    @property
+    def service_s(self) -> float | None:
+        return self.handle.service_s
+
+    @property
+    def timeline(self):
+        """The request's phase clock (shared with the service handle)."""
+        return self.handle.timeline
+
     def snapshot(self) -> ProfileReport:
         return self.handle.snapshot()
 
@@ -128,6 +142,7 @@ class _VersionedService:
         self.version = version
         self.session = session
         self.service = service
+        self.drain_started: float | None = None   # set at hot-swap time
         # Claimed by at most one pump thread at a time (the service's
         # source iterators are single-pumper by contract); distinct
         # services pump concurrently across worker threads.
@@ -153,7 +168,9 @@ class TenantRouter:
                  backend: str | None = None, batch_size: int | None = None,
                  backend_options: dict | None = None,
                  buckets=None, service_active: int = 8,
-                 service_queue: int = 256, auto_swap: bool = True):
+                 service_queue: int = 256, auto_swap: bool = True,
+                 metrics: obs.MetricsRegistry | None = None,
+                 tracer: obs.TraceRecorder | None = None):
         """Args:
           registry: source of truth for databases and their versions.
           backend / batch_size / backend_options: execution overrides
@@ -167,6 +184,9 @@ class TenantRouter:
             database version.
           auto_swap: subscribe to the registry so every publish of a
             served database hot-swaps it immediately.
+          metrics / tracer: explicit observability sinks (default: the
+            process globals — no-ops unless ``obs.enable_*()`` ran).
+            Forwarded to every per-version service the router spins up.
         """
         self.registry = registry
         self._overrides = {"backend": backend, "batch_size": batch_size,
@@ -184,6 +204,27 @@ class TenantRouter:
         self._wake = threading.Condition(self._lock)
         self.swaps = 0
         self.retired: list[tuple[str, int]] = []    # (database, version)
+        self._obs = obs.resolve_metrics(metrics)
+        self._tracer = obs.resolve_tracer(tracer)
+        self._m_requests = self._obs.counter(
+            "router_requests_total", "Requests admitted, by tenant.")
+        self._m_rejections = self._obs.counter(
+            "router_quota_rejections_total",
+            "Submissions rejected at a tenant's admission quota.")
+        self._m_reads_done = self._obs.counter(
+            "router_reads_completed_total",
+            "Reads classified in requests that reached DONE, by tenant.")
+        self._m_swap_time = self._obs.histogram(
+            "router_hot_swap_seconds",
+            "Publish-to-serving wall time of a hot swap (spin-up "
+            "included).", unit="s")
+        self._m_drain_time = self._obs.histogram(
+            "router_drain_seconds",
+            "Swap-to-retire wall time of a superseded version's drain.",
+            unit="s")
+        self._m_live_version = self._obs.gauge(
+            "router_serving_version",
+            "Database version new admissions currently route to.")
         self._subscription = (registry.subscribe(self._on_publish)
                               if auto_swap else None)
 
@@ -202,6 +243,9 @@ class TenantRouter:
             if name in self._dbs:                   # lost a benign race
                 return self._dbs[name].current.version
             self._dbs[name] = _Database(name, config, backend, vs)
+            self.registry.pin(name, vs.version)
+            if self._obs.enabled:
+                self._m_live_version.set(vs.version, database=name)
             return vs.version
 
     def add_tenant(self, tenant: str, database: str, *,
@@ -257,6 +301,8 @@ class TenantRouter:
                 if len(live) < spec.max_active + spec.max_queue:
                     break
                 if not block:
+                    if self._obs.enabled:
+                        self._m_rejections.inc(1, tenant=tenant)
                     raise ServiceOverloaded(
                         f"tenant {tenant!r} quota full "
                         f"({spec.max_active} active + {spec.max_queue} "
@@ -273,6 +319,8 @@ class TenantRouter:
             handle = vs.service.submit(source, request_id=rid)
             routed = RoutedHandle(handle, tenant, spec.database, vs.version)
             live.append(routed)
+            if self._obs.enabled:
+                self._m_requests.inc(1, tenant=tenant)
             return routed
 
     # -- the swap -----------------------------------------------------------
@@ -286,6 +334,7 @@ class TenantRouter:
         service keeps being pumped until idle, then retires.  No-op if
         the requested version is already serving.
         """
+        t0 = time.perf_counter()
         snap = (self.registry.current(database) if version is None
                 else self.registry.snapshot(database, version))
         with self._lock:
@@ -299,9 +348,15 @@ class TenantRouter:
         with self._wake:
             if db.current.version == snap.version:  # benign publish race
                 return snap.version
+            self.registry.pin(database, vs.version)
+            db.current.drain_started = time.perf_counter()
             db.draining.append(db.current)
             db.current = vs
             self.swaps += 1
+            if self._obs.enabled:
+                self._m_swap_time.observe(time.perf_counter() - t0,
+                                          database=database)
+                self._m_live_version.set(vs.version, database=database)
             self._wake.notify_all()
         return snap.version
 
@@ -344,6 +399,11 @@ class TenantRouter:
         if self._retire_drained():
             did = True
         with self._wake:
+            # Sweep terminal handles out of every tenant's quota list —
+            # keeps quota headroom fresh between submits and is where
+            # per-tenant completed-read accounting happens.
+            for t in self._tenants:
+                self._prune_locked(t)
             self._wake.notify_all()
         return did
 
@@ -426,12 +486,16 @@ class TenantRouter:
                  backend: Backend) -> _VersionedService:
         """Session + service for one snapshot: adopt (re-place) the
         database on the shared backend, ready to admit."""
-        session = ProfilingSession(config, backend=backend)
+        session = ProfilingSession(config, backend=backend,
+                                   metrics=self._obs)
         session.adopt_refdb(snap.db)
         service = ProfilingService(session,
                                    max_active=self._service_active,
                                    max_queue=self._service_queue,
-                                   buckets=self._buckets)
+                                   buckets=self._buckets,
+                                   metrics=self._obs,
+                                   tracer=self._tracer,
+                                   obs_labels={"database": snap.database})
         return _VersionedService(snap.version, session, service)
 
     def _db(self, name: str) -> _Database:
@@ -451,7 +515,8 @@ class TenantRouter:
             return out
 
     def _retire_drained(self) -> bool:
-        """Drop drained old-version services; True if any retired."""
+        """Drop drained old-version services (and their registry pins);
+        True if any retired."""
         with self._lock:
             retired = False
             for db in self._dbs.values():
@@ -459,6 +524,12 @@ class TenantRouter:
                 for vs in db.draining:
                     if vs.service.idle:
                         self.retired.append((db.name, vs.version))
+                        self.registry.release(db.name, vs.version)
+                        if self._obs.enabled \
+                                and vs.drain_started is not None:
+                            self._m_drain_time.observe(
+                                time.perf_counter() - vs.drain_started,
+                                database=db.name)
                         retired = True
                     else:
                         keep.append(vs)
@@ -468,6 +539,12 @@ class TenantRouter:
     def _prune_locked(self, tenant: str) -> list[RoutedHandle]:
         """Drop terminal handles from the tenant's live list (quota
         accounting); runs under the router lock."""
-        live = [h for h in self._live[tenant] if not h.done]
+        live = []
+        for h in self._live[tenant]:
+            if not h.done:
+                live.append(h)
+            elif self._obs.enabled and h.state is RequestState.DONE:
+                self._m_reads_done.inc(h.handle.reads_classified,
+                                       tenant=tenant)
         self._live[tenant] = live
         return live

@@ -1,0 +1,426 @@
+"""Observability layer: metrics math, trace assembly, and the two
+contracts the serving stack stakes on it.
+
+Acceptance contract (ISSUE 7): enabling metrics must not move a single
+bit of profiler output on any backend (``reference``, ``pallas_fused``,
+``sharded`` — and ``pcm_sim`` with device noise, whose stats read is a
+separate compiled graph); and an assembled request trace's child spans
+must tile the root span exactly, cancelled and failed requests
+included.  Plus: histogram bucket/percentile/merge math, registry GC
+(pinned refusal, ``keep_last``, ``max_age_s``, reclaimed bytes), and
+the router/registry metric touchpoints.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.assoc_memory import build_refdb
+from repro.core.hd_space import HDSpace
+from repro.genomics import synth
+from repro.pipeline import (ArraySource, ProfilerConfig, ProfilingSession,
+                            SyntheticSource)
+from repro.serve import (ProfilingService, RefDBRegistry, ServiceOverloaded,
+                         TenantRouter)
+
+SP = HDSpace(dim=512, ngram=5, z_threshold=3.0)
+SPEC = synth.CommunitySpec(num_species=4, genome_len=6_000, seed=11)
+
+
+def _config(**kw):
+    kw.setdefault("space", SP)
+    kw.setdefault("window", 1024)
+    kw.setdefault("batch_size", 16)
+    return ProfilerConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def sample():
+    return SyntheticSource(SPEC, num_reads=96, present=[0, 2])
+
+
+@pytest.fixture(scope="module")
+def refdb(sample):
+    return build_refdb(sample.genomes, SP, window=1024)
+
+
+@pytest.fixture(scope="module")
+def extra():
+    rng = np.random.default_rng(99)
+    return {"sp_new": rng.integers(0, 4, 6_000, dtype=np.int32)}
+
+
+def _slices(sample, n):
+    return [ArraySource(sample.tokens[i::n], sample.lengths[i::n])
+            for i in range(n)]
+
+
+# -- histogram bucket + percentile math --------------------------------------
+
+def test_histogram_boundaries_and_overflow():
+    state = obs.HistogramState((1.0, 2.0, 4.0))
+    for v in (0.5, 1.0, 2.0, 4.0, 5.0):     # bounds inclusive (le)
+        state.observe(v)
+    assert state.counts == [2, 1, 1, 1]     # last slot = overflow
+    assert state.count == 5
+    assert state.sum == pytest.approx(12.5)
+    # ranks landing in the overflow bucket clamp to the last bound
+    assert state.percentile(100) == 4.0
+
+
+def test_histogram_percentile_interpolates_within_bucket():
+    state = obs.HistogramState((10.0,))
+    state.observe(3.0)                      # one sample, bucket [0, 10]
+    assert state.percentile(50) == pytest.approx(5.0)
+    state = obs.HistogramState((1.0, 2.0))
+    for _ in range(2):
+        state.observe(1.5)
+    for _ in range(2):
+        state.observe(0.5)
+    assert state.percentile(50) == pytest.approx(1.0)
+    assert state.percentile(100) == pytest.approx(2.0)
+
+
+def test_histogram_empty_and_bad_args():
+    state = obs.HistogramState((1.0,))
+    assert math.isnan(state.percentile(50))
+    assert math.isnan(state.mean)
+    with pytest.raises(ValueError):
+        state.percentile(101)
+    with pytest.raises(ValueError):
+        obs.HistogramState(())
+    with pytest.raises(ValueError):
+        obs.HistogramState((2.0, 1.0))      # not ascending
+
+
+def test_histogram_merge():
+    a = obs.HistogramState((1.0, 2.0))
+    b = obs.HistogramState((1.0, 2.0))
+    a.observe(0.5)
+    b.observe(1.5)
+    b.observe(9.0)
+    a.merge(b)
+    assert a.counts == [1, 1, 1]
+    assert a.count == 3
+    assert a.sum == pytest.approx(11.0)
+    with pytest.raises(ValueError):
+        a.merge(obs.HistogramState((1.0,)))
+
+
+def test_registry_get_or_create_and_kind_conflicts():
+    reg = obs.MetricsRegistry()
+    h = reg.histogram("x_seconds", buckets=(1.0, 2.0))
+    assert reg.histogram("x_seconds", buckets=(1.0, 2.0)) is h
+    with pytest.raises(ValueError, match="different buckets"):
+        reg.histogram("x_seconds", buckets=(1.0,))
+    reg.counter("x_total")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x_total")
+    with pytest.raises(ValueError):
+        reg.counter("x_total").inc(-1)      # counters only go up
+
+
+def test_snapshot_and_prometheus_exposition():
+    reg = obs.MetricsRegistry()
+    reg.counter("reads_total").inc(3, tenant="acme")
+    lat = reg.histogram("lat_seconds", buckets=(0.1, 1.0))
+    lat.observe(0.05, backend="reference")
+    lat.observe(5.0, backend="reference")
+    snap = reg.snapshot()
+    assert snap["counters"]["reads_total"]["series"][0] == {
+        "labels": {"tenant": "acme"}, "value": 3.0}
+    [series] = snap["histograms"]["lat_seconds"]["series"]
+    assert series["labels"] == {"backend": "reference"}
+    assert series["counts"] == [1, 0, 1]
+    assert series["p50"] is not None
+    text = reg.to_prometheus()
+    assert 'reads_total{tenant="acme"} 3' in text
+    assert 'lat_seconds_bucket{backend="reference",le="+Inf"} 2' in text
+    assert 'lat_seconds_count{backend="reference"} 2' in text
+
+
+def test_null_registry_is_inert():
+    null = obs.NULL_METRICS
+    assert not null.enabled
+    c = null.counter("whatever_total")
+    c.inc(5)
+    assert c.value() == 0.0 and not c.enabled
+    null.histogram("h").observe(1.0)
+    assert math.isnan(null.histogram("h").percentile(50))
+    assert null.instruments() == ()
+
+
+# -- trace assembly -----------------------------------------------------------
+
+def _timeline(*marks):
+    tl = obs.RequestTimeline()
+    for name, t in marks:
+        tl.mark(name, at=t)
+    return tl
+
+
+def test_trace_children_tile_root_exactly():
+    tl = _timeline(("submitted", 1.0), ("started", 1.5),
+                   ("first_execute", 2.0), ("accumulate", 3.0),
+                   ("finalize", 3.25), ("finished", 4.0))
+    trace = obs.assemble_trace("r-0", tl, state="done")
+    assert [s.name for s in trace.spans] == [
+        "request", "admission", "schedule", "execute", "accumulate",
+        "finalize"]
+    children = trace.spans[1:]
+    assert sum(s.duration_s for s in children) == trace.duration_s == 3.0
+    assert all(s.parent_id == 0 for s in children)
+    assert trace.span("schedule").duration_s == pytest.approx(0.5)
+
+
+def test_trace_of_request_cancelled_while_queued():
+    tl = _timeline(("submitted", 1.0), ("finished", 2.0))
+    trace = obs.assemble_trace("r-1", tl, state="cancelled")
+    assert trace.state == "cancelled"
+    assert [s.name for s in trace.spans] == ["request", "admission"]
+    assert trace.duration_s == pytest.approx(1.0)
+
+
+def test_trace_stops_at_last_phase_reached():
+    tl = _timeline(("submitted", 1.0), ("started", 2.0),
+                   ("first_execute", 2.5), ("finished", 3.0))
+    trace = obs.assemble_trace("r-2", tl, state="failed")
+    assert [s.name for s in trace.spans] == [
+        "request", "admission", "schedule", "execute"]
+    assert sum(s.duration_s for s in trace.spans[1:]) == trace.duration_s
+
+
+def test_timeline_first_wins_except_accumulate():
+    tl = _timeline(("submitted", 1.0), ("submitted", 9.0),
+                   ("accumulate", 2.0), ("accumulate", 3.0))
+    assert tl.at("submitted") == 1.0
+    assert tl.at("accumulate") == 3.0       # latest cohort demux
+    with pytest.raises(ValueError, match="unknown timeline mark"):
+        tl.mark("warp")
+    with pytest.raises(ValueError, match="no marks"):
+        obs.assemble_trace("r-3", obs.RequestTimeline())
+
+
+def test_trace_recorder_keeps_first_n():
+    rec = obs.TraceRecorder(sample=2)
+    for i in range(4):
+        tl = _timeline(("submitted", float(i)), ("finished", i + 1.0))
+        rec.record(f"r-{i}", tl)
+    assert rec.full
+    assert [t.trace_id for t in rec.traces()] == ["r-0", "r-1"]
+    null = obs.NULL_TRACER
+    assert null.record("r", _timeline(("submitted", 0.0))) is None
+    assert null.traces() == () and not null.enabled
+
+
+# -- bit-exactness: metrics on == metrics off --------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas_fused", "sharded"])
+def test_metrics_do_not_perturb_results(sample, refdb, backend):
+    cfg = _config(backend=backend)
+    off = ProfilingSession(cfg)
+    off.adopt_refdb(refdb)
+    reg = obs.MetricsRegistry()
+    on = ProfilingSession(cfg, metrics=reg)
+    on.adopt_refdb(refdb)
+    src = _slices(sample, 1)[0]
+    assert on.profile(src).to_json() == off.profile(src).to_json()
+    # the enabled twin really recorded (the comparison wasn't vacuous)
+    assert reg.counter("session_classify_batches_total").total() > 0
+    assert reg.histogram("session_classify_batch_seconds").merged().count > 0
+
+
+def test_pcm_sim_metrics_bit_exact_with_device_noise(sample, refdb):
+    """The stats read is a separate graph; its result math must match."""
+    cfg = _config(backend="pcm_sim",
+                  backend_options={"preset": "pcm", "seed": 3})
+    src = _slices(sample, 1)[0]
+    off = ProfilingSession(cfg)
+    off.adopt_refdb(refdb)
+    rep_off = off.profile(src).to_json()
+    reg = obs.enable_metrics()              # backends resolve the global
+    try:
+        on = ProfilingSession(cfg)
+        on.adopt_refdb(refdb)
+        rep_on = on.profile(src).to_json()
+    finally:
+        obs.disable()
+    assert rep_on == rep_off
+    assert reg.counter("pcm_program_events_total").total() >= 1
+    assert reg.counter("pcm_reads_total").total() > 0
+    stuck = reg.gauge("pcm_stuck_cells")
+    assert len(stuck.labelsets()) == 4      # {pos,neg} x {on,off}
+
+
+# -- service + router end to end ---------------------------------------------
+
+def test_service_metrics_and_traces_end_to_end(sample, refdb):
+    cfg = _config(backend="reference")
+    session = ProfilingSession(cfg)
+    session.adopt_refdb(refdb)
+    reg = obs.MetricsRegistry()
+    rec = obs.TraceRecorder(sample=8)
+    service = ProfilingService(session, max_active=2, max_queue=8,
+                               metrics=reg, tracer=rec)
+    srcs = _slices(sample, 4)
+    handles = [service.submit(s) for s in srcs]
+    service.run_until_idle()
+    reads = sum(h.result(timeout=0).total_reads for h in handles)
+
+    assert reg.counter("serve_requests_total").value(state="done") == 4
+    assert reg.counter("serve_reads_classified_total").total() == reads
+    assert reg.histogram("serve_admission_wait_seconds").merged().count == 4
+    assert reg.histogram("serve_batch_seconds").merged().count > 0
+    fill = reg.histogram("serve_cohort_fill_ratio",
+                         buckets=obs.RATIO_BUCKETS).merged()
+    assert fill.count > 0 and fill.sum <= fill.count    # ratios in (0, 1]
+    assert reg.gauge("serve_queue_depth").value() == 0
+    assert reg.gauge("serve_active_requests").value() == 0
+
+    traces = rec.traces()
+    assert len(traces) == 4
+    for trace in traces:
+        assert trace.state == "done"
+        assert sum(s.duration_s for s in trace.spans[1:]) \
+            == pytest.approx(trace.duration_s)
+    # the trace clock IS the handle latency clock (one accounting)
+    by_id = {t.trace_id: t for t in traces}
+    for h in handles:
+        assert by_id[h.request_id].duration_s \
+            == pytest.approx(h.latency_s)
+        assert h.queue_wait_s + h.service_s == pytest.approx(h.latency_s)
+
+
+def test_cancelled_and_failed_requests_still_trace(sample, refdb):
+    cfg = _config(backend="reference")
+    session = ProfilingSession(cfg)
+    session.adopt_refdb(refdb)
+    reg = obs.MetricsRegistry()
+    rec = obs.TraceRecorder(sample=8)
+    service = ProfilingService(session, max_active=1, max_queue=8,
+                               metrics=reg, tracer=rec)
+    srcs = _slices(sample, 3)
+    h_done = service.submit(srcs[0])
+    service.run_until_idle()
+    h_done.result(timeout=0)
+    h_cancel = service.submit(srcs[1])
+    assert h_cancel.cancel()                # still queued: cancellable
+    h_fail = service.submit(srcs[2])
+    service.fail_all(RuntimeError("injected"))
+    service.run_until_idle()
+    states = {t.trace_id: t.state for t in rec.traces()}
+    assert states[h_cancel.request_id] == "cancelled"
+    assert states[h_fail.request_id] == "failed"
+    # cancelled/failed while queued: the trace stops at admission
+    for h in (h_cancel, h_fail):
+        trace = [t for t in rec.traces()
+                 if t.trace_id == h.request_id][0]
+        assert [s.name for s in trace.spans] == ["request", "admission"]
+    assert reg.counter("serve_requests_total").value(state="cancelled") == 1
+    assert reg.counter("serve_requests_total").value(state="failed") == 1
+
+
+def test_router_and_registry_metrics_touchpoints(tmp_path, sample, extra):
+    reg = obs.MetricsRegistry()
+    registry = RefDBRegistry(root=tmp_path / "r", metrics=reg)
+    registry.create("food", sample.genomes, _config(backend="reference"))
+    router = TenantRouter(registry, metrics=reg)
+    router.add_tenant("acme", database="food", max_active=2, max_queue=0)
+    router.add_tenant("tiny", database="food", max_active=1, max_queue=0)
+
+    srcs = _slices(sample, 4)
+    handles = [router.submit(s, tenant="acme") for s in srcs[:2]]
+    router.submit(srcs[2], tenant="tiny")
+    with pytest.raises(ServiceOverloaded):
+        router.submit(srcs[3], tenant="tiny")
+    registry.apply_delta("food", add=extra)         # auto hot-swap
+    router.run_until_idle()
+    reads = sum(h.result(timeout=300).total_reads for h in handles)
+    router.step()                                   # final prune pass
+    router.close()
+
+    assert reg.counter("router_requests_total").value(tenant="acme") == 2
+    assert reg.counter("router_quota_rejections_total") \
+              .value(tenant="tiny") == 1
+    assert reg.counter("router_reads_completed_total") \
+              .value(tenant="acme") == reads
+    assert reg.gauge("router_serving_version").value(database="food") == 2
+    assert reg.histogram("router_hot_swap_seconds").merged().count == 1
+    assert reg.histogram("router_drain_seconds").merged().count == 1
+    assert reg.counter("refdb_publishes_total").value(database="food") == 2
+    assert reg.gauge("refdb_current_version").value(database="food") == 2
+    builds = reg.histogram("refdb_build_seconds")
+    assert builds.count(database="food", kind="create") == 1
+    assert builds.count(database="food", kind="delta") == 1
+
+
+# -- registry garbage collection ---------------------------------------------
+
+def _three_versions(tmp_path, sample, extra, metrics=None):
+    registry = RefDBRegistry(root=tmp_path / "r", metrics=metrics)
+    registry.create("food", sample.genomes, _config())
+    registry.apply_delta("food", add=extra)
+    registry.apply_delta("food", remove=["sp_new"])
+    assert registry.versions("food") == (1, 2, 3)
+    return registry
+
+
+def test_gc_keep_last_and_reclaimed_bytes(tmp_path, sample, extra):
+    reg = obs.MetricsRegistry()
+    registry = _three_versions(tmp_path, sample, extra, metrics=reg)
+    result = registry.gc("food", keep_last=1)
+    assert result.collected == (("food", 1), ("food", 2))
+    assert result.reclaimed_bytes > 0
+    assert registry.versions("food") == (3,)
+    assert not list((tmp_path / "r" / "food").glob("v1.npz"))
+    assert reg.counter("refdb_gc_versions_total").total() == 2
+    assert reg.counter("refdb_gc_reclaimed_bytes_total").total() \
+        == result.reclaimed_bytes
+    # idempotent: a second sweep finds nothing
+    assert registry.gc("food", keep_last=1).collected == ()
+    with pytest.raises(ValueError):
+        registry.gc("food", keep_last=0)
+
+
+def test_gc_refuses_pinned_versions(tmp_path, sample, extra):
+    registry = _three_versions(tmp_path, sample, extra)
+    registry.pin("food", 1)
+    result = registry.gc("food", keep_last=1)
+    assert result.collected == (("food", 2),)       # v1 pinned, v3 current
+    assert registry.versions("food") == (1, 3)
+    registry.release("food", 1)
+    assert registry.gc("food", keep_last=1).collected == (("food", 1),)
+    with pytest.raises(KeyError):
+        registry.pin("food", 99)
+
+
+def test_gc_max_age_is_a_further_filter(tmp_path, sample, extra):
+    registry = _three_versions(tmp_path, sample, extra)
+    # nothing is an hour old yet -> nothing collected despite keep_last
+    assert registry.gc("food", keep_last=1,
+                       max_age_s=3600).collected == ()
+    assert registry.versions("food") == (1, 2, 3)
+    assert registry.gc("food", keep_last=1,
+                       max_age_s=0).collected == (("food", 1), ("food", 2))
+
+
+def test_gc_never_collects_what_a_live_router_serves(tmp_path, sample,
+                                                     extra):
+    registry = RefDBRegistry(root=tmp_path / "r")
+    registry.create("food", sample.genomes, _config(backend="reference"))
+    router = TenantRouter(registry)
+    router.add_tenant("acme", database="food")
+    assert registry.pins("food") == {1: 1}          # served -> pinned
+    srcs = _slices(sample, 2)
+    h = router.submit(srcs[0], tenant="acme")
+    registry.apply_delta("food", add=extra)         # swap; v1 drains
+    # both versions are held: v1 draining h, v2 serving new admissions
+    assert registry.gc("food", keep_last=1).collected == ()
+    router.run_until_idle()
+    h.result(timeout=300)
+    router.step()                                   # retire drained v1
+    assert registry.pins("food") == {2: 1}
+    assert registry.gc("food", keep_last=1).collected == (("food", 1),)
+    router.close()
