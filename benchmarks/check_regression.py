@@ -16,7 +16,14 @@ It fails (exit 1) when, for any backend present in the baseline,
   --obs-tolerance`` (default 2%) — the metrics layer's overhead guard:
   turning observability ON must not cost the hot path more than 2%, and
   its report must stay bit-identical (which also pins the disabled mode,
-  a strict subset of the enabled one, at zero measurable cost).
+  a strict subset of the enabled one, at zero measurable cost), or
+* ``fleet.relative_aggregate`` (3-host aggregate reads/s over the same
+  run's 1-host cell) dropped more than ``--fleet-tolerance`` (default
+  50% — thread-scheduling noise on shared runners is real) below the
+  baseline ratio, or ``fleet.bit_exact`` is false — a fleet-routed
+  report diverging from its sequential twin breaks the determinism
+  contract behind replication and failover, and fails hard at ANY
+  tolerance.
 
 Backends in the current run but not the baseline are reported and pass
 (new backends enter the gate when the baseline is refreshed).
@@ -57,12 +64,17 @@ def update_baseline(current: dict, path: pathlib.Path = BASELINE) -> dict:
             for name, r in current["backends"].items()
         },
     }
+    if "fleet" in current:
+        baseline["fleet"] = {
+            "relative_aggregate": current["fleet"]["relative_aggregate"],
+        }
     path.write_text(json.dumps(baseline, indent=2, sort_keys=True) + "\n")
     return baseline
 
 
 def check(current: dict, baseline: dict, tolerance: float = 0.20,
-          obs_tolerance: float = 0.02) -> list[str]:
+          obs_tolerance: float = 0.02,
+          fleet_tolerance: float = 0.50) -> list[str]:
     """All regression messages (empty == gate green)."""
     problems = []
     cur = current["backends"]
@@ -97,6 +109,24 @@ def check(current: dict, baseline: dict, tolerance: float = 0.20,
         if not observability.get("bit_exact", False):
             problems.append(
                 "observability: enabling metrics changed the report")
+    fleet = current.get("fleet")
+    if fleet is not None:
+        # Bit-exactness is the hard gate — no tolerance applies: a
+        # rerouted or replicated report must match its sequential twin.
+        if not fleet.get("bit_exact", False):
+            problems.append(
+                "fleet: routed reports diverged from sequential runs "
+                "(determinism contract broken — no tolerance applies)")
+        base_fleet = baseline.get("fleet")
+        if base_fleet is not None:
+            floor = base_fleet["relative_aggregate"] * \
+                (1.0 - fleet_tolerance)
+            if fleet["relative_aggregate"] < floor:
+                problems.append(
+                    f"fleet: 3-host/1-host aggregate throughput "
+                    f"{fleet['relative_aggregate']:.4f} < {floor:.4f} "
+                    f"(baseline {base_fleet['relative_aggregate']:.4f} "
+                    f"- {fleet_tolerance:.0%})")
     return problems
 
 
@@ -110,6 +140,10 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--obs-tolerance", type=float, default=0.02,
                     help="allowed throughput cost of enabling the"
                          " metrics layer (0.02 = 2%%)")
+    ap.add_argument("--fleet-tolerance", type=float, default=0.50,
+                    help="allowed drop in the 3-host/1-host aggregate"
+                         " throughput ratio (0.50 = 50%%; bit-exactness"
+                         " failures ignore this and always fail)")
     ap.add_argument("--update", action="store_true",
                     help="refresh the baseline from the current run "
                          "instead of gating")
@@ -128,7 +162,12 @@ def main(argv: list[str] | None = None) -> None:
     if "observability" in current:
         print(f"observability: enabled/disabled="
               f"{current['observability']['enabled_over_disabled']:.4f}")
-    problems = check(current, baseline, args.tolerance, args.obs_tolerance)
+    if "fleet" in current:
+        print(f"fleet: 3-host/1-host aggregate="
+              f"{current['fleet']['relative_aggregate']:.4f} "
+              f"bit_exact={current['fleet']['bit_exact']}")
+    problems = check(current, baseline, args.tolerance, args.obs_tolerance,
+                     args.fleet_tolerance)
     if problems:
         print("\nREGRESSION GATE FAILED:", file=sys.stderr)
         for p in problems:

@@ -1,0 +1,180 @@
+"""Fleet serving benchmark: aggregate throughput vs host count, plus the
+cost of a fleet-wide two-phase swap and a mid-run host kill.
+
+The aggregate-scale reading of the paper's line-rate claim: many
+replicated hosts behind one controller.  Measures, per host-count cell
+over one source database:
+
+  fleet.{backend}.h{H}.reads_per_s   aggregate sustained reads/s
+  fleet.{backend}.h{H}.p50_ms        median request latency
+  fleet.{backend}.h{H}.p99_ms        tail request latency
+
+for the fleet-coordinated swap under traffic:
+
+  fleet.swap.flip_ms     prepare (all hosts pin) -> all routers flipped
+  fleet.swap.retire_ms   flip -> every host drained the old version
+                         (all source pins released; gc-eligible)
+
+and for the failover path (one host killed mid-run):
+
+  fleet.kill.rerouted    requests re-submitted on surviving replicas
+  fleet.kill.wall_ms     total wall to drain everything anyway
+
+``--smoke`` shrinks the community and the sweep so CI runs the full
+replicate/route/kill/swap/retire cycle in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import HDSpace
+from repro.genomics import synth
+from repro.pipeline import ArraySource, ProfilerConfig
+from repro.serve import FleetController, RefDBRegistry
+from repro.serve.fleet import HostState
+
+SMOKE_SPACE = HDSpace(dim=512, ngram=8, z_threshold=3.0)
+
+
+def _fleet(registry: RefDBRegistry, *, hosts: int, tenants: int,
+           queue: int) -> FleetController:
+    fleet = FleetController(registry, hosts=hosts)
+    for i in range(tenants):
+        fleet.add_tenant(f"t{i}", "bench", max_active=8, max_queue=queue)
+    return fleet
+
+
+def _host_cell(registry: RefDBRegistry, sources, *, hosts: int,
+               tenants: int) -> dict:
+    """One host-count measurement: route all requests, collect."""
+    fleet = _fleet(registry, hosts=hosts, tenants=tenants,
+                   queue=len(sources))
+    # warmup: compile the cohort shapes once per host
+    with fleet:
+        for replica in fleet.hosts():
+            replica.router.submit(sources[0], tenant="t0").result(
+                timeout=600)
+        handles = []
+        t0 = time.perf_counter()
+        for i, src in enumerate(sources):
+            handles.append(fleet.submit(src, tenant=f"t{i % tenants}"))
+        reports = [h.result(timeout=600) for h in handles]
+        wall = time.perf_counter() - t0
+    fleet.close()
+    p50, p99 = common.latency_percentiles_ms(
+        [h._attempts[-1][1].latency_s for h in handles])
+    reads = sum(r.total_reads for r in reports)
+    return {"reads_per_s": reads / max(wall, 1e-9),
+            "p50_ms": p50, "p99_ms": p99}
+
+
+def _swap_cell(registry: RefDBRegistry, sources, delta_genomes,
+               *, hosts: int) -> dict:
+    """Fleet-wide two-phase swap under traffic; time flip + retire."""
+    fleet = _fleet(registry, hosts=hosts, tenants=1, queue=len(sources))
+    old = registry.current("bench").version
+    with fleet:
+        handles = [fleet.submit(s, tenant="t0") for s in sources]
+        snap = registry.apply_delta("bench", add=delta_genomes)
+        t0 = time.perf_counter()
+        fleet.fleet_swap("bench", version=snap.version)
+        flip_s = time.perf_counter() - t0     # all hosts now admit new
+        fleet.wait_retired("bench", old, timeout=600)
+        retire_s = time.perf_counter() - t0 - flip_s
+        for h in handles:
+            h.result(timeout=600)
+        assert old not in registry.pins("bench")
+    fleet.close()
+    return {"flip_ms": flip_s * 1e3, "retire_ms": max(retire_s, 0) * 1e3}
+
+
+def _kill_cell(registry: RefDBRegistry, sources, *, hosts: int) -> dict:
+    """Kill the busiest host mid-run; everything must still complete."""
+    fleet = _fleet(registry, hosts=hosts, tenants=1, queue=len(sources))
+    with fleet:
+        t0 = time.perf_counter()
+        handles = [fleet.submit(s, tenant="t0") for s in sources]
+        live: dict[str, int] = {}
+        for h in handles:
+            if not h.done:
+                live[h.host] = live.get(h.host, 0) + 1
+        victim = max(live or {fleet.healthy_hosts()[0]: 0}, key=live.get) \
+            if live else fleet.healthy_hosts()[0]
+        rerouted = fleet.kill_host(victim)
+        for h in handles:
+            h.result(timeout=600)
+        wall = time.perf_counter() - t0
+    assert fleet.host(victim).state is HostState.DOWN
+    fleet.close()
+    return {"rerouted": len(rerouted), "wall_ms": wall * 1e3}
+
+
+def run(community=None, emit=common.emit, *, smoke: bool = False) -> dict:
+    if smoke:
+        spec = synth.CommunitySpec(num_species=4, genome_len=8_000, seed=13)
+        genomes = synth.make_reference_genomes(spec)
+        ab = np.full(4, 0.25)
+        toks, lens, _ = synth.sample_reads(genomes, ab, 256, spec)
+        config = ProfilerConfig(space=SMOKE_SPACE, window=1024,
+                                batch_size=32)
+        host_cells = [1, 3]
+        num_requests = 8
+        tenants = 2
+    else:
+        community = community or common.afs_small()
+        genomes = community.genomes
+        toks, lens, *_ = community.samples["kylo"]
+        config = common.BENCH_CONFIG
+        host_cells = [1, 2, 3]
+        num_requests = 16
+        tenants = 2
+
+    registry = RefDBRegistry(root=None)
+    registry.create("bench", genomes, config)
+    sources = [ArraySource(toks[i::num_requests], lens[i::num_requests])
+               for i in range(num_requests)]
+    rng = np.random.default_rng(14)
+    glen = len(next(iter(genomes.values())))
+    delta = {"sp_delta": rng.integers(0, 4, glen, dtype=np.int32)}
+
+    out: dict = {}
+    for hosts in host_cells:
+        cell = _host_cell(registry, sources, hosts=hosts, tenants=tenants)
+        out[hosts] = cell
+        tag = f"fleet.{config.backend}.h{hosts}"
+        emit(f"{tag}.reads_per_s", cell["reads_per_s"],
+             f"{num_requests}req/{tenants}tenant")
+        emit(f"{tag}.p50_ms", cell["p50_ms"], f"p99={cell['p99_ms']:.1f}ms")
+
+    kill = _kill_cell(registry, sources, hosts=max(host_cells))
+    out["kill"] = kill
+    emit("fleet.kill.rerouted", kill["rerouted"],
+         "requests failed over to surviving hosts")
+    emit("fleet.kill.wall_ms", kill["wall_ms"],
+         "all requests still completed")
+
+    swap = _swap_cell(registry, sources, delta, hosts=max(host_cells))
+    out["swap"] = swap
+    emit("fleet.swap.flip_ms", swap["flip_ms"],
+         "prepare (all pinned) -> all routers flipped")
+    emit("fleet.swap.retire_ms", swap["retire_ms"],
+         "old version drained fleet-wide (gc-eligible)")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny community + reduced sweep (CI-sized)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

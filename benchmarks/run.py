@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV (see benchmarks.common.emit).
   serve_perf  §1 system   ProfilingService reads/s + p50/p99 request latency
   tenant_serve §1 system  registry+router fleet reads/s + delta hot-swap
                           publish/drain latency
+  fleet_serve  §1 system  multi-host aggregate reads/s vs host count +
+                          fleet-swap flip/retire + host-kill failover
   shard_scaling  §scale   sharded-AM reads/s + RefDB bytes/device vs shards
                           (grow the sweep with
                           XLA_FLAGS=--xla_force_host_platform_device_count=N)
@@ -28,8 +30,8 @@ from __future__ import annotations
 import sys
 
 from benchmarks import (accel_sim, accuracy, acc_perf, build_time, common,
-                        energy, memory, query_perf, roofline, serve_perf,
-                        shard_scaling, tenant_serve)
+                        energy, fleet_serve, memory, query_perf, roofline,
+                        serve_perf, shard_scaling, tenant_serve)
 
 
 def main() -> None:
@@ -63,6 +65,8 @@ def main() -> None:
         serve_perf.run(community)
     if want("tenant_serve"):
         tenant_serve.run(community)
+    if want("fleet_serve"):
+        fleet_serve.run(community)
     if want("shard_scaling"):
         shard_scaling.run(community)
     if want("roofline"):

@@ -35,6 +35,14 @@ The gate requires this ratio to stay within 2% of 1.0 — the
 instrumentation's zero-cost-when-disabled contract, measured, with the
 enabled mode held to the same bar.
 
+``fleet`` routes the same sample through a 1-host and a 3-host
+:class:`~repro.serve.fleet.FleetController` over one in-memory source
+registry.  ``relative_aggregate`` is the 3-host aggregate reads/s over
+the 1-host figure (runner speed cancels); the gate flags a drop beyond
+``--fleet-tolerance`` (coordination overhead regression), and
+``fleet.bit_exact`` — every fleet-routed report bit-identical to a
+sequential run — failing is a hard error at any tolerance.
+
 Refresh the baseline after an intentional perf change with:
 
     PYTHONPATH=src python -m benchmarks.run --smoke
@@ -46,6 +54,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import time
 
 import dataclasses
 
@@ -55,6 +64,7 @@ from benchmarks import common
 from repro import obs
 from repro.core import HDSpace
 from repro.pipeline import ArraySource, ProfilerConfig, ProfilingSession
+from repro.serve import FleetController, RefDBRegistry
 
 SCHEMA = 1
 
@@ -167,6 +177,7 @@ def run_smoke(out_path: str | pathlib.Path = "BENCH_smoke.json",
 
     observability = observability_overhead(db, source, num_reads,
                                            rounds=rounds, emit=emit)
+    fleet = fleet_smoke(community, emit=emit)
 
     bit_exact = all(r == reports["reference"] for r in reports.values())
     payload = {
@@ -177,6 +188,7 @@ def run_smoke(out_path: str | pathlib.Path = "BENCH_smoke.json",
         "num_reads": num_reads,
         "bit_exact": bit_exact,
         "observability": observability,
+        "fleet": fleet,
         "backends": results,
     }
     out = pathlib.Path(out_path)
@@ -229,6 +241,54 @@ def observability_overhead(db, source, num_reads: int, *, rounds: int = 5,
         "enabled_over_disabled": ratio,
         "bit_exact": rep_on == rep_off,
     }
+
+
+def fleet_smoke(community, *, num_requests: int = 8,
+                emit=common.emit) -> dict:
+    """Route the smoke sample through a 1-host and a 3-host fleet.
+
+    One in-memory source registry, two tenants, ``num_requests`` request
+    slices.  Reports the 3-host aggregate throughput relative to the
+    1-host cell (coordination overhead, runner speed cancelled) and
+    whether every fleet-routed report came back bit-identical to a
+    sequential profile of the same slice — the determinism contract
+    that makes replicated serving and failover safe.
+    """
+    toks, lens, *_ = community.samples["kylo"]
+    sources = [ArraySource(toks[i::num_requests], lens[i::num_requests])
+               for i in range(num_requests)]
+    registry = RefDBRegistry(root=None)
+    snap = registry.create("smoke", community.genomes, SMOKE_CONFIG)
+    seq = ProfilingSession(SMOKE_CONFIG)
+    seq.adopt_refdb(snap.db)
+    expected = [seq.profile(s).to_json() for s in sources]
+
+    out: dict = {"bit_exact": True}
+    for hosts in (1, 3):
+        fleet = FleetController(registry, hosts=hosts)
+        for t in range(2):
+            fleet.add_tenant(f"t{t}", "smoke", max_active=8,
+                             max_queue=num_requests)
+        with fleet:
+            for replica in fleet.hosts():      # warmup: compile per host
+                replica.router.submit(sources[0], tenant="t0").result(
+                    timeout=600)
+            t0 = time.perf_counter()
+            handles = [fleet.submit(s, tenant=f"t{i % 2}")
+                       for i, s in enumerate(sources)]
+            fleet_reports = [h.result(timeout=600) for h in handles]
+            wall = time.perf_counter() - t0
+        fleet.close()
+        out["bit_exact"] &= all(
+            r.to_json() == e for r, e in zip(fleet_reports, expected))
+        reads = sum(r.total_reads for r in fleet_reports)
+        out[f"h{hosts}"] = {"reads_per_s": reads / max(wall, 1e-9)}
+    out["relative_aggregate"] = (out["h3"]["reads_per_s"]
+                                 / out["h1"]["reads_per_s"])
+    emit("smoke.fleet.relative_aggregate", 0.0,
+         f"{out['relative_aggregate']:.3f}")
+    emit("smoke.fleet.bit_exact", 0.0, str(out["bit_exact"]))
+    return out
 
 
 def main(argv: list[str] | None = None) -> None:

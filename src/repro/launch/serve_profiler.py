@@ -141,12 +141,17 @@ def drive_fleet(*, config: ProfilerConfig, num_species: int, genome_len: int,
                 workers: int = 1, max_active: int = 4, max_queue: int = 16,
                 check: bool = False, store: str | None = None,
                 json_dir: str | None = None,
-                gate_last_on_delta: bool = False) -> dict:
+                gate_last_on_delta: bool = False,
+                gc_keep_last: int | None = None) -> dict:
     """Multi-tenant fleet experiment with a mid-traffic delta hot-swap.
 
     ``gate_last_on_delta`` holds each tenant's final request until the
     delta is published, guaranteeing the run exercises admissions on
     both sides of the swap (the CI smoke asserts this).
+
+    ``gc_keep_last`` runs a post-drain registry sweep keeping that many
+    newest versions — previewed with ``dry_run=True`` first (the safe
+    operator flow), then applied for real; both land in the summary.
     """
     spec = synth.CommunitySpec(num_species=num_species,
                                genome_len=genome_len, seed=7)
@@ -314,6 +319,25 @@ def drive_fleet(*, config: ProfilerConfig, num_species: int, genome_len: int,
         print(f"check OK: all {total_requests} reports bit-identical to "
               f"sequential runs on their admitted versions "
               f"({pre} on v1, {total_requests - pre} on v{snap2.version})")
+
+    if gc_keep_last is not None:
+        # Operator flow: dry-run preview first, then the real sweep —
+        # identical victim sets by construction (nothing published in
+        # between), asserted here so the preview stays trustworthy.
+        # Runs last: --check still needs the old versions' snapshots.
+        preview = registry.gc("food", keep_last=gc_keep_last, dry_run=True)
+        print(f"gc preview (keep_last={gc_keep_last}): would collect "
+              f"versions {[v for _, v in preview.collected]} "
+              f"({preview.reclaimed_bytes} bytes)")
+        swept = registry.gc("food", keep_last=gc_keep_last)
+        assert swept.collected == preview.collected
+        print(f"gc: collected versions {[v for _, v in swept.collected]} "
+              f"({swept.reclaimed_bytes} bytes reclaimed)")
+        summary["gc"] = {
+            "keep_last": gc_keep_last,
+            "collected": [list(c) for c in swept.collected],
+            "reclaimed_bytes": swept.reclaimed_bytes,
+        }
     return summary
 
 
@@ -353,6 +377,10 @@ def main() -> None:
                     choices=available_backends())
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="registry root (fleet mode); default: a temp dir")
+    ap.add_argument("--gc-keep-last", type=int, default=None, metavar="N",
+                    help="after the drain, sweep the registry keeping the"
+                         " N newest versions (dry-run preview first, then"
+                         " the real collection; fleet mode only)")
     ap.add_argument("--check", action="store_true",
                     help="verify each report against a sequential run on"
                          " its admitted database version; exit non-zero"
@@ -393,7 +421,8 @@ def main() -> None:
                     reads_per_request=32, rates_hz=[0.0] * args.tenants,
                     workers=args.workers, max_active=1, max_queue=1,
                     check=True, store=args.store, json_dir=args.json,
-                    gate_last_on_delta=True)
+                    gate_last_on_delta=True,
+                    gc_keep_last=args.gc_keep_last)
             else:
                 summary = drive(
                     config=config, num_species=4, genome_len=8_000,
@@ -414,7 +443,8 @@ def main() -> None:
                 reads_per_request=args.reads_per_request,
                 rates_hz=_parse_rates(args.rate, args.tenants),
                 workers=args.workers, max_active=args.max_active,
-                check=args.check, store=args.store, json_dir=args.json)
+                check=args.check, store=args.store, json_dir=args.json,
+                gc_keep_last=args.gc_keep_last)
         else:
             summary = drive(
                 config=config, num_species=args.species,

@@ -386,6 +386,57 @@ class MetricsRegistry:
         kw.setdefault("sort_keys", True)
         return json.dumps(self.snapshot(), **kw)
 
+    # -- cross-process / cross-host aggregation ------------------------------
+    def merge_from(self, other: "MetricsRegistry", **labels: str) -> None:
+        """Fold every series of ``other`` into this registry.
+
+        ``labels`` are added to each incoming series' label set — the
+        fleet controller folds per-host registries with ``host=<id>`` so
+        one merged snapshot keeps the per-host breakdown.  Counter
+        values add, gauges set (distinct label sets never collide), and
+        histogram states fold bucket-by-bucket via
+        :meth:`HistogramState.merge`; instruments are get-or-create by
+        name, so repeated merges from the same source double-count —
+        merge into a fresh registry per snapshot.
+        """
+        for inst in other.instruments():
+            if isinstance(inst, Histogram):
+                mine = self.histogram(inst.name, inst.help, inst.unit,
+                                      inst.buckets)
+            elif isinstance(inst, Counter):
+                mine = self.counter(inst.name, inst.help, inst.unit)
+            elif isinstance(inst, Gauge):
+                mine = self.gauge(inst.name, inst.help, inst.unit)
+            else:
+                continue
+            if not mine.enabled:           # merging into a NullRegistry
+                return
+            for key, state in sorted(inst.series().items()):
+                merged = {**dict(key), **{str(k): str(v)
+                                          for k, v in labels.items()}}
+                if isinstance(state, HistogramState):
+                    with mine._lock:
+                        mine._state(merged).merge(state)
+                elif isinstance(inst, Counter):
+                    mine.inc(state.value, **merged)
+                else:
+                    mine.set(state.value, **merged)
+
+    @classmethod
+    def merged(cls, parts: Mapping[str, "MetricsRegistry"], *,
+               label: str = "host") -> "MetricsRegistry":
+        """A fresh registry folding ``parts``, each keyed by a ``label``.
+
+        The fleet-snapshot constructor: ``merged({"host0": reg0, ...})``
+        returns one registry whose every series carries a ``host`` label
+        naming the registry it came from, with same-name histograms
+        sharing buckets merged exactly (per-bucket counts add).
+        """
+        out = cls()
+        for part_key in sorted(parts):
+            out.merge_from(parts[part_key], **{label: part_key})
+        return out
+
     def to_prometheus(self) -> str:
         """Prometheus text exposition format (0.0.4) of every series."""
         lines: list[str] = []

@@ -7,7 +7,11 @@ sequential runs — on top of the generic :class:`FixedShapeScheduler`
 (:mod:`repro.serve.registry`) owns named databases with versioned,
 delta-updatable snapshots, and :class:`TenantRouter`
 (:mod:`repro.serve.router`) maps tenants to databases with per-tenant
-quotas and zero-downtime hot-swap.  The LM prefill/decode modules
+quotas and zero-downtime hot-swap.  :mod:`repro.serve.fleet` replicates
+that whole stack across simulated hosts behind one
+:class:`FleetController` — pull-based version replication, load-aware
+tenant routing with mid-flight failover, and fleet-coordinated
+two-phase hot-swaps.  The LM prefill/decode modules
 (:mod:`repro.serve.serve_step`, :mod:`repro.serve.batching`) are the
 seed repo's stack, kept working as legacy entry points.
 """
@@ -17,12 +21,17 @@ from repro.serve.profiler_service import (ProfileHandle, ProfileRequest,
                                           ProfilingService, RequestState,
                                           ServiceOverloaded)
 from repro.serve.registry import RefDBRegistry, RefDBSnapshot
-from repro.serve.router import RoutedHandle, TenantRouter, TenantSpec
+from repro.serve.router import (RoutedHandle, RouterClosed, TenantRouter,
+                                TenantSpec)
+from repro.serve.fleet import (FleetController, FleetHandle, HostDown,
+                               HostReplica, HostState, NoHealthyHosts)
 
 __all__ = [
     "Cohort", "FixedShapeScheduler", "pow2_buckets",
     "ProfileHandle", "ProfileRequest", "ProfilingService", "RequestState",
     "ServiceOverloaded",
     "RefDBRegistry", "RefDBSnapshot",
-    "RoutedHandle", "TenantRouter", "TenantSpec",
+    "RoutedHandle", "RouterClosed", "TenantRouter", "TenantSpec",
+    "FleetController", "FleetHandle", "HostDown", "HostReplica",
+    "HostState", "NoHealthyHosts",
 ]

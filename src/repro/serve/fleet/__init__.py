@@ -1,0 +1,20 @@
+"""Multi-host fleet serving: replicated hosts behind one controller.
+
+Each :class:`HostReplica` is a complete copy of the single-host stack
+(mirror registry + tenant router + per-host metrics); the
+:class:`FleetController` replicates database versions to every host,
+routes by tenant affinity + least-outstanding-reads, fails requests
+over to surviving replicas when a host dies mid-flight (bit-exactly —
+reports are deterministic), and hot-swaps the whole fleet in two phases
+with source-registry pins guaranteeing the old version only becomes
+gc-eligible after every host drained.  See ``docs/FLEET.md``.
+"""
+
+from repro.serve.fleet.controller import (FleetController, FleetHandle,
+                                          NoHealthyHosts)
+from repro.serve.fleet.replica import HostDown, HostReplica, HostState
+
+__all__ = [
+    "FleetController", "FleetHandle", "NoHealthyHosts",
+    "HostDown", "HostReplica", "HostState",
+]

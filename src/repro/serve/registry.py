@@ -84,10 +84,17 @@ class RefDBSnapshot:
 
 @dataclasses.dataclass(frozen=True)
 class GCResult:
-    """What one :meth:`RefDBRegistry.gc` sweep retired."""
+    """What one :meth:`RefDBRegistry.gc` sweep retired (or would retire).
+
+    With ``dry_run=True`` the sweep is a pure report: ``collected`` are
+    the victims an identical real sweep would take right now and
+    ``reclaimed_bytes`` what their on-disk files measure — nothing was
+    deleted.
+    """
 
     collected: tuple[tuple[str, int], ...]   # (database, version) pairs
     reclaimed_bytes: int                     # on-disk bytes unlinked
+    dry_run: bool = False
 
 
 class _Entry:
@@ -128,6 +135,10 @@ class RefDBRegistry:
         self._m_publishes = self._obs.counter(
             "refdb_publishes_total",
             "Snapshot versions published, by database.")
+        self._m_installs = self._obs.counter(
+            "refdb_installs_total",
+            "Snapshot versions installed from another registry "
+            "(replication), by database.")
         self._m_build_time = self._obs.histogram(
             "refdb_build_seconds",
             "Wall time of a full build or delta, publish included.",
@@ -227,6 +238,53 @@ class RefDBRegistry:
         self._notify(snap)
         return snap
 
+    # -- replication --------------------------------------------------------
+    def install(self, name: str, snapshot: RefDBSnapshot, *,
+                config: ProfilerConfig) -> RefDBSnapshot:
+        """Install an already-built snapshot from another registry.
+
+        The replication seam: a fleet host's mirror registry pulls
+        published versions from the source-of-truth registry without
+        re-encoding anything — the immutable ``RefDB`` object is shared.
+        Installs keep the *source's* version number (so fleet-wide
+        version talk is unambiguous) and tolerate gaps: a host that was
+        down across publishes installs whatever the source currently
+        retains and the chain simply skips the versions it missed.
+        Idempotent per version; never moves the current pointer
+        backwards; in-memory only (``path=None`` — durability lives at
+        the source).  ``config`` must agree with the entry's pinned
+        content fields (same ``refdb_fingerprint``), or the mirror would
+        serve prototypes that mean something else than their name says.
+        """
+        if not _NAME_RE.match(name):
+            raise ValueError(f"invalid database name {name!r}")
+        with self._lock:
+            entry = self._entries.get(name)
+            if entry is None:
+                entry = _Entry(name, config)
+                self._entries[name] = entry
+        if entry.config.refdb_fingerprint() != config.refdb_fingerprint():
+            raise ValueError(
+                f"database {name!r}: install config disagrees with the "
+                f"pinned content fields (fingerprint mismatch)")
+        with entry.mutate:
+            with self._lock:
+                existing = entry.snapshots.get(snapshot.version)
+                if existing is not None:
+                    return existing
+                local = RefDBSnapshot(
+                    database=name, version=snapshot.version, db=snapshot.db,
+                    parent_version=snapshot.parent_version,
+                    delta=snapshot.delta, path=None,
+                    created_at=time.time())
+                entry.snapshots[local.version] = local
+                if local.version > entry.current_version:
+                    entry.current_version = local.version
+        if self._obs.enabled:
+            self._m_installs.inc(1, database=name)
+            self._m_live_version.set(entry.current_version, database=name)
+        return local
+
     # -- reads --------------------------------------------------------------
     def databases(self) -> tuple[str, ...]:
         with self._lock:
@@ -294,7 +352,8 @@ class RefDBRegistry:
             return dict(entry.pins)
 
     def gc(self, name: str | None = None, *, keep_last: int = 2,
-           max_age_s: float | None = None) -> "GCResult":
+           max_age_s: float | None = None, dry_run: bool = False
+           ) -> "GCResult":
         """Retire old snapshot versions no live service references.
 
         A version is collected only when it is **all** of: not the
@@ -310,6 +369,9 @@ class RefDBRegistry:
           keep_last: hard floor of newest versions always retained.
           max_age_s: additionally require a collected version to be at
             least this old (seconds since publish).
+          dry_run: report the victims and reclaimable bytes an identical
+            real sweep would take, deleting nothing — the safe preview
+            operators (and the fleet retire phase) run first.
 
         Returns:
           :class:`GCResult` with the collected ``(database, version)``
@@ -325,17 +387,18 @@ class RefDBRegistry:
         for dbname in names:
             entry = self._entry(dbname)
             with entry.mutate:      # serialize against concurrent publish
-                got, nbytes = self._gc_one(entry, keep_last, max_age_s, now)
+                got, nbytes = self._gc_one(entry, keep_last, max_age_s, now,
+                                           dry_run)
             collected.extend((dbname, v) for v in got)
             reclaimed += nbytes
-        if self._obs.enabled and collected:
+        if self._obs.enabled and collected and not dry_run:
             self._m_gc_versions.inc(len(collected))
             self._m_gc_bytes.inc(reclaimed)
         return GCResult(collected=tuple(collected),
-                        reclaimed_bytes=reclaimed)
+                        reclaimed_bytes=reclaimed, dry_run=dry_run)
 
     def _gc_one(self, entry: _Entry, keep_last: int,
-                max_age_s: float | None, now: float
+                max_age_s: float | None, now: float, dry_run: bool
                 ) -> tuple[list[int], int]:
         """Collect one database's eligible versions; runs under
         ``entry.mutate``."""
@@ -362,8 +425,9 @@ class RefDBRegistry:
                     if now - born < max_age_s:
                         continue
                 victims.append(v)
-            for v in victims:
-                entry.snapshots.pop(v, None)
+            if not dry_run:
+                for v in victims:
+                    entry.snapshots.pop(v, None)
         nbytes = 0
         for v in victims:
             p = disk.get(v)
@@ -371,7 +435,8 @@ class RefDBRegistry:
                 continue
             try:
                 nbytes += p.stat().st_size
-                p.unlink()
+                if not dry_run:
+                    p.unlink()
             except OSError:
                 pass                # already gone: nothing reclaimed
         return victims, nbytes

@@ -65,6 +65,18 @@ from repro.serve.registry import RefDBRegistry, RefDBSnapshot
 _EXEC_FIELDS = ("backend", "backend_options", "batch_size")
 
 
+class RouterClosed(RuntimeError):
+    """The router is stopping or stopped: no new admissions.
+
+    The :meth:`TenantRouter.stop` / :meth:`TenantRouter.submit` race
+    contract: a submit that wins the race is admitted and — with
+    ``drain=True`` — pumped to completion before the workers exit; a
+    submit that loses raises this, immediately.  A handle is never left
+    hanging with no pump behind it.  :meth:`TenantRouter.start` reopens
+    admissions.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class TenantSpec:
     """One tenant's routing + admission-quota contract."""
@@ -201,6 +213,7 @@ class TenantRouter:
         self._ids = itertools.count()
         self._workers: list[threading.Thread] = []
         self._stopping = False
+        self._closed = False
         self._wake = threading.Condition(self._lock)
         self.swaps = 0
         self.retired: list[tuple[str, int]] = []    # (database, version)
@@ -297,6 +310,15 @@ class TenantRouter:
                     f"unknown tenant {tenant!r}; registered: "
                     f"{sorted(self._tenants)}") from None
             while True:
+                # Checked on entry AND after every quota-wait wakeup: a
+                # stop() racing this submit closes admissions under the
+                # same lock, so the submit either got in before (and
+                # will be drained) or raises here — it can never slip a
+                # request behind the exiting pump workers.
+                if self._closed:
+                    raise RouterClosed(
+                        f"router is stopped; submit for tenant {tenant!r} "
+                        f"rejected (start() reopens admissions)")
                 live = self._prune_locked(tenant)
                 if len(live) < spec.max_active + spec.max_queue:
                     break
@@ -420,6 +442,12 @@ class TenantRouter:
         return all(vs.service.idle for vs in self._services())
 
     # -- workers ------------------------------------------------------------
+    @property
+    def running(self) -> bool:
+        """True while pump workers are live (start'ed, not yet stop'ed)."""
+        with self._lock:
+            return bool(self._workers)
+
     def start(self, workers: int = 1) -> "TenantRouter":
         """Start ``workers`` pump threads (distinct services in parallel)."""
         if workers < 1:
@@ -428,6 +456,7 @@ class TenantRouter:
             if self._workers:
                 raise RuntimeError("router already started")
             self._stopping = False
+            self._closed = False
             self._workers = [
                 threading.Thread(target=self._pump, daemon=True,
                                  name=f"tenant-router-{i}")
@@ -438,13 +467,21 @@ class TenantRouter:
 
     def stop(self, *, drain: bool = True, timeout: float | None = None
              ) -> None:
-        """Stop the pump threads; ``drain=True`` finishes in-flight work."""
+        """Stop the pump threads; ``drain=True`` finishes in-flight work.
+
+        Closes admissions first (under the router lock), so a submit
+        racing this call either completed before the close — and with
+        ``drain=True`` its request is pumped to a terminal state before
+        the workers exit — or raises :class:`RouterClosed`.  Either way
+        no handle is left queued with nothing pumping it.
+        """
         with self._wake:
-            if not self._workers:
-                return
+            self._closed = True
             if not drain:
                 for vs in self._services():
                     vs.service.cancel_all()
+            if not self._workers:
+                return
             self._stopping = True
             self._wake.notify_all()
         for t in self._workers:
@@ -469,7 +506,11 @@ class TenantRouter:
             did = self.step()
             with self._wake:
                 if not did:
-                    if self._stopping:
+                    # Exit only when stopping AND truly idle: a submit
+                    # that won the stop race may have landed between the
+                    # step above and this check — its request still gets
+                    # drained before the worker leaves.
+                    if self._stopping and self.idle:
                         return
                     self._wake.wait(0.02)
 

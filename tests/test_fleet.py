@@ -1,0 +1,285 @@
+"""Fleet serving: replication, routing, failover, fleet-wide swaps.
+
+Acceptance contract (ISSUE 8): a 3-host fleet survives a host killed
+mid-request — affected requests are rerouted to surviving replicas and
+their reports are bit-identical to a sequential run — and a fleet-wide
+hot-swap is two-phase: no host serves the new version before every host
+has it pinned (prepare), and the old version only becomes gc-eligible
+at the source after every host has drained it (retire).  Both asserted
+on the ``reference`` and ``pallas_fused`` backends.  Plus: tenant
+affinity + least-load routing, resumable replication across downtime
+and source gc, non-replayable-source failure semantics, and the merged
+fleet metrics snapshot (per-host labels + fleet gauges).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.hd_space import HDSpace
+from repro.genomics import synth
+from repro.pipeline import (ArraySource, IterableSource, ProfilerConfig,
+                            ProfilingSession, SyntheticSource)
+from repro.serve import (FleetController, HostDown, HostState,
+                         NoHealthyHosts, RefDBRegistry)
+
+SP = HDSpace(dim=512, ngram=5, z_threshold=3.0)
+SPEC = synth.CommunitySpec(num_species=4, genome_len=6_000, seed=11)
+
+
+def _config(**kw):
+    kw.setdefault("space", SP)
+    kw.setdefault("window", 1024)
+    kw.setdefault("batch_size", 16)
+    return ProfilerConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def sample():
+    return SyntheticSource(SPEC, num_reads=144, present=[0, 2])
+
+
+@pytest.fixture(scope="module")
+def extra():
+    rng = np.random.default_rng(99)
+    return {"sp_new": rng.integers(0, 4, 6_000, dtype=np.int32)}
+
+
+def _slices(sample, n):
+    return [ArraySource(sample.tokens[i::n], sample.lengths[i::n])
+            for i in range(n)]
+
+
+def _registry(sample, cfg):
+    reg = RefDBRegistry(root=None)
+    reg.create("food", sample.genomes, cfg)
+    return reg
+
+
+def _sequential(reg, cfg, version):
+    s = ProfilingSession(cfg)
+    s.adopt_refdb(reg.snapshot("food", version).db)
+    return s
+
+
+# -- routing -----------------------------------------------------------------
+
+def test_routing_spreads_and_reports_bit_exact(sample):
+    cfg = _config(backend="reference")
+    reg = _registry(sample, cfg)
+    fleet = FleetController(reg, hosts=3)
+    fleet.add_tenant("a", "food", max_active=1, max_queue=8)
+    fleet.add_tenant("b", "food", max_active=1, max_queue=8)
+    srcs = _slices(sample, 6)
+    with fleet:
+        handles = [fleet.submit(s, tenant="ab"[i % 2]) for i, s in
+                   enumerate(srcs)]
+        reports = [h.result(timeout=300) for h in handles]
+    fleet.close()
+    seq = _sequential(reg, cfg, 1)
+    for h, src, rep in zip(handles, srcs, reports):
+        assert h.version == 1
+        assert rep.to_json() == seq.profile(src).to_json()
+    # least-outstanding routing spreads load past the affinity home
+    assert len({h.host for h in handles}) > 1
+
+
+def test_tenant_affinity_on_idle_fleet(sample):
+    """With no load anywhere, a tenant always lands on its ring home."""
+    cfg = _config(backend="reference")
+    reg = _registry(sample, cfg)
+    fleet = FleetController(reg, hosts=3)
+    fleet.add_tenant("acme", "food", max_active=4, max_queue=16)
+    srcs = _slices(sample, 4)
+    homes = set()
+    with fleet:
+        for src in srcs:
+            h = fleet.submit(src, tenant="acme")
+            h.result(timeout=300)       # fleet idle again before the next
+            homes.add(h.host)
+    fleet.close()
+    assert len(homes) == 1
+
+
+def test_unknown_tenant_and_no_healthy_hosts(sample):
+    cfg = _config(backend="reference")
+    reg = _registry(sample, cfg)
+    fleet = FleetController(reg, hosts=2)
+    fleet.add_tenant("a", "food")
+    src = _slices(sample, 1)[0]
+    with pytest.raises(KeyError, match="nope"):
+        fleet.submit(src, tenant="nope")
+    fleet.kill_host("host0")
+    fleet.kill_host("host1")
+    with pytest.raises(NoHealthyHosts):
+        fleet.submit(src, tenant="a")
+    fleet.close()
+
+
+# -- acceptance: mid-flight host kill, rerouted and bit-exact ----------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas_fused"])
+def test_kill_host_reroutes_bit_exact(sample, backend):
+    """Requests on the killed host fail over to survivors; every report
+    (rerouted ones included) is bit-identical to a sequential run.
+
+    Submitted before the pumps start, so the victim's requests are
+    provably in flight (queued, not done) when the host dies."""
+    cfg = _config(backend=backend)
+    reg = _registry(sample, cfg)
+    fleet = FleetController(reg, hosts=3)
+    fleet.add_tenant("acme", "food", max_active=2, max_queue=16)
+    srcs = _slices(sample, 6)
+    handles = [fleet.submit(s, tenant="acme") for s in srcs]
+    by_host: dict[str, int] = {}
+    for h in handles:
+        by_host[h.host] = by_host.get(h.host, 0) + 1
+    victim = max(by_host, key=by_host.get)
+    moved = fleet.kill_host(victim)
+    assert moved                       # the busiest host had live work
+    with fleet:                        # survivors pump; victim stays down
+        reports = [h.result(timeout=300) for h in handles]
+    seq = _sequential(reg, cfg, 1)
+    for h, src, rep in zip(handles, srcs, reports):
+        assert rep.to_json() == seq.profile(src).to_json()
+        assert h.host != victim        # nothing still claims the dead host
+    rerouted = [h for h in handles if h.rerouted]
+    assert {h.request_id for h in rerouted} == set(moved)
+    assert all(len(h.attempts) == 2 for h in rerouted)
+    assert fleet.host(victim).state is HostState.DOWN
+    fleet.close()
+
+
+def test_kill_host_nonreplayable_source_fails_clean(sample):
+    """An IterableSource cannot be re-submitted: its handle raises
+    HostDown instead of silently returning a partial report."""
+    cfg = _config(backend="reference")
+    reg = _registry(sample, cfg)
+    fleet = FleetController(reg, hosts=2)
+    fleet.add_tenant("acme", "food", max_active=2, max_queue=16)
+    stream = IterableSource(
+        iter([(sample.tokens[:16], sample.lengths[:16])]))
+    h = fleet.submit(stream, tenant="acme")
+    fleet.kill_host(h.host)
+    with pytest.raises(HostDown, match="not replayable"):
+        h.result(timeout=300)
+    fleet.close()
+
+
+# -- acceptance: fleet-wide two-phase swap -----------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas_fused"])
+def test_fleet_swap_two_phase_invariants(sample, extra, backend):
+    """No host serves v2 before every host has it pinned; v1 is only
+    gc-eligible at the source after every host drained it."""
+    cfg = _config(backend=backend)
+    reg = _registry(sample, cfg)
+    fleet = FleetController(reg, hosts=3)
+    fleet.add_tenant("acme", "food", max_active=4, max_queue=16)
+    srcs = _slices(sample, 4)
+    phases = []
+
+    def on_phase(phase):
+        phases.append(phase)
+        if phase != "prepared":
+            return
+        for replica in fleet.hosts():
+            # prepared: v2 resident + pinned on every mirror...
+            assert 2 in replica.registry.versions("food")
+            assert replica.registry.pins("food").get(2, 0) >= 1
+            # ...but every router still admits against v1
+            assert replica.router.serving_version("food") == 1
+
+    with fleet:
+        pre = [fleet.submit(s, tenant="acme") for s in srcs[:2]]
+        snap2 = reg.apply_delta("food", add=extra)
+        fleet.fleet_swap("food", version=snap2.version, on_phase=on_phase)
+        for replica in fleet.hosts():
+            assert replica.router.serving_version("food") == 2
+        post = [fleet.submit(s, tenant="acme") for s in srcs[2:]]
+        for h in pre + post:
+            h.result(timeout=300)
+        # v1 still source-pinned until every host reports drained; a gc
+        # sweep right now must refuse it no matter the keep policy
+        assert reg.gc("food", keep_last=1).collected == ()
+        fleet.wait_retired("food", 1, timeout=300)
+    assert phases == ["prepared", "flipped"]
+    assert 1 not in reg.pins("food")
+    seq1, seq2 = _sequential(reg, cfg, 1), _sequential(reg, cfg, 2)
+    swept = reg.gc("food", keep_last=1)
+    assert swept.collected == (("food", 1),)
+    for h, src in zip(pre, srcs[:2]):
+        assert h.version == 1
+        assert h.result(timeout=0).to_json() == seq1.profile(src).to_json()
+    for h, src in zip(post, srcs[2:]):
+        assert h.version == 2
+        assert h.result(timeout=0).to_json() == seq2.profile(src).to_json()
+    fleet.close()
+
+
+# -- replication: resumable across downtime and source gc --------------------
+
+def test_down_host_resyncs_on_revive_past_gcd_versions(sample, extra):
+    """A host that missed a publish (and whose missed version the source
+    then gc'd) revives straight onto the fleet's serving version."""
+    cfg = _config(backend="reference")
+    reg = _registry(sample, cfg)
+    fleet = FleetController(reg, hosts=3)
+    fleet.kill_host("host2")        # down before it ever mirrors anything
+    fleet.add_tenant("acme", "food", max_active=4, max_queue=16)
+    with fleet:
+        snap2 = reg.apply_delta("food", add=extra)
+        fleet.fleet_swap("food", version=snap2.version)  # 2 live hosts
+        fleet.wait_retired("food", 1, timeout=300)
+        assert reg.gc("food", keep_last=1).collected == (("food", 1),)
+        fleet.revive_host("host2")
+        replica = fleet.host("host2")
+        assert replica.state is HostState.HEALTHY
+        # the mirror chain skips gc'd v1: only v2 was left to pull
+        assert replica.registry.versions("food") == (2,)
+        assert replica.router.serving_version("food") == 2
+        assert replica.lag("food") == 0
+        src = _slices(sample, 1)[0]
+        h = replica.submit(src, tenant="acme")
+        fleet.run_until_idle()
+        assert h.result(timeout=300).to_json() == \
+            _sequential(reg, cfg, 2).profile(src).to_json()
+    fleet.close()
+
+
+def test_install_is_idempotent_and_checks_fingerprint(sample):
+    cfg = _config(backend="reference")
+    reg = _registry(sample, cfg)
+    mirror = RefDBRegistry(root=None)
+    snap = reg.current("food")
+    a = mirror.install("food", snap, config=cfg)
+    b = mirror.install("food", snap, config=cfg)
+    assert a is b                       # idempotent per version
+    other = _config(space=HDSpace(dim=256, ngram=5, z_threshold=3.0))
+    with pytest.raises(ValueError, match="fingerprint"):
+        mirror.install("food", snap, config=other)
+
+
+# -- fleet observability ------------------------------------------------------
+
+def test_fleet_metrics_snapshot_has_host_labels(sample):
+    cfg = _config(backend="reference")
+    reg = _registry(sample, cfg)
+    fleet = FleetController(reg, hosts=3)
+    fleet.add_tenant("acme", "food", max_active=4, max_queue=16)
+    with fleet:
+        for src in _slices(sample, 3):
+            fleet.submit(src, tenant="acme")
+        fleet.run_until_idle()
+        merged = fleet.metrics_snapshot()
+    fleet.close()
+    snap = merged.snapshot()
+    installs = snap["counters"]["refdb_installs_total"]["series"]
+    hosts = {s["labels"]["host"] for s in installs}
+    assert hosts == {"host0", "host1", "host2"}   # every mirror synced
+    gauges = snap["gauges"]
+    assert gauges["fleet_healthy_hosts"]["series"][0]["value"] == 3.0
+    lag = {s["labels"]["host"]: s["value"]
+           for s in gauges["fleet_replication_lag_versions"]["series"]}
+    assert lag == {"host0": 0.0, "host1": 0.0, "host2": 0.0}
+    assert "fleet_outstanding_reads" in gauges
+    assert snap["counters"]["fleet_requests_total"]["series"]

@@ -109,6 +109,40 @@ def test_histogram_merge():
         a.merge(obs.HistogramState((1.0,)))
 
 
+def test_registry_merge_from_and_merged():
+    """The cross-host aggregation seam: merged() folds per-host
+    registries into one snapshot with a ``host`` label on every series;
+    an unlabelled merge_from accumulates same-label series."""
+    a = obs.MetricsRegistry()
+    b = obs.MetricsRegistry()
+    a.counter("reads_total").inc(3, tenant="acme")
+    b.counter("reads_total").inc(2, tenant="acme")
+    a.histogram("lat_seconds", buckets=(0.1, 1.0)).observe(0.05)
+    b.histogram("lat_seconds", buckets=(0.1, 1.0)).observe(5.0)
+    b.gauge("queue_depth").set(7)
+
+    fleet = obs.MetricsRegistry.merged({"h0": a, "h1": b})
+    snap = fleet.snapshot()
+    reads = {s["labels"]["host"]: s["value"]
+             for s in snap["counters"]["reads_total"]["series"]}
+    assert reads == {"h0": 3.0, "h1": 2.0}
+    assert all(s["labels"]["tenant"] == "acme"
+               for s in snap["counters"]["reads_total"]["series"])
+    hosts = {s["labels"]["host"]
+             for s in snap["histograms"]["lat_seconds"]["series"]}
+    assert hosts == {"h0", "h1"}
+    [g] = snap["gauges"]["queue_depth"]["series"]
+    assert g["labels"] == {"host": "h1"} and g["value"] == 7.0
+
+    total = obs.MetricsRegistry()       # no label: same series accumulate
+    total.merge_from(a)
+    total.merge_from(b)
+    snap2 = total.snapshot()
+    assert snap2["counters"]["reads_total"]["series"][0]["value"] == 5.0
+    [h] = snap2["histograms"]["lat_seconds"]["series"]
+    assert h["counts"] == [1, 0, 1]     # bucket-wise HistogramState.merge
+
+
 def test_registry_get_or_create_and_kind_conflicts():
     reg = obs.MetricsRegistry()
     h = reg.histogram("x_seconds", buckets=(1.0, 2.0))

@@ -10,6 +10,7 @@ fresh builds, atomic versioned persistence, and registry reopen.
 """
 
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -20,7 +21,8 @@ from repro.core.hd_space import HDSpace
 from repro.genomics import synth
 from repro.pipeline import (ArraySource, ProfilerConfig, ProfilingSession,
                             SyntheticSource)
-from repro.serve import (RefDBRegistry, ServiceOverloaded, TenantRouter)
+from repro.serve import (RefDBRegistry, RouterClosed, ServiceOverloaded,
+                         TenantRouter)
 
 SP = HDSpace(dim=512, ngram=5, z_threshold=3.0)
 SPEC = synth.CommunitySpec(num_species=4, genome_len=6_000, seed=11)
@@ -272,6 +274,139 @@ def test_registry_rejects_bad_database_names(tmp_path, sample):
     for bad in ("", "../evil", "a/b", ".hidden"):
         with pytest.raises(ValueError):
             reg.create(bad, sample.genomes, _config())
+
+
+# -- gc dry-run + recovery paths ---------------------------------------------
+
+def test_gc_dry_run_previews_without_deleting(tmp_path, sample, extra):
+    """dry_run reports exactly what a real sweep would take, and takes
+    nothing — versions, files, and gc metrics are all untouched."""
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, _config())
+    reg.apply_delta("food", add=extra)
+    reg.apply_delta("food", remove=["sp_new"])
+    preview = reg.gc("food", keep_last=1, dry_run=True)
+    assert preview.dry_run
+    assert preview.collected == (("food", 1), ("food", 2))
+    assert preview.reclaimed_bytes > 0
+    assert reg.versions("food") == (1, 2, 3)         # nothing deleted
+    assert reg.snapshot("food", 1).path.exists()
+    swept = reg.gc("food", keep_last=1)
+    assert not swept.dry_run
+    assert swept.collected == preview.collected
+    assert swept.reclaimed_bytes == preview.reclaimed_bytes
+    assert reg.versions("food") == (3,)
+
+
+def test_reopen_after_gc_resumes_chain(tmp_path, sample, extra):
+    """A registry reopened after gc sees only the retained versions and
+    keeps numbering from the survivor — deltas apply onto a chain whose
+    base was collected."""
+    root = tmp_path / "r"
+    reg = RefDBRegistry(root=root)
+    reg.create("food", sample.genomes, _config())
+    snap2 = reg.apply_delta("food", add=extra)
+    assert reg.gc("food", keep_last=1).collected == (("food", 1),)
+
+    back = RefDBRegistry.open(root)
+    assert back.versions("food") == (2,)
+    _same_db(back.current("food").db, snap2.db)
+    snap3 = back.apply_delta("food", remove=["sp_new"])
+    assert snap3.version == 3 and snap3.parent_version == 2
+    _same_db(snap3.db, build_refdb(sample.genomes, SP, window=1024))
+
+
+def test_publish_while_reader_pins_old_version(tmp_path, sample, extra):
+    """A pinned old version survives publishes and gc sweeps until the
+    reader releases it; then it is collectable."""
+    reg = RefDBRegistry(root=tmp_path / "r")
+    snap1 = reg.create("food", sample.genomes, _config())
+    reg.pin("food", 1)                               # long-lived reader
+    reg.apply_delta("food", add=extra)
+    assert reg.gc("food", keep_last=1).collected == ()
+    _same_db(reg.snapshot("food", 1).db, snap1.db)   # reader unharmed
+    reg.release("food", 1)
+    assert reg.gc("food", keep_last=1).collected == (("food", 1),)
+
+
+# -- stop/submit race: closed admissions fail clean, never hang --------------
+
+def test_submit_after_stop_raises_router_closed(tmp_path, sample):
+    cfg = _config(backend="reference")
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, cfg)
+    router = TenantRouter(reg)
+    router.add_tenant("acme", database="food", max_active=4, max_queue=4)
+    router.start(1)
+    h = router.submit(_slices(sample, 2)[0], tenant="acme")
+    router.stop()                                    # drains h first
+    assert h.result(timeout=0).total_reads > 0
+    with pytest.raises(RouterClosed, match="stopped"):
+        router.submit(_slices(sample, 2)[1], tenant="acme")
+    router.close()
+
+
+def test_stop_wakes_quota_blocked_submit(tmp_path, sample):
+    """A submit blocked on a full tenant quota when stop() lands must
+    raise RouterClosed within a bounded wait — not sleep out its own
+    timeout, and never hang."""
+    cfg = _config(backend="reference")
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, cfg)
+    router = TenantRouter(reg)
+    router.add_tenant("acme", database="food", max_active=1, max_queue=0)
+    srcs = _slices(sample, 2)
+    router.submit(srcs[0], tenant="acme")    # fills the quota; no workers
+    outcome: dict = {}
+
+    def blocked():
+        try:
+            outcome["handle"] = router.submit(srcs[1], tenant="acme",
+                                              block=True, timeout=300)
+        except BaseException as e:           # noqa: BLE001 - recorded
+            outcome["error"] = e
+
+    t = threading.Thread(target=blocked)
+    t.start()
+    time.sleep(0.2)                          # let it block on the quota
+    router.stop(drain=False)
+    t.join(timeout=10)
+    assert not t.is_alive()                  # bounded: woke well before 300s
+    assert isinstance(outcome.get("error"), RouterClosed)
+    router.close()
+
+
+def test_stop_drain_races_live_submitters(tmp_path, sample):
+    """Submits racing stop(drain=True) each either get a handle whose
+    request then completes, or raise RouterClosed — no third outcome,
+    no hang."""
+    cfg = _config(backend="reference")
+    reg = RefDBRegistry(root=tmp_path / "r")
+    reg.create("food", sample.genomes, cfg)
+    router = TenantRouter(reg)
+    router.add_tenant("acme", database="food", max_active=2, max_queue=32)
+    srcs = _slices(sample, 8)
+    admitted, closed = [], []
+
+    def submitter():
+        for src in srcs:
+            try:
+                admitted.append(router.submit(src, tenant="acme",
+                                              block=True, timeout=300))
+            except RouterClosed:
+                closed.append(src)
+
+    router.start(2)
+    t = threading.Thread(target=submitter)
+    t.start()
+    time.sleep(0.05)                         # land mid-stream
+    router.stop(drain=True)
+    t.join(timeout=30)
+    assert not t.is_alive()
+    assert len(admitted) + len(closed) == len(srcs)
+    for h in admitted:                       # drain finished all admitted
+        assert h.result(timeout=0).total_reads > 0
+    router.close()
 
 
 # -- shared backend across swaps ---------------------------------------------
