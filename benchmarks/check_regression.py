@@ -12,6 +12,10 @@ It fails (exit 1) when, for any backend present in the baseline,
 * ``intermediate_bytes_per_read`` increased at all — the traffic model
   is deterministic, so any increase is a real dataflow regression (e.g.
   the fused path re-materializing the encoded matrix), or
+* ``prototype_bytes_per_read`` increased at all — same determinism
+  argument for the prototype stream: growth means a kernel re-fetches
+  prototype tiles it used to amortize (old baselines without the field
+  skip this check until refreshed), or
 * ``observability.enabled_over_disabled`` fell below ``1 -
   --obs-tolerance`` (default 2%) — the metrics layer's overhead guard:
   turning observability ON must not cost the hot path more than 2%, and
@@ -44,7 +48,8 @@ import sys
 BASELINE = pathlib.Path(__file__).resolve().parent / "baseline.json"
 #: Per-backend fields carried into the baseline (the stable, comparable
 #: subset — absolute reads/s is runner-dependent and deliberately left out).
-BASELINE_FIELDS = ("relative_throughput", "intermediate_bytes_per_read")
+BASELINE_FIELDS = ("relative_throughput", "intermediate_bytes_per_read",
+                   "prototype_bytes_per_read")
 
 
 def load(path: pathlib.Path) -> dict:
@@ -60,7 +65,7 @@ def update_baseline(current: dict, path: pathlib.Path = BASELINE) -> dict:
     baseline = {
         "schema": current["schema"],
         "backends": {
-            name: {f: r[f] for f in BASELINE_FIELDS}
+            name: {f: r[f] for f in BASELINE_FIELDS if f in r}
             for name, r in current["backends"].items()
         },
     }
@@ -95,6 +100,14 @@ def check(current: dict, baseline: dict, tolerance: float = 0.20,
                 f"{name}: intermediate bytes/read grew "
                 f"{base['intermediate_bytes_per_read']} -> "
                 f"{got['intermediate_bytes_per_read']}")
+        # Pre-PR-9 baselines have no prototype-stream field; they start
+        # gating it on the next --update.
+        base_proto = base.get("prototype_bytes_per_read")
+        if base_proto is not None \
+                and got.get("prototype_bytes_per_read", 0) > base_proto:
+            problems.append(
+                f"{name}: prototype bytes/read grew "
+                f"{base_proto} -> {got['prototype_bytes_per_read']}")
     if not current.get("bit_exact", False):
         problems.append("backend reports were not bit-identical")
     observability = current.get("observability")
@@ -158,7 +171,9 @@ def main(argv: list[str] | None = None) -> None:
     for name, r in sorted(current["backends"].items()):
         marker = "" if name in baseline["backends"] else "  (not gated yet)"
         print(f"{name}: rel={r['relative_throughput']:.4f} "
-              f"bytes/read={r['intermediate_bytes_per_read']}{marker}")
+              f"bytes/read={r['intermediate_bytes_per_read']} "
+              f"proto_bytes/read={r.get('prototype_bytes_per_read', '-')}"
+              f"{marker}")
     if "observability" in current:
         print(f"observability: enabled/disabled="
               f"{current['observability']['enabled_over_disabled']:.4f}")

@@ -189,7 +189,15 @@ def demeter_hdc_terms(batch: int = 65536, read_len: int = 150,
     read_parallel layout run through the encode->search megakernel — the
     encoded queries never round-trip through HBM, so the ``d_dev/8 * 2``
     intermediate term of the memory numerator vanishes and the per-read
-    HBM traffic drops to tokens-in + the shared prototype stream.
+    HBM traffic drops to tokens-in + the prototype stream.
+
+    The prototype-stream term is variant-specific (the second traffic
+    class fusion + chunk reuse attacks, PR 9): the matmul variants
+    stream the AM as its ±1 bf16 expansion (2 bytes/bit), while the
+    fused megakernel streams bit-packed words (1/16 the bytes) and its
+    chunk-axis grid fetches each ``(bs, W)`` slab once per *batch* —
+    not once per batch tile — so the term no longer scales with
+    ``b_dev / bb``.
     """
     sp = common.PROD_SPACE
     g = read_len - sp.ngram + 1
@@ -206,7 +214,11 @@ def demeter_hdc_terms(batch: int = 65536, read_len: int = 150,
     mm_flops = 2.0 * b_dev * num_protos * d_dev
     compute_t = enc_ops / V5E.vpu_ops + mm_flops / V5E.bf16_flops
     q_intermediate = 0.0 if variant == "fused" else b_dev * d_dev / 8 * 2
-    hbm = b_dev * read_len + q_intermediate + num_protos * d_dev / 8
+    if variant == "fused":
+        proto_bytes = num_protos * d_dev / 8       # packed, once per batch
+    else:
+        proto_bytes = num_protos * d_dev * 2       # ±1 bf16 MXU operand
+    hbm = b_dev * read_len + q_intermediate + proto_bytes
     memory_t = hbm / V5E.hbm_bw
     coll_t = link / V5E.ici_bw
     terms = {"compute_s": compute_t, "memory_s": memory_t,
@@ -214,6 +226,7 @@ def demeter_hdc_terms(batch: int = 65536, read_len: int = 150,
     dominant = max(terms, key=terms.get)
     return dict(terms, dominant=dominant.replace("_s", ""),
                 roofline_fraction=compute_t / max(terms.values()),
+                proto_bytes_per_read=proto_bytes / b_dev,
                 reads_per_s_per_chip=batch / chips / max(terms.values()))
 
 
@@ -268,6 +281,7 @@ def run(emit=common.emit) -> None:
         emit(f"roofline.demeter_hdc.query_64k.{variant}", 0.0,
              f"dom={h['dominant']};frac={h['roofline_fraction']:.2f};"
              f"mem_us={h['memory_s'] * 1e6:.1f};"
+             f"proto_B/read={h['proto_bytes_per_read']:.1f};"
              f"reads/s/chip={h['reads_per_s_per_chip']:.0f}")
     emit("roofline.cells_analyzed", 0.0, f"{ok}/{n}")
 

@@ -10,7 +10,8 @@ writes a machine-readable ``BENCH_smoke.json``:
      "backends": {
         "pallas_fused": {"reads_per_s": ..., "us_per_read": ...,
                          "relative_throughput": ...,
-                         "intermediate_bytes_per_read": 0}, ...}}
+                         "intermediate_bytes_per_read": 0,
+                         "prototype_bytes_per_read": ...}, ...}}
 
 ``relative_throughput`` is each backend's reads/s divided by the same
 run's *family anchor* (jnp backends vs ``reference``, Pallas backends vs
@@ -26,7 +27,11 @@ partner's ratio moving).
 query path's *intermediates* — everything between raw tokens in and
 agreement scores out (see :func:`intermediate_bytes_per_read`).  It is
 deterministic, so the gate allows no increase at all: the fused
-megakernel's 0 bytes/read is pinned forever.
+megakernel's 0 bytes/read is pinned forever.  ``prototype_bytes_per_read``
+does the same for the prototype stream (the query path's only remaining
+HBM traffic — see :func:`prototype_bytes_per_read`): any analytic growth
+of any backend's prototype traffic fails CI, pinning the fused kernel's
+chunk-reuse amortization the way fusion pinned the intermediates.
 
 The payload also carries ``observability.enabled_over_disabled``: the
 ``reference`` backend's throughput with the metrics layer fully enabled
@@ -96,7 +101,8 @@ def intermediate_bytes_per_read(backend: str, space: HDSpace) -> int:
     Counts only traffic the kernel organization itself creates between
     "tokens in" and "scores out" (what fusion can eliminate) — not the
     token read or score write every backend shares, and not the
-    prototype stream, which is identical across backends:
+    prototype stream (modelled separately by
+    :func:`prototype_bytes_per_read`, since PR 9 it differs per backend):
 
       two-kernel ±1 matmul   packed query write+read (4B/word each) plus
                              the ±1 bf16 expansion write+read (2B/bit);
@@ -111,6 +117,45 @@ def intermediate_bytes_per_read(backend: str, space: HDSpace) -> int:
     if backend == "pallas_fused":
         return 0
     raise ValueError(f"no traffic model for backend {backend!r}")
+
+
+def prototype_bytes_per_read(backend: str, space: HDSpace,
+                             num_prototypes: int, batch: int) -> float:
+    """Analytical HBM bytes of the *prototype stream*, per read.
+
+    How many bytes of reference-DB prototypes the kernel organization
+    pulls from HBM to score one batch, divided by the batch size — the
+    traffic Acc-Demeter eliminates by keeping the AM inside the
+    memristor array (PAPER.md §5), and what the fused kernel's
+    chunk-axis grid amortizes in software.  Uses the backends' real
+    padded shapes (what the DMA engine actually moves, not the logical
+    prototype count):
+
+      reference            ±1 bf16 expansion streamed once per batch;
+      pallas_matmul        ±1 bf16 tiles, rows padded to 128, re-fetched
+                           per 128-row batch tile;
+      reference_packed     packed uint32, once per batch (32x packing);
+      pallas_packed        packed tiles, rows padded to 128, re-fetched
+                           per 8-row batch tile;
+      pallas_fused         packed ``(bs, W)`` slabs fetched once per
+                           chunk and reused across every batch tile —
+                           once per batch total (``fused_tile_plan``).
+    """
+    from repro.kernels.ops import fused_tile_plan
+    w_bytes = space.num_words * 4
+    pad128 = -(-num_prototypes // 128) * 128
+    if backend == "reference":
+        return num_prototypes * space.dim * 2 / batch
+    if backend == "pallas_matmul":
+        return pad128 * space.dim * 2 * (-(-batch // 128)) / batch
+    if backend == "reference_packed":
+        return num_prototypes * w_bytes / batch
+    if backend == "pallas_packed":
+        return pad128 * w_bytes * (-(-batch // 8)) / batch
+    if backend == "pallas_fused":
+        plan = fused_tile_plan(batch, num_prototypes, space.num_words)
+        return plan["proto_bytes_per_call"] / batch
+    raise ValueError(f"no prototype-stream model for backend {backend!r}")
 
 
 def run_smoke(out_path: str | pathlib.Path = "BENCH_smoke.json",
@@ -152,6 +197,7 @@ def run_smoke(out_path: str | pathlib.Path = "BENCH_smoke.json",
                 spent += secs
 
     results: dict[str, dict] = {}
+    num_protos = int(db.prototypes.shape[0])
     for name, secs in best.items():
         us = secs / num_reads * 1e6
         results[name] = {
@@ -159,6 +205,9 @@ def run_smoke(out_path: str | pathlib.Path = "BENCH_smoke.json",
             "us_per_read": us,
             "intermediate_bytes_per_read":
                 intermediate_bytes_per_read(name, SMOKE_SPACE),
+            "prototype_bytes_per_read":
+                prototype_bytes_per_read(name, SMOKE_SPACE, num_protos,
+                                         SMOKE_CONFIG.batch_size),
         }
         emit(f"smoke.{name}.us_per_read", us,
              f"{num_reads / secs:.1f}reads/s")

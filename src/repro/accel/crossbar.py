@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from repro.accel import device
 from repro.accel.device import DeviceConfig
 from repro.core import bitops
-from repro.kernels.ops import pad_to_multiple
+from repro.core.bitops import pad_to_multiple
 
 
 @dataclasses.dataclass(frozen=True)

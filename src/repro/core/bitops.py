@@ -29,6 +29,25 @@ def num_words(dim: int) -> int:
     return dim // WORD_BITS
 
 
+def pad_to_multiple(x: jax.Array, axis: int, multiple: int,
+                    fill=0) -> jax.Array:
+    """Pad ``x`` along ``axis`` up to the next multiple of ``multiple``.
+
+    Shared by the Pallas wrappers (block alignment, via
+    :mod:`repro.kernels.ops`), the accel crossbar tiling
+    (:mod:`repro.accel.crossbar`), and the prototype-axis sharding
+    (:mod:`repro.pipeline.sharded`).  The default zero fill is inert to
+    downstream math; sharding passes ``fill=num_species`` for the species
+    tags so the segment reduction drops padding rows.
+    """
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
 def pack_bits(bits: jax.Array) -> jax.Array:
     """Pack ``(..., D)`` {0,1} bits into ``(..., D//32)`` uint32 words."""
     d = bits.shape[-1]

@@ -11,27 +11,60 @@ realization of the paper's dataflow: one grid cell encodes a
 it into the Hamming accumulator against every prototype's matching word
 tile, so the encoded queries live only as a VMEM temporary.
 
-Per grid cell ``(i, j)``:
+With the encoded queries VMEM-resident, the *prototype stream* is the
+only remaining HBM traffic of the search, and its dataflow is what this
+kernel optimizes (the software analogue of Acc-Demeter keeping the AM
+inside the memristor array):
 
-  1. **Encode** the word tile exactly as ``hdc_encoder._kernel`` does:
-     gather-free IM lookup (4 predicated selects), per-bit bundling
-     counters in ``(bb, 32, bw)`` scratch, majority threshold with the
-     tie-break vector, re-pack to ``(bb, bw)`` uint32 — all VMEM.
-  2. **Search**: XOR the fresh tile against the prototypes' ``(S, bw)``
-     word tile and accumulate popcounts into the persistent ``(bb, S)``
-     Hamming scratch.
-  3. On the last word tile, flush ``agreement = dim - hamming`` — the
-     only HBM write of the whole query path besides the final scores.
+* **In-grid prototype chunking.**  The grid is three-axis,
+  ``(S/bs, B/bb, W/bw)`` with the prototype-chunk axis *outermost* — one
+  ``pallas_call`` covers the whole ``(B, S)`` output instead of one call
+  (and one retrace) per host-side ``bs`` chunk.
+* **Chunk-slab amortization.**  Each ``(bs, W)`` prototype slab is
+  delivered as a single block whose index depends only on the chunk id
+  ``k``, so the pipeline fetches it ONCE per chunk and every batch tile
+  ``i`` and word tile ``j`` under that chunk reuses the VMEM-resident
+  copy.  Prototype HBM bytes per call drop from
+  ``(B/bb) * S * W * 4`` to ``S * W * 4`` — amortized ``B/bb``-fold.
+* **Double-buffered prototype DMA** (``double_buffer=True``; the default
+  on real TPU).  The prototype array stays in HBM
+  (``memory_space=ANY``) and the kernel copies slab ``k+1`` into the
+  spare half of a two-slot VMEM scratch *at the first cell of chunk
+  ``k``*, overlapping the fetch with the whole slab's worth of
+  XOR+popcount work.  The automatic pipeline only prefetches one grid
+  step ahead — it would start fetching slab ``k+1`` during the *last*
+  cell of chunk ``k``, too late to hide a multi-megabyte copy.  Under
+  interpret mode and on non-TPU backends the kernel falls back to the
+  automatic pipeline (same math, same bytes; both paths are bit-exact
+  and parity-tested in ``tests/test_fused.py``).
 
-Grid: ``(B/bb, W/bw)`` with the word-tile axis innermost ("arbitrary":
-it carries the accumulator), batch tiles parallel.  Bit-exact with
-``reference`` encode + agreement by construction — the encode math is
-byte-for-byte the encoder kernel's, and ``dim - popcount(xor)`` is the
-same exact integer identity both AM kernels use.
+Per grid cell ``(k, i, j)``:
 
-VMEM per cell: ``S*bw*4`` (prototype tile) + ``bb*S*4`` (accumulator) +
-``bb*32*bw*4`` (counters); callers bound S per call by chunking the
-prototype axis (see ``ops.fused_agreement``).
+  1. **Encode** the ``(bb, bw)`` word tile exactly as
+     ``hdc_encoder._kernel`` does: gather-free IM lookup (4 predicated
+     selects), per-bit bundling counters in ``(bb, 32, bw)`` scratch,
+     majority threshold with the tie-break vector, re-pack to
+     ``(bb, bw)`` uint32 — all VMEM.
+  2. **Search**: XOR the fresh tile against word tile ``j`` of prototype
+     slab ``k`` and accumulate popcounts into the persistent
+     ``(bb, bs)`` Hamming scratch.
+  3. On the last word tile, flush ``agreement = dim - hamming`` into the
+     ``(i, k)`` output block — the only HBM write of the whole query
+     path besides the final scores.
+
+The word axis is innermost ("arbitrary": it carries the accumulator);
+the IM, tie, and prototype arrays arrive word-split as ``(..., W/bw,
+bw)`` so the per-cell word tile is a *sublane-dim* dynamic index (TPU
+supports those; lane-dim dynamic slices would need 128-alignment).
+Bit-exact with ``reference`` encode + agreement by construction — the
+encode math is byte-for-byte the encoder kernel's, and
+``dim - popcount(xor)`` is the same exact integer identity both AM
+kernels use.
+
+VMEM per cell: ``bs*W*4`` (prototype slab; x2 when double-buffered) +
+``bb*bs*4`` (accumulator) + ``bb*bs*4`` (output block) + ``bb*32*bw*4``
+(counters) + ``n*alphabet*W*4`` (IM); callers bound ``bs`` per chunk
+(see ``ops.fused_agreement`` / ``repro.kernels.autotune``).
 """
 
 from __future__ import annotations
@@ -42,7 +75,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.pallas_compat import CompilerParams, VMEM, interpret_default
+from repro.kernels.pallas_compat import (ANY, CompilerParams, VMEM,
+                                         SemaphoreDMA, interpret_default,
+                                         make_async_copy)
 
 WORD_BITS = 32
 
@@ -60,20 +95,20 @@ def _pack(bits: jax.Array) -> jax.Array:
         axis=1, dtype=jnp.uint32)
 
 
-def _kernel(tokens_ref, len_ref, im_ref, tie_ref, p_ref, o_ref,
-            counts_ref, acc_ref, *, n: int, alphabet: int, g: int, dim: int):
-    j = pl.program_id(1)
+def _encode_tile(tokens_ref, len_ref, im_ref, tie_ref, counts_ref, j, *,
+                 n: int, alphabet: int, g: int) -> jax.Array:
+    """Encode word tile ``j`` of the batch tile: ``(bb, bw)`` uint32.
 
-    @pl.when(j == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    # -- encode the (bb, bw) word tile (same math as hdc_encoder._kernel) --
+    Same math as ``hdc_encoder._kernel``; ``im_ref``/``tie_ref`` are the
+    word-split ``(n, alphabet, W/bw, bw)`` / ``(1, W/bw, bw)`` views and
+    ``j`` picks the tile with a sublane-dim dynamic index.
+    """
     toks = tokens_ref[...]                       # (bb, L) int32
     m = jnp.maximum(len_ref[...] - (n - 1), 0)   # (bb, 1) valid grams
     counts_ref[...] = jnp.zeros_like(counts_ref)
     bb = counts_ref.shape[0]
     bw = counts_ref.shape[-1]
+    im_tile = im_ref[:, :, j, :]                 # (n, alphabet, bw)
 
     if g > 0:
         def body(i, _):
@@ -82,7 +117,7 @@ def _kernel(tokens_ref, len_ref, im_ref, tie_ref, p_ref, o_ref,
             for jj in range(n):                   # bind: XOR of rho^j(B[c])
                 tok_j = window[:, jj][:, None]    # (bb, 1)
                 for a in range(alphabet):         # gather-free IM lookup
-                    row = im_ref[jj, a, :][None, :]
+                    row = im_tile[jj, a, :][None, :]
                     gram = jnp.bitwise_xor(
                         gram, jnp.where(tok_j == a, row, jnp.uint32(0)))
             valid = (i < m[:, 0])[:, None, None]  # (bb, 1, 1)
@@ -94,27 +129,81 @@ def _kernel(tokens_ref, len_ref, im_ref, tie_ref, p_ref, o_ref,
     counts = counts_ref[...]                      # (bb, 32, bw)
     twice = 2 * counts
     m_b = m[:, 0][:, None, None]
-    tie_bits = _unpack(tie_ref[...])[0:1]         # (1, 32, bw)
+    tie_bits = _unpack(tie_ref[:, j, :])[0:1]     # (1, 32, bw)
     bits = jnp.where(twice == m_b, tie_bits,
                      (twice > m_b).astype(jnp.int32))
-    q = _pack(bits)                               # (bb, bw) — VMEM only
+    return _pack(bits)                            # (bb, bw) — VMEM only
 
-    # -- fold the finished tile straight into the AM search ----------------
-    x = jnp.bitwise_xor(q[:, None, :], p_ref[...][None, :, :])
+
+def _search_tile(acc_ref, o_ref, q, p_tile, *, dim: int):
+    """Fold one encoded tile into the Hamming accumulator; flush on last j."""
+    x = jnp.bitwise_xor(q[:, None, :], p_tile[None, :, :])
     acc_ref[...] += jnp.bitwise_count(x).astype(jnp.int32).sum(axis=-1)
 
-    @pl.when(j == pl.num_programs(1) - 1)
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
         o_ref[...] = dim - acc_ref[...]
 
 
+def _kernel(tokens_ref, len_ref, im_ref, tie_ref, p_ref, o_ref,
+            counts_ref, acc_ref, *, n: int, alphabet: int, g: int, dim: int):
+    """Automatic-pipeline variant: the ``(bs, W)`` prototype slab is a
+    BlockSpec block indexed by the chunk id only, so the pipeline fetches
+    it once per chunk and double-buffers the fetch across chunks."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = _encode_tile(tokens_ref, len_ref, im_ref, tie_ref, counts_ref, j,
+                     n=n, alphabet=alphabet, g=g)
+    _search_tile(acc_ref, o_ref, q, p_ref[:, j, :], dim=dim)
+
+
+def _kernel_dma(tokens_ref, len_ref, im_ref, tie_ref, p_hbm, o_ref,
+                counts_ref, acc_ref, p_buf, sem, *,
+                n: int, alphabet: int, g: int, dim: int):
+    """Manual double-buffer variant: prototypes stay in HBM and slab
+    ``k+1``'s async copy is issued at the FIRST cell of chunk ``k`` —
+    the whole slab's compute window hides the next fetch."""
+    k, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    bs = p_buf.shape[1]
+
+    def slab_dma(slot, chunk):
+        return make_async_copy(p_hbm.at[pl.ds(chunk * bs, bs)],
+                               p_buf.at[slot], sem.at[slot])
+
+    @pl.when((i == 0) & (j == 0))
+    def _rotate():
+        @pl.when(k == 0)
+        def _warmup():
+            slab_dma(0, 0).start()
+
+        slab_dma(k % 2, k).wait()
+
+        @pl.when(k + 1 < pl.num_programs(0))
+        def _prefetch():
+            slab_dma((k + 1) % 2, k + 1).start()
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = _encode_tile(tokens_ref, len_ref, im_ref, tie_ref, counts_ref, j,
+                     n=n, alphabet=alphabet, g=g)
+    _search_tile(acc_ref, o_ref, q, p_buf[k % 2][:, j, :], dim=dim)
+
+
 @functools.partial(jax.jit, static_argnames=("n", "alphabet", "dim", "bb",
-                                             "bw", "interpret"))
+                                             "bw", "bs", "interpret",
+                                             "double_buffer"))
 def fused_profile(tokens: jax.Array, lengths: jax.Array,
                   im_rolled: jax.Array, tie: jax.Array,
                   p_packed: jax.Array, *, n: int, dim: int,
                   alphabet: int = 4, bb: int = 8, bw: int = 128,
-                  interpret: bool | None = None) -> jax.Array:
+                  bs: int | None = None, interpret: bool | None = None,
+                  double_buffer: bool | None = None) -> jax.Array:
     """Agreement of every read against every prototype, single kernel.
 
     Args:
@@ -126,6 +215,13 @@ def fused_profile(tokens: jax.Array, lengths: jax.Array,
         and rows are inert: pad words XOR to zero against the pad words
         of the encoded queries, which are also zero).
       dim: the LOGICAL HD dimension D (<= 32*W).
+      bs: prototype rows per chunk (the third grid axis); ``None`` means
+        one chunk covering all of S.  Must divide S; pad upstream
+        (``ops.fused_agreement`` pads once for the whole call).
+      double_buffer: manually double-buffer the prototype-slab DMA
+        (prototypes stay in HBM, two-slot VMEM scratch).  ``None`` picks
+        it on real TPU and falls back to the automatic pipeline under
+        interpret / non-TPU backends.  Both variants are bit-exact.
 
     Returns:
       ``(B, S)`` int32 agreement counts in [0, dim] — bit-identical to
@@ -137,25 +233,50 @@ def fused_profile(tokens: jax.Array, lengths: jax.Array,
     assert n_im == n and a_im == alphabet and w == w2, (n_im, a_im, w, w2)
     g = max(length - n + 1, 0)
     bb, bw = min(bb, b), min(bw, w)
-    assert b % bb == 0 and w % bw == 0, (
-        f"(B={b}, W={w}) must tile by (bb={bb}, bw={bw}); pad upstream")
-    grid = (b // bb, w // bw)
+    bs = s if bs is None else min(bs, s)
+    assert b % bb == 0 and w % bw == 0 and s % bs == 0, (
+        f"(B={b}, S={s}, W={w}) must tile by (bb={bb}, bs={bs}, bw={bw}); "
+        f"pad upstream")
+    interpret = interpret_default(interpret)
+    if double_buffer is None:
+        double_buffer = (not interpret and make_async_copy is not None
+                         and jax.default_backend() == "tpu")
+    grid = (s // bs, b // bb, w // bw)
+    wt = w // bw
+
+    # Word-split views: the per-cell word tile becomes a sublane-dim
+    # dynamic index instead of a lane-dim slice, and the IM / tie /
+    # prototype block indices stop depending on j — the IM and tie are
+    # fetched once per call, the prototype slab once per chunk.
+    im4 = im_rolled.reshape(n, alphabet, wt, bw)
+    tie3 = tie.reshape(1, wt, bw)
+    p3 = p_packed.reshape(s, wt, bw)
+
+    common_specs = [
+        pl.BlockSpec((bb, length), lambda k, i, j: (i, 0)),
+        pl.BlockSpec((bb, 1), lambda k, i, j: (i, 0)),
+        pl.BlockSpec((n, alphabet, wt, bw), lambda k, i, j: (0, 0, 0, 0)),
+        pl.BlockSpec((1, wt, bw), lambda k, i, j: (0, 0, 0)),
+    ]
+    scratch = [VMEM((bb, WORD_BITS, bw), jnp.int32),
+               VMEM((bb, bs), jnp.int32)]
+    if double_buffer:
+        kernel = _kernel_dma
+        p_spec = pl.BlockSpec(memory_space=ANY)
+        scratch = scratch + [VMEM((2, bs, wt, bw), jnp.uint32),
+                             SemaphoreDMA((2,))]
+    else:
+        kernel = _kernel
+        p_spec = pl.BlockSpec((bs, wt, bw), lambda k, i, j: (k, 0, 0))
 
     return pl.pallas_call(
-        functools.partial(_kernel, n=n, alphabet=alphabet, g=g, dim=dim),
+        functools.partial(kernel, n=n, alphabet=alphabet, g=g, dim=dim),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bb, length), lambda i, j: (i, 0)),
-            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((n, alphabet, bw), lambda i, j: (0, 0, j)),
-            pl.BlockSpec((1, bw), lambda i, j: (0, j)),
-            pl.BlockSpec((s, bw), lambda i, j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((bb, s), lambda i, j: (i, 0)),
+        in_specs=common_specs + [p_spec],
+        out_specs=pl.BlockSpec((bb, bs), lambda k, i, j: (i, k)),
         out_shape=jax.ShapeDtypeStruct((b, s), jnp.int32),
-        scratch_shapes=[VMEM((bb, WORD_BITS, bw), jnp.int32),
-                        VMEM((bb, s), jnp.int32)],
+        scratch_shapes=scratch,
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret_default(interpret),
-    )(tokens, lengths, im_rolled, tie, p_packed)
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(tokens, lengths, im4, tie3, p3)

@@ -21,23 +21,10 @@ from repro.kernels import hamming_am as _hamming_am
 from repro.kernels import hdc_encoder as _hdc_encoder
 
 
-def pad_to_multiple(x: jax.Array, axis: int, multiple: int,
-                    fill=0) -> jax.Array:
-    """Pad ``x`` along ``axis`` up to the next multiple of ``multiple``.
-
-    Shared by the Pallas wrappers (block alignment), the accel crossbar
-    tiling (:mod:`repro.accel.crossbar`), and the prototype-axis sharding
-    (:mod:`repro.pipeline.sharded`).  The default zero fill is inert to
-    downstream math; sharding passes ``fill=num_species`` for the species
-    tags so the segment reduction drops padding rows.
-    """
-    pad = (-x.shape[axis]) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=fill)
-
+# Re-exported from its dependency-free home so standalone kernel tools
+# (`python -m repro.kernels.autotune`) can load without pulling in the
+# whole core->pipeline import graph.
+pad_to_multiple = bitops.pad_to_multiple
 
 _pad_to = pad_to_multiple
 
@@ -95,45 +82,91 @@ def hdc_encode(tokens: jax.Array, lengths: jax.Array, im: jax.Array,
     return out[:b]
 
 
-@functools.partial(jax.jit, static_argnames=("space", "bb", "bw", "bs"))
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def fused_tile_plan(b: int, s: int, w: int, *, bb: int = 8, bw: int = 128,
+                    bs: int = 4096) -> dict[str, int]:
+    """The padded shapes + grid :func:`fused_agreement` will actually run.
+
+    One place owns the clamp/pad arithmetic so the kernel launch and the
+    analytic traffic accounting (``benchmarks/smoke.py`` /
+    ``benchmarks/memory.py`` / ``repro.kernels.autotune``) can never
+    drift apart.  The prototype chunking pads S ONCE to
+    ``n_chunks * bs`` (``bs`` re-balanced so the pad is < one chunk) —
+    not per chunk, so the accumulator waste and the timing no longer
+    vary with ``S % bs``.
+
+    Returns a dict with the effective ``bb``/``bw``/``bs``, the padded
+    ``b_pad``/``w_pad``/``s_pad``, ``n_chunks``, and
+    ``proto_bytes_per_call`` — the prototype-stream HBM bytes one fused
+    call moves (each ``(bs, W)`` slab is fetched once per chunk and
+    reused across every batch tile; see ``kernels/fused_profile``).
+    """
+    bb = min(bb, 8 * ((b + 7) // 8))
+    b_pad = _ceil_to(b, max(bb, 8))
+    bw = min(bw, w)
+    w_pad = _ceil_to(w, bw)
+    # Re-balance the requested chunk rows over ceil(S/bs) chunks, rounded
+    # to the 128-row output lane tile, then pad S to the chunk grid: the
+    # total pad is < one chunk (vs up to 127 rows per chunk before).
+    bs = max(128, min(bs, _ceil_to(s, 128)))
+    n_chunks = -(-s // bs)
+    bs = _ceil_to(-(-s // n_chunks), 128)
+    n_chunks = -(-s // bs)
+    s_pad = n_chunks * bs
+    return {"bb": bb, "bw": bw, "bs": bs, "b_pad": b_pad, "w_pad": w_pad,
+            "s_pad": s_pad, "n_chunks": n_chunks,
+            "proto_bytes_per_call": s_pad * w_pad * 4}
+
+
+@functools.partial(jax.jit, static_argnames=("space", "bb", "bw", "bs",
+                                             "double_buffer"))
 def fused_agreement(tokens: jax.Array, lengths: jax.Array, im: jax.Array,
                     tie: jax.Array, prototypes: jax.Array, space: HDSpace,
-                    *, bb: int = 8, bw: int = 128, bs: int = 4096
-                    ) -> jax.Array:
+                    *, bb: int = 8, bw: int = 128, bs: int = 4096,
+                    double_buffer: bool | None = None) -> jax.Array:
     """Fused steps 3+4: read tokens -> agreement, no encoded HBM matrix.
 
-    One :func:`repro.kernels.fused_profile.fused_profile` call per
-    prototype chunk: the encoded query tile lives only in VMEM, so the
-    ``(B, W)`` packed matrix (and the ±1 bf16 expansion of the matmul
-    path) never touches HBM.  Bit-identical to
+    ONE :func:`repro.kernels.fused_profile.fused_profile` call covers the
+    whole ``(B, S)`` output: the ``bs`` prototype chunking is the
+    kernel's outermost grid axis (no per-chunk retrace, no host concat),
+    each ``(bs, W)`` prototype slab is fetched once per chunk and reused
+    across every batch tile, and on TPU the next slab's DMA is manually
+    double-buffered behind the current slab's compute.  The encoded
+    query tile lives only in VMEM, so the ``(B, W)`` packed matrix (and
+    the ±1 bf16 expansion of the matmul path) never touches HBM.
+    Bit-identical to
     ``am_agreement(hdc_encode(tokens, lengths, im, tie, space), p, dim)``.
 
     Args:
       tokens: ``(B, L)`` int32 symbol ids; lengths: ``(B,)`` true lengths.
       prototypes: ``(S, W)`` uint32 packed prototypes.
       bb / bw: batch / word-tile sizes (VMEM shape knobs).
-      bs: prototype rows per kernel call — bounds the ``(S, bw)``
-        prototype tile and ``(bb, S)`` accumulator resident in VMEM.
+      bs: prototype rows per chunk — bounds the ``(bs, W)`` slab and the
+        ``(bb, bs)`` accumulator resident in VMEM.  Re-balanced and
+        padded once via :func:`fused_tile_plan`.
+      double_buffer: forwarded to the kernel (``None`` = auto: manual
+        DMA double-buffering on real TPU, automatic pipeline elsewhere).
 
     Returns:
       ``(B, S)`` int32 agreement in [0, space.dim].
     """
     b, s = tokens.shape[0], prototypes.shape[0]
+    plan = fused_tile_plan(b, s, space.num_words, bb=bb, bw=bw, bs=bs)
     im_rolled = item_memory.rolled(im, space.ngram)
-    bb = min(bb, 8 * ((b + 7) // 8))
-    toks = _pad_to(tokens.astype(jnp.int32), 0, max(bb, 8))
-    lens = _pad_to(lengths.astype(jnp.int32)[:, None], 0, max(bb, 8))
-    bw = min(bw, space.num_words)
-    # Pad the word axis to the tile: zero IM/tie/prototype words encode
-    # (and score) as zeros, so padding is inert to the exact agreement.
-    im_rolled = _pad_to(im_rolled, 2, bw)
-    tie_row = _pad_to(tie[None, :], 1, bw)
-    protos = _pad_to(jnp.asarray(prototypes), 1, bw)
-    cols = []
-    for c0 in range(0, s, bs):
-        chunk = _pad_to(protos[c0:min(c0 + bs, s)], 0, 128)
-        cols.append(_fused_profile.fused_profile(
-            toks, lens, im_rolled, tie_row, chunk, n=space.ngram,
-            dim=space.dim, alphabet=space.alphabet_size, bb=bb,
-            bw=bw)[:, :min(bs, s - c0)])
-    return jnp.concatenate(cols, axis=1)[:b] if len(cols) > 1 else cols[0][:b]
+    toks = _pad_to(tokens.astype(jnp.int32), 0, max(plan["bb"], 8))
+    lens = _pad_to(lengths.astype(jnp.int32)[:, None], 0, max(plan["bb"], 8))
+    # Pad the word axis to the tile and the prototype axis to the chunk
+    # grid: zero IM/tie/prototype words encode (and score) as zeros, so
+    # padding is inert to the exact agreement; pad rows are sliced off.
+    im_rolled = _pad_to(im_rolled, 2, plan["bw"])
+    tie_row = _pad_to(tie[None, :], 1, plan["bw"])
+    protos = _pad_to(_pad_to(jnp.asarray(prototypes), 1, plan["bw"]),
+                     0, plan["bs"])
+    out = _fused_profile.fused_profile(
+        toks, lens, im_rolled, tie_row, protos, n=space.ngram,
+        dim=space.dim, alphabet=space.alphabet_size, bb=plan["bb"],
+        bw=plan["bw"], bs=plan["bs"], double_buffer=double_buffer)
+    return out[:b, :s]

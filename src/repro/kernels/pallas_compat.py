@@ -12,14 +12,30 @@ import jax
 try:  # jax >= 0.4.31 style
     from jax.experimental.pallas import tpu as pltpu
     VMEM = pltpu.VMEM
+    #: The "compiler places it" memory space — inputs a kernel DMAs
+    #: manually (e.g. the double-buffered prototype stream) instead of
+    #: receiving as pipelined VMEM blocks.
+    ANY = (pltpu.ANY if hasattr(pltpu, "ANY")
+           else pltpu.TPUMemorySpace.ANY)  # older spelling
+    make_async_copy = pltpu.make_async_copy
+
+    def SemaphoreDMA(shape):
+        """DMA-completion semaphore scratch (one slot per buffer)."""
+        return pltpu.SemaphoreType.DMA(shape)
 
     def CompilerParams(**kw):
         if hasattr(pltpu, "CompilerParams"):
             return pltpu.CompilerParams(**kw)
         return pltpu.TPUCompilerParams(**kw)  # older spelling
 except ImportError:  # pragma: no cover - pallas-tpu always importable in CI
+    ANY = None
+    make_async_copy = None
+
     def VMEM(shape, dtype):
         return jax.ShapeDtypeStruct(shape, dtype)
+
+    def SemaphoreDMA(shape):
+        return None
 
     def CompilerParams(**kw):
         return None

@@ -21,42 +21,88 @@ Options (``ProfilerConfig.backend_options``, all validated here so a bad
 tile size is a :class:`ValueError` at session construction — never a
 Pallas shape crash mid-profile):
 
-    bb  batch-tile rows, power of two (default 8).
+    bb  batch-tile rows, power of two (default 8), at most the padded
+        configured batch.
     bw  word-tile lanes, positive (default 128; clamped to W).
-    bs  prototype rows per kernel call (default 4096) — bounds the
-        VMEM-resident prototype tile and agreement accumulator.
+    bs  prototype rows per kernel chunk, multiple of 128 (default 4096)
+        — bounds the VMEM-resident prototype slab and accumulator.
+    autotune        bool: resolve bb/bw/bs from the on-disk tile cache
+        (:mod:`repro.kernels.autotune`) at the first profiled batch,
+        measuring once per (platform, device kind, B, W, S, dim) key.
+        Explicit tile options win over autotune (warned once).
+    autotune_cache  str: cache file override (else the
+        ``REPRO_AUTOTUNE_CACHE`` env var / ``~/.cache/repro/``).
 """
 
 from __future__ import annotations
+
+import warnings
 
 import jax
 
 from repro.pipeline.backend import _BackendBase, register_backend
 from repro.pipeline.config import ProfilerConfig
 
-#: option name -> (default, validator description)
 _TILE_OPTIONS = ("bb", "bw", "bs")
 _DEFAULTS = {"bb": 8, "bw": 128, "bs": 4096}
 
+#: warn only once per process when explicit tiles silence autotune
+_warned_autotune_override = False
 
-def _validated_tiles(config: ProfilerConfig) -> dict[str, int]:
-    """Read bb/bw/bs from ``backend_options``, failing with friendly errors."""
+
+def _validated_options(config: ProfilerConfig
+                       ) -> tuple[dict[str, int], set[str], bool,
+                                  str | None]:
+    """Parse/validate backend options, failing with friendly errors.
+
+    Returns ``(tiles, explicit, autotune, cache_path)`` where
+    ``explicit`` names the tile options the user pinned.
+    """
     tiles = dict(_DEFAULTS)
+    explicit: set[str] = set()
+    autotune = False
+    cache_path: str | None = None
     for name, value in config.backend_options:
+        if name == "autotune":
+            if not isinstance(value, bool):
+                raise ValueError(
+                    f"pallas_fused option 'autotune' must be a bool, "
+                    f"got {value!r}")
+            autotune = value
+            continue
+        if name == "autotune_cache":
+            if not isinstance(value, str) or not value:
+                raise ValueError(
+                    f"pallas_fused option 'autotune_cache' must be a "
+                    f"non-empty path string, got {value!r}")
+            cache_path = value
+            continue
         if name not in _TILE_OPTIONS:
             raise ValueError(
-                f"pallas_fused got unknown option {name!r}; it takes only "
-                f"tile sizes {_TILE_OPTIONS} (ints)")
+                f"pallas_fused got unknown option {name!r}; it takes tile "
+                f"sizes {_TILE_OPTIONS} (ints) plus 'autotune' (bool) and "
+                f"'autotune_cache' (path)")
         if isinstance(value, bool) or not isinstance(value, int) or value < 1:
             raise ValueError(
                 f"pallas_fused option {name!r} must be a positive int, "
                 f"got {value!r}")
         tiles[name] = value
+        explicit.add(name)
     if tiles["bb"] & (tiles["bb"] - 1):
         raise ValueError(
             f"pallas_fused option 'bb' must be a power of two so every "
             f"padded batch tiles evenly, got {tiles['bb']}")
-    return tiles
+    padded_batch = 8 * ((config.batch_size + 7) // 8)
+    if "bb" in explicit and tiles["bb"] > padded_batch:
+        raise ValueError(
+            f"pallas_fused option 'bb'={tiles['bb']} exceeds the padded "
+            f"batch ({config.batch_size} reads pad to {padded_batch}); "
+            f"lower bb or raise batch_size")
+    if "bs" in explicit and tiles["bs"] % 128:
+        raise ValueError(
+            f"pallas_fused option 'bs' must be a multiple of 128 (the "
+            f"prototype-axis output tile), got {tiles['bs']}")
+    return tiles, explicit, autotune, cache_path
 
 
 @register_backend("pallas_fused")
@@ -67,7 +113,20 @@ class PallasFusedBackend(_BackendBase):
 
     def __init__(self, config: ProfilerConfig):
         super().__init__(config)
-        self.tiles = _validated_tiles(config)
+        (self.tiles, self._explicit, self._autotune,
+         self._autotune_cache) = _validated_options(config)
+        if self._autotune and self._explicit:
+            global _warned_autotune_override
+            if not _warned_autotune_override:
+                _warned_autotune_override = True
+                warnings.warn(
+                    "pallas_fused: explicit tile options "
+                    f"{sorted(self._explicit)} override autotune=true; "
+                    "the autotuner will not run for this backend",
+                    stacklevel=2)
+            self._autotune = False
+        #: (S, L) shape the cached tuning was resolved for
+        self._tuned_for: tuple[int, int] | None = None
 
     # -- Backend protocol (standalone kernels; RefDB build + sharded) ------
     def encode(self, tokens: jax.Array, lengths: jax.Array) -> jax.Array:
@@ -80,6 +139,27 @@ class PallasFusedBackend(_BackendBase):
         return ops.am_agreement(queries, prototypes, self.space.dim,
                                 "matmul")
 
+    def _resolve_tiles(self, num_prototypes: int, read_len: int
+                       ) -> dict[str, int]:
+        """Tiles for this batch; runs/reads the autotuner cache lazily.
+
+        The tuner keys on the configured batch plus the live (S, L), so
+        the first profiled batch pays the sweep (or a cache read) and
+        every later batch — and every other process on the same device
+        kind — reuses the same deterministic choice.
+        """
+        if not self._autotune:
+            return self.tiles
+        if self._tuned_for != (num_prototypes, read_len):
+            from repro.kernels import autotune
+            tiles, _ = autotune.tune(
+                self.space, batch=self.config.batch_size,
+                num_prototypes=num_prototypes, read_len=read_len,
+                path=self._autotune_cache)
+            self.tiles = {**self.tiles, **tiles}
+            self._tuned_for = (num_prototypes, read_len)
+        return self.tiles
+
     # -- fused capability (ProfilingSession.classify_batch dispatch) -------
     def tokens_agreement(self, tokens: jax.Array, lengths: jax.Array,
                          prototypes: jax.Array) -> jax.Array:
@@ -88,7 +168,7 @@ class PallasFusedBackend(_BackendBase):
         The encoded queries exist only as VMEM tiles inside the kernel.
         """
         from repro.kernels import ops
-        t = self.tiles
+        t = self._resolve_tiles(prototypes.shape[0], tokens.shape[1])
         return ops.fused_agreement(
             tokens, lengths, self.im, self.tie, prototypes, self.space,
             bb=t["bb"], bw=min(t["bw"], self.space.num_words), bs=t["bs"])

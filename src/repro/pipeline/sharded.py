@@ -52,7 +52,7 @@ from repro.core import assoc_memory
 from repro.core.assoc_memory import RefDB
 from repro.distributed import sharding
 from repro.distributed.sharding import shard_map_compat as _shard_map
-from repro.kernels.ops import pad_to_multiple
+from repro.core.bitops import pad_to_multiple
 from repro.pipeline.backend import register_backend, resolve_backend
 from repro.pipeline.config import ProfilerConfig
 

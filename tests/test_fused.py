@@ -62,6 +62,10 @@ def _fused_agreement(space, toks, lens, protos, **tiles):
     (512, 8, 5, 6, 9, {}),                        # reads shorter than ngram
     (2048, 16, 12, 150, 300, {"bs": 128}),        # prototype-axis chunking
     (512, 5, 16, 60, 7, {"bb": 4, "bw": 4}),      # tiny tiles
+    (512, 5, 8, 40, 387, {"bs": 128}),            # odd S, multi-chunk grid:
+                                                  # S % bs != 0, pad-once
+    (512, 5, 8, 40, 129, {"bs": 256}),            # bs re-balanced below ask
+    (1056, 8, 4, 50, 260, {"bw": 8, "bs": 128}),  # odd S x odd word tile
 ])
 def test_fused_kernel_matches_reference(dim, ngram, b, length, s, tiles):
     space = HDSpace(dim=dim, ngram=ngram, z_threshold=3.0)
@@ -73,6 +77,33 @@ def test_fused_kernel_matches_reference(dim, ngram, b, length, s, tiles):
     np.testing.assert_array_equal(
         _fused_agreement(space, toks, lens, protos, **tiles),
         _reference_agreement(space, toks, lens, protos))
+
+
+def test_fused_double_buffer_path_matches_reference():
+    """The manual-DMA double-buffered prototype stream is bit-exact too
+    (interpret mode executes the async copies synchronously)."""
+    space = HDSpace(dim=512, ngram=5, z_threshold=3.0)
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 4, (8, 50)).astype(np.int32)
+    lens = rng.integers(0, 51, 8).astype(np.int32)
+    protos = np.asarray(item_memory.make_item_memory(space))
+    protos = np.tile(protos, (80, 1))[:300]
+    np.testing.assert_array_equal(
+        _fused_agreement(space, toks, lens, protos, bs=128,
+                         double_buffer=True),
+        _reference_agreement(space, toks, lens, protos))
+
+
+def test_fused_tile_plan_pads_once():
+    """Regression for the old per-chunk 128-row pad: an odd S is padded
+    once to the chunk grid, wasting less than one chunk in total."""
+    plan = ops.fused_tile_plan(16, 387, 16, bs=129)
+    assert plan["bs"] % 128 == 0
+    assert plan["s_pad"] == plan["n_chunks"] * plan["bs"]
+    assert plan["s_pad"] - 387 < plan["bs"]
+    # tiny bs requests are clamped, not allowed to explode the pad
+    plan = ops.fused_tile_plan(16, 300, 16, bs=8)
+    assert plan["bs"] >= 128 and plan["s_pad"] - 300 < plan["bs"]
 
 
 # -- backend + session ------------------------------------------------------
@@ -115,7 +146,7 @@ def test_fused_tile_options_through_config(sample):
     ref = ProfilingSession(_config(backend="reference"))
     ref.build_refdb(sample.genomes)
     s = ProfilingSession(_config(backend_options={"bb": 4, "bw": 4,
-                                                  "bs": 8}))
+                                                  "bs": 128}))
     s.build_refdb(sample.genomes)
     assert s.profile(sample).to_json() == ref.profile(sample).to_json()
 
@@ -169,12 +200,34 @@ def test_fused_through_profiling_service(sample):
     ({"bb": True}, "positive int"),
     ({"bw": "wide"}, "positive int"),
     ({"block": 64}, "unknown option"),
+    ({"bs": 100}, "multiple of 128"),
+    ({"bb": 64}, "padded batch"),          # config batch_size=16 pads to 16
+    ({"autotune": 1}, "must be a bool"),
+    ({"autotune_cache": ""}, "non-empty path"),
 ])
 def test_fused_tile_validation_is_friendly(options, match):
     """Bad tile sizes fail at session construction with a ValueError —
     never a Pallas shape crash mid-profile."""
     with pytest.raises(ValueError, match=match):
         ProfilingSession(_config(backend_options=options))
+
+
+def test_fused_explicit_tiles_override_autotune(sample):
+    """autotune=true plus explicit tiles: explicit wins, warned once."""
+    from repro.pipeline import fused as fused_mod
+
+    fused_mod._warned_autotune_override = False
+    with pytest.warns(UserWarning, match="override autotune"):
+        s = ProfilingSession(_config(
+            backend_options={"autotune": True, "bb": 4}))
+    assert s.backend._autotune is False
+    assert s.backend.tiles["bb"] == 4
+    # second construction: same override, no second warning
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        ProfilingSession(_config(backend_options={"autotune": True,
+                                                  "bb": 4}))
 
 
 # -- registry completeness (bugfix satellite) --------------------------------
