@@ -1,39 +1,60 @@
-"""Acc-Demeter device-model benchmark: accuracy-vs-noise + Table 3 costs.
+"""Acc-Demeter device-model benchmark: noise sweeps, MLC recovery, co-design.
 
-Two artifacts, both through the simulated PCM substrate in ``repro.accel``:
+Four artifacts, all through the simulated substrates in ``repro.accel``,
+written to ``BENCH_accel.json``:
 
-1. **Noise sweep** (Karunaratne-style robustness curve): the AFS-analogue
-   sample profiled through the ``pcm_sim`` backend while stepping read
+1. **Noise sweep** (Karunaratne-style robustness curve, PCM): the
+   AFS-analogue sample profiled through ``pcm_sim`` while stepping read
    noise (and, in full mode, programming noise), emitting
    precision/recall/L1/unmapped at every level.  Level 0 doubles as the
    zero-noise bit-exactness check: its metrics equal the digital
    reference's by construction.
-2. **Cost model** (Table 3 analogue): the analytical 65nm/PCM
-   latency/energy/area breakdown of the same AM at the production HD
-   dimension, including the paper's headline Mbp/J metric.
+2. **Multi-bit recovery** (PCM): the same workload at a read-noise point
+   chosen so *binary* cells degrade, re-run with 4- and 8-level MLC
+   cells — whose per-level noise shrinks by ``levels - 1`` — recovering
+   the accuracy the binary AM lost.
+3. **Noise-aware co-design** (racetrack): the shift-faulted sweep point
+   profiled against the naive RefDB and against the noise-aware build
+   (``ProfilerConfig(noise_aware_refdb=True)``), demonstrating the
+   write-verify + retraining pass recovering reads the naive build
+   loses to track misalignment.
+4. **Cost comparison** (Table 3 analogue): the analytical 65nm/PCM and
+   domain-wall/racetrack latency/energy/area breakdowns of the same AM
+   at the production HD dimension, including the paper's headline Mbp/J.
 
-``--smoke`` shrinks the community and sweep so CI can run this end to
-end in seconds.
+``--smoke`` shrinks the communities and sweeps so CI can run end to end
+in seconds; ``--substrate`` restricts the run to one substrate's
+sections (CI runs both).
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import pathlib
 
 import numpy as np
 
 from benchmarks import common
-from repro.accel import CrossbarConfig, accel_cost, noise_sweep
+from repro.accel import (CrossbarConfig, accel_cost, noise_sweep,
+                         racetrack_cost)
 from repro.core import HDSpace
 from repro.genomics import synth
-from repro.pipeline import ProfilerConfig, ProfilingSession
+from repro.pipeline import ArraySource, ProfilerConfig, ProfilingSession
 
 READ_LEN = 150
 
 SMOKE_SPACE = HDSpace(dim=512, ngram=8, z_threshold=3.0)
 SMOKE_CONFIG = ProfilerConfig(space=SMOKE_SPACE, window=1024, batch_size=64,
                               backend="pcm_sim")
+
+#: Device-study community (full mode): small enough that a dozen profiled
+#: sweep points stay cheap, large enough that the margins behave like the
+#: production design point.
+DEVICE_SPACE = HDSpace(dim=2048, ngram=12, z_threshold=4.0)
+DEVICE_CONFIG = ProfilerConfig(space=DEVICE_SPACE, window=2048,
+                               batch_size=128, backend="pcm_sim")
 
 
 def _smoke_workload():
@@ -45,11 +66,86 @@ def _smoke_workload():
     return genomes, toks, lens, ab
 
 
-def run(community=None, emit=common.emit, *, smoke: bool = False) -> dict:
+def _device_workload():
+    spec = synth.CommunitySpec(num_species=8, genome_len=20_000, seed=5)
+    genomes, toks, lens, _, true_ab = synth.make_sample(
+        spec, num_reads=400, present=[1, 3, 5])
+    return genomes, toks, lens, true_ab
+
+
+def _profile_l1(config: ProfilerConfig, genomes, toks, lens, true_ab,
+                refdb=None) -> dict:
+    session = ProfilingSession(config)
+    db = refdb if refdb is not None else session.build_refdb(genomes)
+    report = session.profile(ArraySource(toks, lens), refdb=db)
+    ab = np.asarray(report.abundance)
+    return {"l1": float(np.abs(ab - true_ab).sum()),
+            "unmapped_frac": report.unmapped_reads / report.total_reads,
+            "multi_frac": report.multi_reads / report.total_reads}
+
+
+def _multibit_section(config, genomes, toks, lens, true_ab, sigmas,
+                      emit) -> list[dict]:
+    """Accuracy at each (read noise, cell levels) pair; binary degrades
+    at the high-noise points, MLC cells recover (noise scales 1/(L-1))."""
+    points = []
+    for sigma in sigmas:
+        for levels in (2, 4, 8):
+            opts = dict(config.options)
+            opts.update(read_sigma=sigma, levels=levels, seed=3)
+            cfg = dataclasses.replace(
+                config, backend="pcm_sim",
+                backend_options=tuple(sorted(opts.items())))
+            row = _profile_l1(cfg, genomes, toks, lens, true_ab)
+            row.update(read_sigma=sigma, levels=levels)
+            points.append(row)
+            emit(f"accel.multibit.sigma_{sigma:g}.levels_{levels}",
+                 row["l1"], f"unmapped={row['unmapped_frac']:.3f}")
+    return points
+
+
+def _codesign_section(config, genomes, toks, lens, true_ab, emit,
+                      shift: float = 0.5) -> dict:
+    """Naive vs noise-aware RefDB at the shift-faulted racetrack point."""
+    opts = (("seed", 3), ("shift_fault_rate", shift))
+    naive_cfg = dataclasses.replace(config, backend="racetrack_sim",
+                                    backend_options=opts)
+    aware_cfg = dataclasses.replace(naive_cfg, noise_aware_refdb=True,
+                                    noise_aware_iters=2)
+    naive = _profile_l1(naive_cfg, genomes, toks, lens, true_ab)
+    aware = _profile_l1(aware_cfg, genomes, toks, lens, true_ab)
+    emit("accel.codesign.naive.l1", naive["l1"],
+         f"unmapped={naive['unmapped_frac']:.3f}")
+    emit("accel.codesign.noise_aware.l1", aware["l1"],
+         f"unmapped={aware['unmapped_frac']:.3f}")
+    return {"backend": "racetrack_sim", "options": dict(opts),
+            "naive": naive, "noise_aware": aware}
+
+
+def _cost_json(cost) -> dict:
+    return {"substrate": cost.substrate,
+            "rows": [[n, round(pj, 3), round(pct, 2)]
+                     for n, pj, pct in cost.energy_rows()],
+            "total_pj_per_read": cost.total_pj,
+            "program_pj": cost.program_pj,
+            "latency_ns_per_read": cost.latency_ns,
+            "area_mm2": cost.total_area_mm2,
+            "mbp_per_joule": cost.mbp_per_joule(READ_LEN),
+            "num_arrays": cost.num_arrays}
+
+
+def run(community=None, emit=common.emit, *, smoke: bool = False,
+        substrate: str = "both",
+        out: str | pathlib.Path = "BENCH_accel.json") -> dict:
+    run_pcm = substrate in ("pcm", "both")
+    run_rt = substrate in ("racetrack", "both")
     if smoke:
         genomes, toks, lens, true_ab = _smoke_workload()
         config = SMOKE_CONFIG
         sweeps = {"read_sigma": (0.0, 0.1)}
+        mb_sigmas = (0.0, 1.2)
+        device = (genomes, toks, lens, true_ab)
+        device_config = config
     else:
         community = community or common.afs_small()
         genomes = community.genomes
@@ -58,43 +154,73 @@ def run(community=None, emit=common.emit, *, smoke: bool = False) -> dict:
                                 batch_size=256, backend="pcm_sim")
         sweeps = {"read_sigma": (0.0, 0.02, 0.05, 0.1, 0.2),
                   "prog_sigma": (0.0, 0.05, 0.1, 0.2)}
+        mb_sigmas = (0.0, 0.6, 1.2, 1.8)
+        device = _device_workload()
+        device_config = DEVICE_CONFIG
 
-    # -- 1. accuracy vs device non-ideality --------------------------------
+    results: dict = {"mode": "smoke" if smoke else "full",
+                     "substrates": [s for s, on in
+                                    (("pcm", run_pcm), ("racetrack", run_rt))
+                                    if on]}
+
+    # -- 1. accuracy vs device non-ideality (PCM) --------------------------
     # One digital build shared by every knob and level (encode is
     # bit-exact across backends, so the prototypes never change).
-    builder = ProfilingSession(dataclasses.replace(config,
-                                                   backend="reference"))
-    refdb = builder.build_refdb(genomes)
+    if run_pcm:
+        builder = ProfilingSession(dataclasses.replace(
+            config, backend="reference", backend_options=(),
+            noise_aware_refdb=False))
+        refdb = builder.build_refdb(genomes)
+        results["sweeps"] = {}
+        for knob, levels in sweeps.items():
+            points = noise_sweep(genomes, toks, lens, true_ab,
+                                 config=config, knob=knob, levels=levels,
+                                 refdb=refdb)
+            results["sweeps"][knob] = [
+                {"value": p.value, "l1": p.metrics.l1_error,
+                 "precision": p.metrics.precision,
+                 "recall": p.metrics.recall,
+                 "unmapped_frac": p.unmapped_frac} for p in points]
+            for p in points:
+                tag = f"accel.sweep.{knob}_{p.value:g}"
+                emit(f"{tag}.precision", p.metrics.precision,
+                     f"recall={p.metrics.recall:.4f}")
+                emit(f"{tag}.l1", p.metrics.l1_error,
+                     f"unmapped={p.unmapped_frac:.4f}")
 
-    results: dict = {}
-    for knob, levels in sweeps.items():
-        points = noise_sweep(genomes, toks, lens, true_ab, config=config,
-                             knob=knob, levels=levels, refdb=refdb)
-        results[knob] = points
-        for p in points:
-            tag = f"accel.sweep.{knob}_{p.value:g}"
-            emit(f"{tag}.precision", p.metrics.precision,
-                 f"recall={p.metrics.recall:.4f}")
-            emit(f"{tag}.l1", p.metrics.l1_error,
-                 f"unmapped={p.unmapped_frac:.4f}")
+        # -- 2. multi-bit cells recover what binary cells lose -------------
+        results["multibit"] = _multibit_section(
+            device_config, *device, mb_sigmas, emit)
 
-    # -- 2. Table-3-style analytical cost at the production design point ---
+    # -- 3. noise-aware RefDB co-design on the shift-faulted racetrack -----
+    if run_rt:
+        results["codesign"] = _codesign_section(
+            device_config, *device, emit)
+
+    # -- 4. Table-3-style analytical cost, both substrates -----------------
     window = 8192
     num_protos = int(sum(-(-len(g) // window) for g in genomes.values()))
     sp = common.PROD_SPACE
-    cost = accel_cost(num_protos=num_protos, dim=sp.dim, read_len=READ_LEN,
-                      ngram=sp.ngram, xcfg=CrossbarConfig())
-    for name, pj, pct in cost.energy_rows():
-        emit(f"accel.energy.{name}.pj_per_read", pj, f"{pct:.1f}%")
-    emit("accel.energy.total.pj_per_read", cost.total_pj,
-         f"program_once={cost.program_pj:.0f}pJ")
-    emit("accel.energy.total.mbp_per_joule", cost.mbp_per_joule(READ_LEN),
-         "paper:9.45Mbp/J(PCM)")
-    emit("accel.latency.ns_per_read", cost.latency_ns,
-         f"{cost.reads_per_s:.0f}reads/s")
-    emit("accel.area.total_mm2", cost.total_area_mm2,
-         f"arrays={cost.num_arrays}")
-    results["cost"] = cost
+    results["cost"] = {}
+    for name, on, fn in (("pcm", run_pcm, accel_cost),
+                         ("racetrack", run_rt, racetrack_cost)):
+        if not on:
+            continue
+        cost = fn(num_protos=num_protos, dim=sp.dim, read_len=READ_LEN,
+                  ngram=sp.ngram, xcfg=CrossbarConfig())
+        results["cost"][name] = _cost_json(cost)
+        for row, pj, pct in cost.energy_rows():
+            emit(f"accel.{name}.energy.{row}.pj_per_read", pj, f"{pct:.1f}%")
+        emit(f"accel.{name}.energy.total.pj_per_read", cost.total_pj,
+             f"program_once={cost.program_pj:.0f}pJ")
+        emit(f"accel.{name}.energy.total.mbp_per_joule",
+             cost.mbp_per_joule(READ_LEN), "paper:9.45Mbp/J(PCM)")
+        emit(f"accel.{name}.latency.ns_per_read", cost.latency_ns,
+             f"{cost.reads_per_s:.0f}reads/s")
+        emit(f"accel.{name}.area.total_mm2", cost.total_area_mm2,
+             f"arrays={cost.num_arrays}")
+
+    pathlib.Path(out).write_text(json.dumps(results, indent=2))
     return results
 
 
@@ -102,9 +228,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny community + short sweep (CI-sized)")
+    ap.add_argument("--substrate", choices=("pcm", "racetrack", "both"),
+                    default="both", help="restrict to one substrate's "
+                    "sections (the cost table always names its substrate)")
+    ap.add_argument("--out", default="BENCH_accel.json",
+                    help="machine-readable results path")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, substrate=args.substrate, out=args.out)
 
 
 if __name__ == "__main__":

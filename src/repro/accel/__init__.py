@@ -1,35 +1,68 @@
-"""Acc-Demeter device-model subsystem: the simulated PCM-crossbar substrate.
+"""Acc-Demeter device-model subsystem: simulated in-memory AM substrates.
 
 The paper's accelerator (§5-6) runs the AM search inside analog
-memristor crossbars; this package models that substrate end to end so the
-platform-independence claim is testable in software:
+memristor crossbars; this package models that substrate end to end — and
+generalizes it behind an explicit protocol, so the platform-independence
+claim is testable in software on more than one device physics:
 
-* :mod:`~repro.accel.device` — PCM cell physics: conductance levels,
-  programming/read noise, drift, stuck-at faults (:class:`DeviceConfig`).
-* :mod:`~repro.accel.crossbar` — differential crossbar tiling, bit-line
-  current accumulation, behavioral ADC (:class:`CrossbarConfig`).
-* :mod:`~repro.accel.backend_pcm` — the registered ``pcm_sim`` execution
-  backend (bit-exact with ``reference`` at zero noise).
-* :mod:`~repro.accel.cost` — analytical 65nm/PCM latency, energy and
-  area model (:func:`accel_cost`, Table-3-style breakdowns).
+* :mod:`~repro.accel.substrate` — the :class:`Substrate` protocol
+  (program / read-weights / noise-event / cost hooks) + the substrate
+  registry and declared per-substrate options.
+* :mod:`~repro.accel.device` — PCM cell physics: multi-bit conductance
+  levels, programming/read noise, drift, stuck-at faults
+  (:class:`DeviceConfig`, :class:`PCMSubstrate`).
+* :mod:`~repro.accel.racetrack` — domain-wall nanowire physics:
+  shift-based access faults, stuck domains, transverse-read sensing
+  (:class:`RacetrackConfig`, :class:`RacetrackSubstrate`).
+* :mod:`~repro.accel.crossbar` — substrate-generic differential tiling,
+  bit-line accumulation, behavioral ADC (:class:`CrossbarConfig`).
+* :mod:`~repro.accel.backend_pcm` — the registered ``pcm_sim`` and
+  ``racetrack_sim`` execution backends (bit-exact with ``reference`` at
+  zero noise on every substrate).
+* :mod:`~repro.accel.cost` — analytical latency, energy and area models
+  per substrate (:func:`accel_cost`, :func:`racetrack_cost`,
+  Table-3-style breakdowns).
 * :mod:`~repro.accel.sweep` — accuracy-vs-non-ideality sweep harness
   (:func:`noise_sweep`).
+* :mod:`~repro.accel.codesign` — noise-aware RefDB co-design: fault-aware
+  write-verify programming (:func:`write_verify_bits`) plus a
+  margin-maximizing bundling pass on simulated readout, validation-gated
+  (:func:`noise_aware_refdb`).
 
-See ``docs/ACC_DEMETER.md`` for the paper-section-to-module map.
+See ``docs/ACC_DEMETER.md`` for the paper-section-to-module map and the
+substrate comparison matrix.
 """
 
-from repro.accel.device import DeviceConfig, program_conductances
+from repro.accel.substrate import (Substrate, available_substrates,
+                                   narrowed_schema, register_substrate,
+                                   resolve_substrate, substrate_options,
+                                   union_schema)
+from repro.accel.device import (DeviceConfig, PCMSubstrate,
+                                program_conductances)
+from repro.accel.racetrack import RacetrackConfig, RacetrackSubstrate
 from repro.accel.crossbar import (CrossbarConfig, adc_quantize,
-                                  crossbar_agreement, program_prototypes)
-from repro.accel.backend_pcm import PCMBackend, split_options
-from repro.accel.cost import UMC65_PCM, CostReport, PCMChip, accel_cost
+                                  crossbar_agreement, program_prototypes,
+                                  write_verify_bits)
+from repro.accel.backend_pcm import (PCMBackend, PCMSimBackend,
+                                     RacetrackSimBackend, SubstrateBackend,
+                                     split_options)
+from repro.accel.cost import (DW_RACETRACK, UMC65_PCM, CostReport, PCMChip,
+                              RacetrackChip, accel_cost, racetrack_cost)
 from repro.accel.sweep import SWEEPABLE, SweepPoint, noise_sweep
+from repro.accel.codesign import noise_aware_refdb
 
 __all__ = [
-    "DeviceConfig", "program_conductances",
+    "Substrate", "available_substrates", "narrowed_schema",
+    "register_substrate", "resolve_substrate", "substrate_options",
+    "union_schema",
+    "DeviceConfig", "PCMSubstrate", "program_conductances",
+    "RacetrackConfig", "RacetrackSubstrate",
     "CrossbarConfig", "adc_quantize", "crossbar_agreement",
-    "program_prototypes",
-    "PCMBackend", "split_options",
-    "UMC65_PCM", "CostReport", "PCMChip", "accel_cost",
+    "program_prototypes", "write_verify_bits",
+    "PCMBackend", "PCMSimBackend", "RacetrackSimBackend",
+    "SubstrateBackend", "split_options",
+    "DW_RACETRACK", "UMC65_PCM", "CostReport", "PCMChip", "RacetrackChip",
+    "accel_cost", "racetrack_cost",
     "SWEEPABLE", "SweepPoint", "noise_sweep",
+    "noise_aware_refdb",
 ]

@@ -1,129 +1,129 @@
-"""``pcm_sim``: the Acc-Demeter simulated-substrate execution backend.
+"""``pcm_sim`` / ``racetrack_sim``: the simulated-substrate backends.
 
-Registers a fifth backend in the :mod:`repro.pipeline.backend` registry
-whose AM search (step 4) runs through the simulated differential PCM
-crossbar of :mod:`repro.accel.crossbar`, while read conversion (step 3)
-stays on the digital reference encoder — mirroring the paper's split
-between Acc-Demeter's CMOS encoding periphery (§5.2-5.3) and its analog
+One generic :class:`SubstrateBackend` runs the AM search (step 4) through
+the substrate-generic differential array simulator of
+:mod:`repro.accel.crossbar`, while read conversion (step 3) stays on the
+digital reference encoder — mirroring the paper's split between
+Acc-Demeter's CMOS encoding periphery (§5.2-5.3) and its analog
 in-memory AM (§5.4).  Because ``encode`` is bit-exact with every other
 backend, the RefDB cache remains shared across all backends and the
 digital prototypes are what gets "programmed" (with noise) into the
-crossbar on each search.
+device on each search.
 
-Device and geometry knobs thread through ``ProfilerConfig.backend_options``::
+Which device physics runs underneath is a registered
+:class:`repro.accel.substrate.Substrate`; the two backend names are the
+same class with different default substrates, and the ``substrate``
+option can override either::
 
     ProfilerConfig(backend="pcm_sim",
-                   backend_options={"preset": "pcm", "read_sigma": 0.05,
-                                    "rows": 256, "adc_bits": 8, "seed": 1})
+                   backend_options={"preset": "pcm", "levels": 4,
+                                    "read_sigma": 0.5, "adc_bits": 8})
+    ProfilerConfig(backend="racetrack_sim",
+                   backend_options={"preset": "racetrack", "seed": 1})
 
-With the default (ideal, zero-noise) options the backend is bit-exact
-with ``reference`` — enforced by the registry-wide parity tests — and
-with noise enabled it is deterministic in the ``seed`` option.
+Every option is declared (see ``profile_run --list-backends``): the
+registered schema is the union over substrates, and once the substrate is
+chosen the option set narrows to geometry + that substrate's knobs, so a
+PCM-only knob under ``substrate=racetrack`` fails with the uniform
+unknown-option error.  With default (ideal, zero-noise) options both
+backends are bit-exact with ``reference`` — enforced per substrate by the
+shared contract test — and with noise enabled they are deterministic in
+the ``seed`` option.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
 
 from repro import obs
-from repro.accel import device
+from repro.accel import device as _device          # registers "pcm"
+from repro.accel import racetrack as _racetrack    # registers "racetrack"
+from repro.accel import substrate as substrate_mod
 from repro.accel.crossbar import (CrossbarConfig, crossbar_read,
                                   program_prototypes)
-from repro.accel.device import DeviceConfig
+from repro.accel.substrate import (CROSSBAR_KEYS, Substrate,
+                                   resolve_substrate, union_schema)
 from repro.pipeline.backend import ReferenceBackend, register_backend
 from repro.pipeline.config import ProfilerConfig
 
-#: Option names routed to CrossbarConfig; everything else goes to
-#: DeviceConfig (plus the "preset" selector handled here).
-_CROSSBAR_KEYS = frozenset(f.name for f in dataclasses.fields(CrossbarConfig))
-_DEVICE_KEYS = frozenset(f.name for f in dataclasses.fields(DeviceConfig))
-_INT_KEYS = _CROSSBAR_KEYS | {"seed"}
-
-_PRESETS = {
-    "ideal": DeviceConfig,
-    "pcm": DeviceConfig.pcm,
-}
+del _device, _racetrack  # imported for their registration side effects
 
 
-def split_options(options: dict) -> tuple[CrossbarConfig, DeviceConfig]:
-    """Build (CrossbarConfig, DeviceConfig) from flat backend options.
+def split_options(options: dict, *, backend: str = "pcm_sim",
+                  default_substrate: str = "pcm"
+                  ) -> tuple[CrossbarConfig, Substrate]:
+    """Build ``(CrossbarConfig, Substrate)`` from flat backend options.
 
-    ``preset`` selects the device baseline ("ideal" default, "pcm" =
-    literature-parameterized noisy device); named device fields override
-    the preset; unknown names or mistyped values raise a ValueError
-    naming the option (so CLI typos surface as messages, not tracebacks
-    from deep inside jax).
+    The flat dict is validated against the substrate-narrowed schema
+    (geometry keys + the selected substrate's declared knobs), then split:
+    geometry to :class:`CrossbarConfig`, the rest to the substrate
+    factory.  Unknown names or mistyped values raise the uniform
+    friendly ``ValueError`` (so CLI typos surface as messages, not
+    tracebacks from deep inside jax).
     """
-    opts = dict(options)
-    preset = opts.pop("preset", "ideal")
-    if not isinstance(preset, str) or preset not in _PRESETS:
-        raise ValueError(f"unknown pcm_sim preset {preset!r}; "
-                         f"choose from {sorted(_PRESETS)}")
-    unknown = set(opts) - _CROSSBAR_KEYS - _DEVICE_KEYS
-    if unknown:
+    sub_name = options.get("substrate", default_substrate)
+    if not isinstance(sub_name, str) \
+            or sub_name not in substrate_mod.available_substrates():
+        # Normally pre-empted by the union schema's choices check; kept
+        # for direct callers of this function.
         raise ValueError(
-            f"unknown pcm_sim option(s) {sorted(unknown)}; valid: "
-            f"{sorted(_CROSSBAR_KEYS | _DEVICE_KEYS | {'preset'})}")
-    for name, value in opts.items():
-        if name in _INT_KEYS:
-            if isinstance(value, bool) or not isinstance(value, int):
-                raise ValueError(f"pcm_sim option {name!r} must be an "
-                                 f"integer, got {value!r}")
-        elif isinstance(value, bool) or not isinstance(value, (int, float)):
-            raise ValueError(f"pcm_sim option {name!r} must be a number, "
-                             f"got {value!r}")
-    xcfg = CrossbarConfig(**{k: v for k, v in opts.items()
-                             if k in _CROSSBAR_KEYS})
-    dcfg = _PRESETS[preset](**{k: v for k, v in opts.items()
-                               if k in _DEVICE_KEYS})
-    return xcfg, dcfg
+            f"{backend} option 'substrate' must be one of "
+            f"{list(substrate_mod.available_substrates())}, got {sub_name!r}")
+    narrowed = substrate_mod.narrowed_schema(backend, sub_name)
+    own, _ = narrowed.validate(options)
+    xcfg = CrossbarConfig(**{k: v for k, v in own.items()
+                             if k in CROSSBAR_KEYS})
+    sub_opts = {k: v for k, v in own.items()
+                if k not in CROSSBAR_KEYS and k != "substrate"}
+    return xcfg, resolve_substrate(sub_name, sub_opts)
 
 
-@register_backend("pcm_sim")
-class PCMBackend(ReferenceBackend):
-    """Digital reference encoder + simulated PCM-crossbar AM search.
+class SubstrateBackend(ReferenceBackend):
+    """Digital reference encoder + simulated in-memory AM search.
 
-    The conductance banks are programmed once per distinct prototype
-    array and cached (the hardware's write-once/read-many discipline):
-    every subsequent batch pays only the crossbar *read*.  The cache
-    holds a strong reference to the prototype array it was programmed
-    from, so the identity check can never alias a recycled ``id``.
+    The physical banks are programmed once per distinct prototype array
+    and cached (the hardware's write-once/read-many discipline): every
+    subsequent batch pays only the array *read*.  The cache holds a
+    strong reference to the prototype array it was programmed from, so
+    the identity check can never alias a recycled ``id``.
     """
 
-    name = "pcm_sim"
+    name = "abstract_substrate"
+    default_substrate = "pcm"
 
     def __init__(self, config: ProfilerConfig):
         super().__init__(config)
-        self.crossbar_config, self.device_config = split_options(
-            config.options)
+        self.crossbar_config, self.substrate = split_options(
+            config.options, backend=self.name,
+            default_substrate=self.default_substrate)
         self._program = jax.jit(functools.partial(
             program_prototypes, xcfg=self.crossbar_config,
-            dcfg=self.device_config))
+            substrate=self.substrate))
         self._read = jax.jit(functools.partial(
             crossbar_read, dim=self.space.dim, xcfg=self.crossbar_config,
-            dcfg=self.device_config))
+            substrate=self.substrate))
         # The stats read is a *separate* compiled graph (identical result
         # math, one extra clip-count output) used only when observability
         # is on — the plain read path is byte-for-byte what it always was.
         self._read_stats = jax.jit(functools.partial(
             crossbar_read, dim=self.space.dim, xcfg=self.crossbar_config,
-            dcfg=self.device_config, with_stats=True))
+            substrate=self.substrate, with_stats=True))
         self._programmed: tuple[jax.Array, jax.Array, jax.Array] | None = None
+        prefix = self.name.removesuffix("_sim")
         self._obs = obs.resolve_metrics(None)
         self._m_prog_events = self._obs.counter(
-            "pcm_program_events_total",
-            "Crossbar programming events (prototype-array cache misses).")
+            f"{prefix}_program_events_total",
+            "Array programming events (prototype-array cache misses).")
         self._m_reads = self._obs.counter(
-            "pcm_reads_total", "Crossbar AM read events (one per batch).")
+            f"{prefix}_reads_total", "AM read events (one per batch).")
         self._m_adc_clips = self._obs.counter(
-            "pcm_adc_clips_total",
-            "ADC codes saturated at the converter's range limits.")
+            f"{prefix}_adc_clips_total",
+            "Converter codes saturated at the range limits.")
         self._m_stuck = self._obs.gauge(
-            "pcm_stuck_cells",
-            "Stuck-at fault cells in the programmed banks, by polarity.")
+            f"{prefix}_stuck_cells",
+            "Static fault sites in the programmed banks, by kind.")
 
     def agreement(self, queries: jax.Array, prototypes: jax.Array
                   ) -> jax.Array:
@@ -132,25 +132,45 @@ class PCMBackend(ReferenceBackend):
             # Inside someone else's jit: programming must stay in-graph
             # (and tracers must not leak into the cache).  No metrics
             # here — nothing host-side may touch a traced value.
-            g_pos, g_neg = self._program(prototypes)
-            return self._read(queries, g_pos, g_neg)[:b, :s]
+            s_pos, s_neg = self._program(prototypes)
+            return self._read(queries, s_pos, s_neg)[:b, :s]
         if self._programmed is None or self._programmed[0] is not prototypes:
             self._programmed = (prototypes, *self._program(prototypes))
             if self._obs.enabled:
                 self._note_programmed(self._programmed[1].shape)
-        _, g_pos, g_neg = self._programmed
+        _, s_pos, s_neg = self._programmed
         if self._obs.enabled:
-            out, clips = self._read_stats(queries, g_pos, g_neg)
+            out, clips = self._read_stats(queries, s_pos, s_neg)
             self._m_reads.inc(1)
             self._m_adc_clips.inc(int(clips))
             return out[:b, :s]
-        return self._read(queries, g_pos, g_neg)[:b, :s]
+        return self._read(queries, s_pos, s_neg)[:b, :s]
 
     def _note_programmed(self, bank_shape: tuple[int, ...]) -> None:
-        """Record one programming event + the banks' stuck-cell census."""
+        """Record one programming event + the banks' fault census."""
         self._m_prog_events.inc(1)
         for stream, bank in ((0, "pos"), (1, "neg")):
-            n_on, n_off = device.stuck_cell_counts(
-                bank_shape, self.device_config, stream=stream)
-            self._m_stuck.set(n_on, bank=bank, polarity="on")
-            self._m_stuck.set(n_off, bank=bank, polarity="off")
+            census = self.substrate.fault_census(bank_shape, stream=stream)
+            for kind, n in census.items():
+                self._m_stuck.set(n, bank=bank, polarity=kind)
+
+
+@register_backend("pcm_sim", schema=union_schema("pcm_sim", "pcm"))
+class PCMSimBackend(SubstrateBackend):
+    """The simulated AM search on the PCM crossbar substrate."""
+
+    name = "pcm_sim"
+    default_substrate = "pcm"
+
+
+@register_backend("racetrack_sim",
+                  schema=union_schema("racetrack_sim", "racetrack"))
+class RacetrackSimBackend(SubstrateBackend):
+    """The simulated AM search on the racetrack (domain-wall) substrate."""
+
+    name = "racetrack_sim"
+    default_substrate = "racetrack"
+
+
+#: historical alias (the backend predates the substrate split).
+PCMBackend = PCMSimBackend

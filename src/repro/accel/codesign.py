@@ -1,0 +1,230 @@
+"""Noise-aware RefDB co-design: retrain prototypes on simulated readout.
+
+The memristive-SoC co-design argument (PAPERS.md): a reference database
+built purely digitally is optimal for a noiseless AM, but the device the
+search actually runs on adds programming error, drift residue, shift
+faults and read noise — so the *margin* between a read's true species and
+its best rival, not just the sign, decides accuracy.  This module closes
+the loop: it takes a naively built RefDB and a noisy substrate backend
+config, simulates readout of reference-derived training reads through
+that backend, and nudges the prototypes to maximize the species margin
+under the device's own noise.
+
+The pass has two stages, both validated on held-out reads:
+
+1. **fault-aware programming** (:func:`repro.accel.crossbar
+   .write_verify_bits`): when the backend runs on a simulated substrate,
+   probe the device's deterministic transfer function and re-choose the
+   stored bits to minimize readout bias — pre-rolling content into
+   misaligned racetrack tracks, aligning stored bits with stuck cells.
+   This is the write-verify discipline of real PCM parts, and it is the
+   stage that recovers the statically-faulted sweep points (a shift-
+   faulted racetrack AM goes from most reads UNMAPPED back to near the
+   ideal-device abundance error);
+2. **margin retraining** (perceptron-style, as in MIMHD and the HDC
+   retraining literature, lifted to bundling counters): recover per-bit
+   counters from the binarized prototypes (``±init_scale``), sample
+   seeded training reads from the reference genomes, read their
+   agreement through the *noisy simulated substrate* — the same
+   backend, options and seed the profiling run will use — and for every
+   read whose true-species score fails its best rival or the absolute
+   hit threshold by ``margin`` counts, bundle the read into its species'
+   best prototype (un-bundling it from the rival when the rival was the
+   binding constraint), then re-binarize (ties keep the prior bit).
+
+Every candidate — the naive build, the write-verified build, and each
+retraining iterate — is scored on noisy readout of a held-out validation
+split of the sampled reads, and the best validated candidate is
+returned.  A sweep point where neither stage can help (pure zero-mean
+read noise, a global drift-calibration bias) therefore degenerates to
+the naive build instead of regressing.
+
+Because the readout in step 3 happens through the registered backend, the
+refined database is specific to (backend, backend_options) — which is why
+``ProfilerConfig.refdb_fingerprint`` folds both in when the pass is
+enabled (``noise_aware_refdb=True``), keeping cached naive and refined
+databases from ever colliding.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assoc_memory, bitops, classifier
+from repro.core.assoc_memory import RefDB
+from repro.pipeline.config import ProfilerConfig
+
+
+def _training_reads(db: RefDB, genomes: dict[str, np.ndarray], *,
+                    read_len: int, reads_per_species: int,
+                    rng: np.random.Generator
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Seeded read-like windows from every reference genome + labels."""
+    toks_out, labels = [], []
+    for label, name in enumerate(db.species_names):
+        toks = np.asarray(genomes[name])
+        n = min(read_len, len(toks))
+        row = np.zeros((reads_per_species, read_len), np.int32)
+        starts = rng.integers(0, len(toks) - n + 1, reads_per_species)
+        for i, s in enumerate(starts):
+            row[i, :n] = toks[s:s + n]
+        toks_out.append(row)
+        labels.append(np.full(reads_per_species, label, np.int32))
+    # per-read true length (genomes may be shorter than read_len)
+    lengths = np.concatenate(
+        [np.full(reads_per_species,
+                 min(read_len, len(np.asarray(genomes[name]))), np.int32)
+         for name in db.species_names])
+    return (np.concatenate(toks_out), lengths, np.concatenate(labels))
+
+
+def noise_aware_refdb(db: RefDB, genomes: dict[str, np.ndarray],
+                      config: ProfilerConfig, *, iterations: int = 2,
+                      reads_per_species: int = 48, read_len: int = 256,
+                      margin: int | None = None, init_scale: int = 8,
+                      seed: int = 0) -> RefDB:
+    """Margin-maximizing retraining of ``db`` on simulated noisy readout.
+
+    Args:
+      db: the naively built RefDB (binarized one-shot bundling).
+      genomes: the reference genomes the database was built from.
+      config: the *profiling* config — its backend + backend_options are
+        the simulated substrate the retraining reads through (a digital
+        backend works too; the pass then just sharpens margins against
+        quantization, which is rarely worth the build time).
+      iterations: full passes over the training reads.
+      reads_per_species: seeded training reads sampled per species.
+      read_len: training read length in tokens (clipped per genome).
+      margin: required winning margin in agreement counts before a read
+        stops generating updates; default ``dim // 32``.
+      init_scale: magnitude assigned to each recovered bundling counter;
+        bounds how many disagreeing training reads it takes to flip a
+        naive bit.
+      seed: sampling seed (independent of the device seed on purpose —
+        the device noise is the backend's, the training data is ours).
+
+    Returns:
+      A new RefDB with retrained prototypes; species metadata unchanged.
+    """
+    # Resolved here (not at module import) to keep codesign importable
+    # without triggering backend registration order issues.
+    from repro.pipeline.backend import resolve_backend
+
+    if iterations < 1:
+        raise ValueError("iterations must be >= 1")
+    if margin is None:
+        margin = max(1, config.space.dim // 32)
+    missing = set(db.species_names) - set(genomes)
+    if missing:
+        raise KeyError(f"genomes missing for species {sorted(missing)}")
+
+    be = resolve_backend(config.backend, config)
+    rng = np.random.default_rng(seed)
+    tokens, lengths, labels = _training_reads(
+        db, genomes, read_len=read_len,
+        reads_per_species=reads_per_species, rng=rng)
+
+    # Stage 1: fault-aware programming.  Only meaningful when the backend
+    # exposes a probe-able simulated substrate; digital backends skip it.
+    base_protos = db.prototypes
+    if getattr(be, "substrate", None) is not None:
+        from repro.accel.crossbar import write_verify_bits
+        base_protos = write_verify_bits(
+            db.prototypes, be.crossbar_config, be.substrate)
+
+    # Encode once, digitally (bit-exact on every backend), in batches.
+    qblocks = []
+    bs = config.batch_size
+    for i in range(0, len(tokens), bs):
+        qblocks.append(np.asarray(
+            be.encode(tokens[i:i + bs], lengths[i:i + bs])))
+    queries = np.concatenate(qblocks)
+    qbits = np.asarray(bitops.unpack_bits(queries))[:, :config.space.dim]
+    qpm = (2 * qbits.astype(np.int32) - 1)                 # (B, dim) ±1
+
+    base_bits = np.asarray(
+        bitops.unpack_bits(base_protos))[:, :config.space.dim]
+    counters = (2 * base_bits.astype(np.int32) - 1) * init_scale
+    proto_species = np.asarray(db.proto_species)
+    same = proto_species[None, :] == labels[:, None]        # (B, S_protos)
+    neg = np.iinfo(np.int64).min
+
+    def noisy_agreement(idx, prototypes):
+        out = np.empty((len(idx), len(proto_species)), np.int64)
+        for i in range(0, len(idx), bs):
+            sel = idx[i:i + bs]
+            out[i:i + len(sel)] = np.asarray(
+                be.agreement(queries[sel], prototypes))
+        return out
+
+    # Held-out validation split: candidates (the naive build included)
+    # are scored on noisy readout of reads the updates never saw, and the
+    # best validated prototype set wins — retraining can refuse to "help".
+    split = rng.permutation(len(queries))
+    n_val = max(len(proto_species) // 4, len(queries) // 5)
+    val_idx, train_idx = split[:n_val], split[n_val:]
+
+    def validate(prototypes):
+        """Score a candidate by classifying the held-out reads exactly
+        as step 4 will (species scores, z threshold): first keep the
+        true-species hit rate, then minimize false hits on other species
+        — the failure mode noise actually causes (reads drifting from
+        UNIQUE to MULTI/UNMAPPED and polluting the abundance split)."""
+        agree = noisy_agreement(val_idx, prototypes)
+        res = classifier.from_agreement(
+            jnp.asarray(agree, jnp.int32), db.proto_species,
+            db.num_species, config.space.threshold_bits)
+        hits = np.asarray(res.hits)
+        rows = np.arange(len(val_idx))
+        correct = hits[rows, labels[val_idx]].mean()
+        false = (hits.sum(axis=1) - hits[rows, labels[val_idx]]).mean()
+        return float(correct), -float(false)
+
+    best_score, best_protos = validate(db.prototypes), db.prototypes
+    if base_protos is not db.prototypes:
+        score = validate(base_protos)
+        if score > best_score:
+            best_score, best_protos = score, base_protos
+    prototypes = base_protos
+    for _ in range(iterations):
+        # Noisy simulated readout through the actual profiling backend.
+        # Training reads are re-shuffled every pass: the device keys its
+        # read noise off the query-batch digest, so a fresh batch
+        # composition draws a fresh noise realization — each iteration
+        # sees a new sample of the readout distribution instead of
+        # re-fitting the one realization a fixed order would replay.
+        order = rng.permutation(train_idx)
+        agree = noisy_agreement(order, prototypes)
+        sq, spm = same[order], qpm[order]
+        own = np.where(sq, agree, neg)
+        rival = np.where(sq, neg, agree)
+        own_best = own.argmax(axis=1)                      # proto indices
+        rival_best = rival.argmax(axis=1)
+        rows = np.arange(len(order))
+        # A read fails when its true species doesn't beat the best rival
+        # by ``margin`` — or doesn't clear the classifier's *absolute*
+        # hit threshold (paper Eq. 2) by the same margin: device noise
+        # that shrinks scores pushes reads to UNMAPPED, and bundling the
+        # read back into its prototype is exactly what recovers them.
+        own_score = own[rows, own_best]
+        rival_flag = own_score < rival[rows, rival_best] + margin
+        thr_flag = own_score < config.space.threshold_bits + margin
+        flagged = rival_flag | thr_flag
+        if not flagged.any():
+            break
+        # Bundle the read into its species' best prototype; un-bundle it
+        # from the rival only when the rival was the binding constraint —
+        # the counter-space perceptron step.
+        np.add.at(counters, own_best[flagged], spm[flagged])
+        np.add.at(counters, rival_best[rival_flag], -spm[rival_flag])
+        prototypes = assoc_memory.rebinarize_counters(counters, base_bits)
+        score = validate(prototypes)
+        if score > best_score:
+            best_score, best_protos = score, prototypes
+
+    return RefDB(prototypes=best_protos,
+                 proto_species=db.proto_species,
+                 genome_lengths=db.genome_lengths,
+                 num_species=db.num_species,
+                 species_names=db.species_names)

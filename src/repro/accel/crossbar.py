@@ -1,10 +1,11 @@
-"""Tiled PCM-crossbar associative-memory search (paper §5.4).
+"""Tiled in-memory associative-memory search, generic over substrates.
 
-The AM prototypes live as conductances in fixed-size crossbar arrays; a
-query is applied as word-line voltages and each bit-line current is the
-dot product of the query bits with one prototype's bits (Kirchhoff
-accumulation).  Demeter's similarity is *agreement* (matching bits, both
-1-1 and 0-0), so the simulator models the standard differential design:
+The AM prototypes live as physical state in fixed-size arrays; a query is
+applied to the word lines and each bit line accumulates the dot product
+of the query bits with one prototype's effective cell weights (Kirchhoff
+accumulation on a crossbar, transverse-read popcounts on a racetrack).
+Demeter's similarity is *agreement* (matching bits, both 1-1 and 0-0), so
+the simulator models the standard differential design:
 
   bank 0 stores the prototype bits      and is driven by the query bits,
   bank 1 stores the complement bits     and is driven by the complement,
@@ -13,17 +14,25 @@ accumulation).  Demeter's similarity is *agreement* (matching bits, both
 
 Physical arrays are ``rows x cols``: the HD dimension is split across
 row tiles (each contributing a partial count, digitized by that tile's
-ADC and accumulated digitally) and the prototype set is split across
-column tiles.  Both tilings are expressed with ``vmap`` over a leading
-tile axis, so a community whose AM spans hundreds of arrays is one
-batched matmul, not a Python loop.
+converter and accumulated digitally) and the prototype set is split
+across column tiles.  Both tilings are expressed with ``vmap`` over a
+leading tile axis, so a community whose AM spans hundreds of arrays is
+one batched matmul, not a Python loop.
+
+Everything device-physical is delegated to a
+:class:`repro.accel.substrate.Substrate` (paper §5's PCM crossbar in
+:mod:`repro.accel.device`, the racetrack alternative in
+:mod:`repro.accel.racetrack`): programming turns bits into stored state,
+``read_weights`` turns stored state into the effective per-cell weights
+one read event sees, and ``read_noise`` adds that event's sensing noise
+in count units.  The tiling, the differential trick and the behavioral
+ADC below are substrate-independent.
 
 The ADC is behavioral: the analog front-end recovers a per-tile match
-count in ``[0, rows]`` (current minus the ``g_off`` pedestal, divided by
-the conductance window) and quantizes it to ``2**adc_bits`` uniform
+count in ``[0, rows]`` and quantizes it to ``2**adc_bits`` uniform
 levels.  With ``adc_bits >= log2(rows + 1)`` the step is one count and a
 zero-noise read is bit-exact with the digital agreement — the property
-``tests/test_accel.py`` pins down.
+the shared substrate contract test pins for every registered substrate.
 """
 
 from __future__ import annotations
@@ -34,15 +43,14 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.accel import device
-from repro.accel.device import DeviceConfig
+from repro.accel.substrate import Substrate
 from repro.core import bitops
 from repro.core.bitops import pad_to_multiple
 
 
 @dataclasses.dataclass(frozen=True)
 class CrossbarConfig:
-    """Frozen geometry of one physical crossbar array + its converters.
+    """Frozen geometry of one physical array + its converters.
 
     Attributes:
       rows: word lines per array (HD dimensions per row tile).
@@ -98,16 +106,18 @@ def adc_quantize(count: jax.Array, cfg: CrossbarConfig) -> jax.Array:
     return code * step
 
 
-def _bank_counts(qbits: jax.Array, gtiles: jax.Array, read_key: jax.Array,
-                 xcfg: CrossbarConfig, dcfg: DeviceConfig, *,
+def _bank_counts(qbits: jax.Array, wtiles: jax.Array, read_key: jax.Array,
+                 xcfg: CrossbarConfig, substrate: Substrate, *,
                  with_clips: bool = False):
     """Analog partial-count readout of one bank, all tiles at once.
 
     Args:
       qbits: ``(T, B, rows)`` float32 query bits per row tile.
-      gtiles: ``(T, S_pad, rows)`` float32 conductances per row tile.
+      wtiles: ``(T, S_pad, rows)`` float32 *effective weights* per row
+        tile — the substrate's ``read_weights`` applied to the programmed
+        state, so on an ideal device this is exactly the stored bits.
       read_key: key for this bank's read event.
-      xcfg / dcfg: geometry and device parameters.
+      xcfg / substrate: geometry and device model.
       with_clips: also count ADC saturation events (codes the converter
         clamped to its range).  Trace-time static, so the default graph
         is untouched; the counts come from the same pre-clip codes the
@@ -119,18 +129,10 @@ def _bank_counts(qbits: jax.Array, gtiles: jax.Array, read_key: jax.Array,
     """
     levels, step = _adc_params(xcfg)
 
-    def one_tile(q_tile, g_tile, key):
+    def one_tile(q_tile, w_tile, key):
         active = q_tile.sum(axis=-1, keepdims=True)          # (B, 1)
-        current = q_tile @ g_tile.T                          # (B, S_pad) µS
-        current = current + device.bitline_read_noise(
-            key, current.shape, active, dcfg)
-        # The periphery divides out its reference-cell drift estimate
-        # (drift_factor**drift_calibration), then inverts with the
-        # *nominal* window and g_off pedestal (`active` is popcounted
-        # digitally).  The residual drift scale error and any noise pass
-        # through to the count — those ARE the non-idealities.
-        calibrated = current / (dcfg.drift_factor ** dcfg.drift_calibration)
-        count = (calibrated - dcfg.g_off_us * active) / dcfg.g_window_us
+        count = q_tile @ w_tile.T                            # (B, S_pad)
+        count = count + substrate.read_noise(key, count.shape, active)
         if not with_clips:
             return adc_quantize(count, xcfg)
         code = jnp.round(count / step)
@@ -138,7 +140,7 @@ def _bank_counts(qbits: jax.Array, gtiles: jax.Array, read_key: jax.Array,
         return adc_quantize(count, xcfg), clips
 
     keys = jax.random.split(read_key, qbits.shape[0])
-    out = jax.vmap(one_tile)(qbits, gtiles, keys)
+    out = jax.vmap(one_tile)(qbits, wtiles, keys)
     if not with_clips:
         return out.sum(axis=0)
     counts, clips = out
@@ -153,14 +155,14 @@ def _to_row_tiles(bits: jax.Array, rows: int) -> jax.Array:
 
 
 def program_prototypes(prototypes: jax.Array, xcfg: CrossbarConfig,
-                       dcfg: DeviceConfig) -> tuple[jax.Array, jax.Array]:
-    """Unpack + tile + program the packed AM into both conductance banks.
+                       substrate: Substrate) -> tuple[jax.Array, jax.Array]:
+    """Unpack + tile + program the packed AM into both physical banks.
 
-    Returns ``(g_pos, g_neg)`` each of shape ``(T, S_pad, rows)``: the
-    per-row-tile conductance maps of the positive (bit) and complement
-    banks.  Deterministic in ``dcfg.seed`` — reprogramming the same
-    prototypes yields the same device, matching the paper's write-once
-    AM discipline.
+    Returns ``(state_pos, state_neg)`` each of shape ``(T, S_pad, rows)``:
+    the per-row-tile stored state of the positive (bit) and complement
+    banks.  Deterministic in the substrate's seed — reprogramming the
+    same prototypes yields the same device, matching the paper's
+    write-once AM discipline.
     """
     pbits = bitops.unpack_bits(prototypes).astype(jnp.float32)   # (S, D)
     pbits = pad_to_multiple(pbits, 0, xcfg.cols)
@@ -168,15 +170,14 @@ def program_prototypes(prototypes: jax.Array, xcfg: CrossbarConfig,
     # cells must stay OFF in both banks so they never contribute current.
     pos = _to_row_tiles(pbits, xcfg.rows)
     neg = _to_row_tiles(1.0 - pbits, xcfg.rows)
-    g_pos = device.program_conductances(pos, dcfg, stream=0)
-    g_neg = device.program_conductances(neg, dcfg, stream=1)
-    return g_pos, g_neg
+    return (substrate.program(pos, stream=0),
+            substrate.program(neg, stream=1))
 
 
-def crossbar_read(queries: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
-                  dim: int, xcfg: CrossbarConfig, dcfg: DeviceConfig, *,
+def crossbar_read(queries: jax.Array, s_pos: jax.Array, s_neg: jax.Array,
+                  dim: int, xcfg: CrossbarConfig, substrate: Substrate, *,
                   with_stats: bool = False):
-    """One AM read event against already-programmed conductance banks.
+    """One AM read event against already-programmed banks.
 
     ``(B, W)`` packed queries vs the ``(T, S_pad, rows)`` banks from
     :func:`program_prototypes` -> ``(B, S_pad)`` int32 agreement
@@ -188,19 +189,21 @@ def crossbar_read(queries: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
     With ``with_stats`` (trace-time static) the return is a ``(result,
     adc_clips)`` pair — the result math, noise keys and rounding are
     identical to the plain read; the extra output just counts the ADC
-    codes that saturated.  The ``pcm_sim`` backend compiles this variant
+    codes that saturated.  The substrate backends compile this variant
     only when observability is enabled.
     """
     qbits = bitops.unpack_bits(queries).astype(jnp.float32)      # (B, D)
     q_pos = _to_row_tiles(qbits, xcfg.rows)
     q_neg = _to_row_tiles(1.0 - qbits, xcfg.rows)
+    w_pos = substrate.read_weights(s_pos, stream=0)
+    w_neg = substrate.read_weights(s_neg, stream=1)
 
     # One read event per distinct batch content, reproducibly keyed.
     digest = jnp.sum(queries, dtype=jnp.uint32)
-    pos = _bank_counts(q_pos, g_pos, device.read_event_key(dcfg, 0, digest),
-                       xcfg, dcfg, with_clips=with_stats)
-    neg = _bank_counts(q_neg, g_neg, device.read_event_key(dcfg, 1, digest),
-                       xcfg, dcfg, with_clips=with_stats)
+    pos = _bank_counts(q_pos, w_pos, substrate.read_event_key(0, digest),
+                       xcfg, substrate, with_clips=with_stats)
+    neg = _bank_counts(q_neg, w_neg, substrate.read_event_key(1, digest),
+                       xcfg, substrate, with_clips=with_stats)
     if with_stats:
         (c_pos, k_pos), (c_neg, k_neg) = pos, neg
         result = jnp.clip(jnp.round(c_pos + c_neg), 0, dim).astype(jnp.int32)
@@ -208,17 +211,108 @@ def crossbar_read(queries: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
     return jnp.clip(jnp.round(pos + neg), 0, dim).astype(jnp.int32)
 
 
+def _roll_tracks(x: jax.Array, k: jax.Array) -> jax.Array:
+    """Per-track circular roll: ``out[..., j] = x[..., (j - k) % rows]``.
+
+    ``k`` broadcasts over the leading (track) axes; a scalar 0 is the
+    identity.  Used to move between *stored* and *observed* domain
+    positions once a track's access misalignment is known.
+    """
+    rows = x.shape[-1]
+    idx = (jnp.arange(rows) - k[..., None]) % rows
+    return jnp.take_along_axis(x, idx, axis=-1)
+
+
+def write_verify_bits(prototypes: jax.Array, xcfg: CrossbarConfig,
+                      substrate: Substrate, *,
+                      probe_seed: int = 0x5EED) -> jax.Array:
+    """Fault-aware programming: pick stored bits that minimize readout bias.
+
+    The write-verify discipline every production PCM/racetrack part
+    ships with, applied to the AM: before committing the prototypes, the
+    programmer *probes* the device and then chooses, cell by cell, the
+    stored bit whose readout lands closest to the intended content.
+
+    Three probe programs per bank fully identify the (deterministic)
+    device transfer:
+
+    * all-zeros / all-ones — the per-cell read-back ``W0``/``W1`` at each
+      observed position, capturing stuck cells, programming error and
+      residual drift exactly (the simulator keys static non-idealities by
+      (seed, bank, shape), never by the programmed pattern, mirroring
+      defects that live in the cell rather than the pulse);
+    * a fixed pseudo-random pattern — exposes per-track access
+      *misalignment* (racetrack shift faults): the observed read of track
+      ``t`` matches ``W0 + (W1 - W0) * roll(pattern, k)`` only at the
+      track's true offset ``k``.
+
+    A stored bit ``b`` at track position ``i`` is then read at observed
+    position ``i + k`` paired with query bit ``i + k``, so the bias-
+    minimizing choice is per-dim independent across the differential
+    pair: ``err(b) = |pos_read(b) - c| + |neg_read(1-b) - (1-c)|`` with
+    ``c`` the bundled content bit, ties keeping ``c``.  A stuck-ON cell
+    under a stored 0 inflates *every* read by one count — flipping that
+    stored bit trades one bit of bundle content for removing the
+    deterministic bias, and a misaligned track gets its content stored
+    pre-rolled so the faulty access presents it correctly.
+
+    Ideal substrates (and the digital backends, which never call this)
+    are a no-op — the returned array is ``prototypes`` itself, keeping
+    the zero-noise path bit-exact by construction.
+    """
+    if substrate.is_ideal:
+        return prototypes
+    pbits = bitops.unpack_bits(prototypes).astype(jnp.float32)   # (S, D)
+    s, d = pbits.shape
+    padded = pad_to_multiple(pbits, 0, xcfg.cols)
+    pos_c = _to_row_tiles(padded, xcfg.rows)                     # (T, S_pad, R)
+    neg_c = _to_row_tiles(1.0 - padded, xcfg.rows)
+    shape = pos_c.shape
+
+    probe = (jax.random.uniform(jax.random.key(probe_seed), shape)
+             < 0.5).astype(jnp.float32)
+    offsets = (-1, 0, 1)
+
+    def transfer(stream: int):
+        def readback(bits):
+            return substrate.read_weights(
+                substrate.program(bits, stream=stream), stream=stream)
+        w0 = readback(jnp.zeros(shape, jnp.float32))
+        w1 = readback(jnp.ones(shape, jnp.float32))
+        wr = readback(probe)
+        preds = jnp.stack([w0 + (w1 - w0) * jnp.roll(probe, k, axis=-1)
+                           for k in offsets])
+        err = jnp.abs(preds - wr[None]).sum(axis=-1)             # (K, T, S_pad)
+        k = jnp.asarray(offsets)[jnp.argmin(err, axis=0)]        # (T, S_pad)
+        # align the observed-position transfer back to stored positions:
+        # stored bit i is read at observed position i + k
+        return _roll_tracks(w0, -k), _roll_tracks(w1, -k), k
+
+    p0, p1, k_pos = transfer(0)
+    n0, n1, k_neg = transfer(1)
+    # content targets at the observed (query-paired) positions
+    c_pos = _roll_tracks(pos_c, -k_pos)
+    c_neg = _roll_tracks(neg_c, -k_neg)
+    err0 = jnp.abs(p0 - c_pos) + jnp.abs(n1 - c_neg)   # store 0: neg holds 1
+    err1 = jnp.abs(p1 - c_pos) + jnp.abs(n0 - c_neg)   # store 1: neg holds 0
+    chosen = jnp.where(err1 < err0, 1.0,
+                       jnp.where(err0 < err1, 0.0, pos_c))
+    flat = jnp.moveaxis(chosen, 0, 1).reshape(shape[1], -1)[:s, :d]
+    return bitops.pack_bits(flat.astype(jnp.uint8))
+
+
 def crossbar_agreement(queries: jax.Array, prototypes: jax.Array, dim: int,
-                       xcfg: CrossbarConfig, dcfg: DeviceConfig
+                       xcfg: CrossbarConfig, substrate: Substrate
                        ) -> jax.Array:
     """Full differential AM search: ``(B, W) x (S, W) -> (B, S)`` int32.
 
     Convenience composition of :func:`program_prototypes` +
-    :func:`crossbar_read` for one-shot use; the ``pcm_sim`` backend
-    caches the programmed banks instead so repeated batches against the
-    same AM pay the programming cost once.  With ``dcfg.is_ideal`` and a
+    :func:`crossbar_read` for one-shot use; the substrate backends cache
+    the programmed banks instead so repeated batches against the same AM
+    pay the programming cost once.  With ``substrate.is_ideal`` and a
     lossless ADC the result equals the digital agreement exactly.
     """
     b, s = queries.shape[0], prototypes.shape[0]
-    g_pos, g_neg = program_prototypes(prototypes, xcfg, dcfg)
-    return crossbar_read(queries, g_pos, g_neg, dim, xcfg, dcfg)[:b, :s]
+    state_pos, state_neg = program_prototypes(prototypes, xcfg, substrate)
+    return crossbar_read(queries, state_pos, state_neg, dim, xcfg,
+                         substrate)[:b, :s]

@@ -6,9 +6,18 @@ logical 0 = amorphous (RESET, low conductance ``g_off_us``).  Everything
 that makes a real PCM array diverge from that ideal is a knob on the
 frozen :class:`DeviceConfig`:
 
+* **multi-bit levels** — the cell is programmed by an iterative
+  program-and-verify loop that can target ``levels`` (2/4/8) evenly
+  spaced conductances in the window.  The AM still stores binary HD bits
+  at the two *extreme* levels, so a higher-level device changes nothing
+  at zero noise — what it buys is precision: noise is physically set by
+  the level spacing ``window / (levels - 1)`` the programming loop must
+  resolve, so an MLC-capable cell holding a binary bit sees its noise
+  shrink by ``levels - 1`` (the MIMHD observation; see PAPERS.md) at the
+  cost of a longer program-verify sequence (:mod:`repro.accel.cost`);
 * **programming noise** — the iterative SET/RESET loop lands on a
   conductance distributed around the target (Gaussian, std expressed as a
-  fraction of the ON/OFF window), frozen at program time;
+  fraction of the level spacing), frozen at program time;
 * **conductance drift** — amorphous structural relaxation decays the
   programmed conductance as ``(t / t0)**-nu`` (Ielmini's empirical law;
   we apply one lumped exponent to the whole array);
@@ -24,6 +33,11 @@ All sampling functions are pure JAX (``key`` in, array out): the same key
 always produces the same device instance, which is what makes the noisy
 backend deterministic and the zero-noise configuration bit-exact with the
 digital reference.
+
+:class:`PCMSubstrate` adapts this cell model to the
+:class:`repro.accel.substrate.Substrate` protocol (registered as
+``"pcm"``): it is the device half the substrate-generic crossbar in
+:mod:`repro.accel.crossbar` actually talks to.
 """
 
 from __future__ import annotations
@@ -33,6 +47,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.accel.substrate import register_substrate
+from repro.pipeline.options import (Option, non_negative, positive,
+                                    unit_interval)
+
 
 @dataclasses.dataclass(frozen=True)
 class DeviceConfig:
@@ -41,10 +59,18 @@ class DeviceConfig:
     Attributes:
       g_on_us: SET (crystalline) conductance, microsiemens.
       g_off_us: RESET (amorphous) conductance, microsiemens.
-      prog_sigma: programming-noise std as a fraction of the conductance
-        window ``g_on_us - g_off_us``; 0 disables.
-      read_sigma: per-cell read-noise std as a fraction of the window;
-        applied at the bit line scaled by sqrt(active rows); 0 disables.
+      levels: conductance levels the program-and-verify loop can target
+        (2 = binary SET/RESET, 4/8 = MLC-precision programming).  HD bits
+        always sit at the extreme levels; ``levels`` sets the *absolute*
+        noise scale through the level spacing, and the per-cell
+        programming cost through the longer verify sequence.
+      prog_sigma: programming-noise std as a fraction of the level
+        spacing ``(g_on_us - g_off_us) / (levels - 1)`` — at the binary
+        default the spacing is the full window, so existing
+        parameterizations are unchanged; 0 disables.
+      read_sigma: per-cell read-noise std as a fraction of the level
+        spacing; applied at the bit line scaled by sqrt(active rows);
+        0 disables.
       drift_nu: conductance-drift exponent (``g *= (t/t0)**-nu``,
         t0 = 1 s); 0 disables.
       drift_t_s: seconds elapsed since programming (drift horizon).
@@ -62,6 +88,7 @@ class DeviceConfig:
 
     g_on_us: float = 20.0
     g_off_us: float = 0.1
+    levels: int = 2
     prog_sigma: float = 0.0
     read_sigma: float = 0.0
     drift_nu: float = 0.0
@@ -76,6 +103,8 @@ class DeviceConfig:
             raise ValueError("g_on_us must exceed g_off_us")
         if self.g_off_us < 0:
             raise ValueError("g_off_us must be >= 0")
+        if self.levels < 2:
+            raise ValueError("levels must be >= 2")
         for f in ("prog_sigma", "read_sigma", "drift_nu", "drift_t_s"):
             if getattr(self, f) < 0:
                 raise ValueError(f"{f} must be >= 0")
@@ -89,6 +118,13 @@ class DeviceConfig:
     def g_window_us(self) -> float:
         """The ON/OFF conductance window (the unit of one agreement count)."""
         return self.g_on_us - self.g_off_us
+
+    @property
+    def level_spacing_us(self) -> float:
+        """Conductance gap between adjacent programmable levels — the
+        precision the program-and-verify loop resolves, and therefore the
+        physical scale of both noise sigmas.  Binary cells: the window."""
+        return self.g_window_us / (self.levels - 1)
 
     @property
     def is_ideal(self) -> bool:
@@ -156,7 +192,7 @@ def program_conductances(bits: jax.Array, cfg: DeviceConfig, *,
     if cfg.prog_sigma > 0.0:
         noise = jax.random.normal(_key(cfg, stream, _PROG), b.shape,
                                   jnp.float32)
-        g = g + cfg.prog_sigma * cfg.g_window_us * noise
+        g = g + cfg.prog_sigma * cfg.level_spacing_us * noise
     g = g * cfg.drift_factor
     if cfg.stuck_on_rate > 0.0 or cfg.stuck_off_rate > 0.0:
         u = jax.random.uniform(_key(cfg, stream, _FAULT), b.shape)
@@ -199,9 +235,11 @@ def bitline_read_noise(key: jax.Array, shape: tuple[int, ...],
     """Per-read current noise at the bit line (µS-equivalent).
 
     The sum of ``active_rows`` independent per-cell fluctuations of std
-    ``read_sigma * g_window`` has std ``read_sigma * g_window *
+    ``read_sigma * level_spacing`` has std ``read_sigma * level_spacing *
     sqrt(active_rows)`` — sampling at the bit line is statistically
     equivalent to per-cell sampling and O(B*S) instead of O(B*S*D).
+    With binary cells the spacing is the full window (the historical
+    behavior); an MLC-precision cell fluctuates around its tighter level.
 
     Args:
       key: read-event key (the backend folds a batch digest into the
@@ -212,6 +250,113 @@ def bitline_read_noise(key: jax.Array, shape: tuple[int, ...],
     """
     if cfg.read_sigma == 0.0:
         return jnp.zeros(shape, jnp.float32)
-    std = cfg.read_sigma * cfg.g_window_us * jnp.sqrt(
+    std = cfg.read_sigma * cfg.level_spacing_us * jnp.sqrt(
         jnp.maximum(active_rows.astype(jnp.float32), 0.0))
     return std * jax.random.normal(key, shape, jnp.float32)
+
+
+# -- the Substrate-protocol adapter -----------------------------------------
+
+#: Declared PCM-specific backend options (geometry/selection options are
+#: contributed by :data:`repro.accel.substrate.COMMON_OPTIONS`).
+PCM_OPTIONS: tuple[Option, ...] = (
+    Option("preset", "str", "ideal", "named device parameterization "
+           "(ideal = zero noise, pcm = literature-calibrated silicon)",
+           choices=("ideal", "pcm")),
+    Option("levels", "int", 2, "programmable conductance levels per cell "
+           "(2 = binary; 4/8 = MLC precision, tighter noise, costlier "
+           "programming)", choices=(2, 4, 8)),
+    Option("g_on_us", "number", 20.0, "SET conductance, uS", check=positive),
+    Option("g_off_us", "number", 0.1, "RESET conductance, uS",
+           check=non_negative),
+    Option("prog_sigma", "number", 0.0,
+           "programming-noise std / level spacing", check=non_negative),
+    Option("read_sigma", "number", 0.0,
+           "per-cell read-noise std / level spacing", check=non_negative),
+    Option("drift_nu", "number", 0.0, "conductance-drift exponent",
+           check=non_negative),
+    Option("drift_t_s", "number", 0.0, "seconds since programming",
+           check=non_negative),
+    Option("drift_calibration", "number", 1.0,
+           "fraction of drift the periphery compensates",
+           check=unit_interval),
+    Option("stuck_on_rate", "number", 0.0, "cells pinned at g_on",
+           check=unit_interval),
+    Option("stuck_off_rate", "number", 0.0, "cells pinned at g_off",
+           check=unit_interval),
+)
+
+_PRESETS = {"ideal": DeviceConfig, "pcm": DeviceConfig.pcm}
+
+
+@dataclasses.dataclass(frozen=True)
+class PCMSubstrate:
+    """:class:`~repro.accel.substrate.Substrate` over the PCM cell model.
+
+    Stored state is the per-cell conductance map (µS); the effective read
+    weight of a cell is its *calibrated, pedestal-free* conductance in
+    window units — exactly the programmed bit on an ideal device, so the
+    substrate-generic crossbar stays bit-exact with ``reference`` at zero
+    noise for any ``levels``.
+    """
+
+    config: DeviceConfig = DeviceConfig()
+
+    name = "pcm"
+
+    @classmethod
+    def from_options(cls, options: dict) -> "PCMSubstrate":
+        opts = dict(options)
+        preset = opts.pop("preset", "ideal")
+        return cls(_PRESETS[preset](**opts))
+
+    @property
+    def is_ideal(self) -> bool:
+        return self.config.is_ideal
+
+    @property
+    def _calibration_divisor(self) -> float:
+        cfg = self.config
+        return cfg.drift_factor ** cfg.drift_calibration
+
+    def program(self, bits: jax.Array, *, stream: int = 0) -> jax.Array:
+        return program_conductances(bits, self.config, stream=stream)
+
+    def read_weights(self, state: jax.Array, *, stream: int = 0
+                     ) -> jax.Array:
+        # The read periphery divides out its reference-cell drift estimate
+        # (drift_factor**drift_calibration), then inverts with the
+        # *nominal* window and g_off pedestal.  Residual drift scale error
+        # and programming noise pass through as weight error — those ARE
+        # the non-idealities the profiler sees.
+        cfg = self.config
+        return ((state / self._calibration_divisor) - cfg.g_off_us) \
+            / cfg.g_window_us
+
+    def read_event_key(self, stream: int, digest) -> jax.Array:
+        return read_event_key(self.config, stream, digest)
+
+    def read_noise(self, key: jax.Array, shape: tuple[int, ...],
+                   active_rows: jax.Array) -> jax.Array:
+        # Bit-line current noise, propagated through the same calibration
+        # divide + window normalization the signal sees -> count units.
+        current = bitline_read_noise(key, shape, active_rows, self.config)
+        if self.config.read_sigma == 0.0:
+            return current
+        return current / (self._calibration_divisor * self.config.g_window_us)
+
+    def fault_census(self, shape: tuple[int, ...], *, stream: int = 0
+                     ) -> dict[str, int]:
+        n_on, n_off = stuck_cell_counts(shape, self.config, stream=stream)
+        return {"on": n_on, "off": n_off}
+
+    def cost(self, num_protos: int, dim: int, read_len: int, ngram: int,
+             xcfg):
+        from repro.accel import cost as cost_mod
+        return cost_mod.accel_cost(num_protos, dim, read_len, ngram, xcfg,
+                                   levels=self.config.levels)
+
+
+@register_substrate("pcm", PCM_OPTIONS)
+def _make_pcm(options: dict) -> PCMSubstrate:
+    return PCMSubstrate.from_options(options)

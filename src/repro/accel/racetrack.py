@@ -1,0 +1,222 @@
+"""Racetrack (domain-wall) memory substrate for the simulated AM search.
+
+The second registered :class:`~repro.accel.substrate.Substrate` — and the
+forcing function that keeps the device API genuinely substrate-generic.
+Follows the HDCR design point (Khan et al., PAPERS.md): each prototype
+segment of ``rows`` HD bits lives as magnetic domains along one
+ferromagnetic nanowire *track*; access ports read the track via
+*transverse read* (TR), which senses the number of domain walls — i.e. a
+popcount — instead of converting an analog current, and the track is
+*shifted* under its ports to bring the next segment into reach.
+
+The non-idealities are therefore nothing like PCM's, which is the point:
+
+* **shift-based access faults** — the dominant racetrack error mode: a
+  track whose shift path over/under-steps presents its domains offset by
+  one position at every access.  Modeled as a seeded per-track fault map
+  drawn at program time (``shift_fault_rate`` tracks get a ±1 circular
+  misalignment), so it is a *static, census-able* defect like a stuck
+  cell, not fresh noise per read;
+* **stuck domains** — pinning sites that hold a domain's magnetization
+  regardless of what was written (``stuck_on_rate`` / ``stuck_off_rate``);
+* **TR sense noise** — per-read-event fluctuation of the transverse-read
+  popcount, Gaussian with std ``read_sigma * sqrt(active domains)``
+  (already in count units: TR senses domains, not microamps).
+
+Zero-rate defaults make every hook the identity on the stored bits, which
+is what the shared substrate contract test pins as bit-exactness with the
+``reference`` backend.  The cost entry (:func:`repro.accel.cost
+.racetrack_cost`) swaps the PCM picture — expensive ADCs, cheap static
+reads — for the racetrack one: cheap dense cells and sense amps, with the
+energy/latency dominated by shifting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.accel.substrate import register_substrate
+from repro.pipeline.options import Option, non_negative, unit_interval
+
+
+@dataclasses.dataclass(frozen=True)
+class RacetrackConfig:
+    """Frozen racetrack nanowire parameters (defaults = ideal device).
+
+    Attributes:
+      shift_fault_rate: fraction of tracks with a permanent ±1 access
+        misalignment (split evenly between the two directions).
+      read_sigma: transverse-read sense-noise std per sqrt(active domain),
+        in count units; 0 disables.
+      stuck_on_rate: fraction of domains pinned at logical 1.
+      stuck_off_rate: fraction of domains pinned at logical 0.
+      ports: access ports per track (cost model: shifts per access scale
+        with ``rows / ports``).
+      tr_span: domains one transverse read senses at once (cost model).
+      seed: base PRNG seed for fault maps and read noise.
+    """
+
+    shift_fault_rate: float = 0.0
+    read_sigma: float = 0.0
+    stuck_on_rate: float = 0.0
+    stuck_off_rate: float = 0.0
+    ports: int = 4
+    tr_span: int = 5
+    seed: int = 0xACC_DE
+
+    def __post_init__(self) -> None:
+        if self.read_sigma < 0:
+            raise ValueError("read_sigma must be >= 0")
+        for f in ("shift_fault_rate", "stuck_on_rate", "stuck_off_rate"):
+            if not 0.0 <= getattr(self, f) <= 1.0:
+                raise ValueError(f"{f} must be in [0, 1]")
+        if self.stuck_on_rate + self.stuck_off_rate > 1.0:
+            raise ValueError("stuck_on_rate + stuck_off_rate must be <= 1")
+        if self.ports < 1 or self.tr_span < 1:
+            raise ValueError("ports and tr_span must be >= 1")
+
+    @property
+    def is_ideal(self) -> bool:
+        """True when every non-ideality is switched off (bit-exact path)."""
+        return (self.shift_fault_rate == 0.0 and self.read_sigma == 0.0
+                and self.stuck_on_rate == 0.0 and self.stuck_off_rate == 0.0)
+
+    @classmethod
+    def racetrack(cls, **overrides) -> "RacetrackConfig":
+        """Literature-flavored noisy device: ~0.2% misaligned tracks
+        (the HDCR papers' shift-error regime), 2% TR sense fluctuation,
+        5e-4 pinned domains per polarity."""
+        base = dict(shift_fault_rate=2e-3, read_sigma=0.02,
+                    stuck_on_rate=5e-4, stuck_off_rate=5e-4)
+        base.update(overrides)
+        return cls(**base)
+
+
+def _key(cfg: RacetrackConfig, stream: int, source: int) -> jax.Array:
+    """Deterministic sub-key: one per (bank, noise source)."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.key(cfg.seed), stream), source)
+
+
+# Noise-source tags — one per physically distinct mechanism.
+_FAULT, _SHIFT, _READ = 0, 1, 2
+
+
+def _shift_offsets(cfg: RacetrackConfig, track_shape: tuple[int, ...],
+                   stream: int) -> jax.Array:
+    """Seeded per-track access misalignment: -1 / 0 / +1 domain offsets."""
+    u = jax.random.uniform(_key(cfg, stream, _SHIFT), track_shape)
+    return jnp.where(u < cfg.shift_fault_rate / 2, -1,
+                     jnp.where(u < cfg.shift_fault_rate, 1, 0))
+
+
+#: Declared racetrack-specific backend options (geometry/selection options
+#: come from :data:`repro.accel.substrate.COMMON_OPTIONS`).
+RACETRACK_OPTIONS: tuple[Option, ...] = (
+    Option("preset", "str", "ideal", "named device parameterization "
+           "(ideal = zero noise, racetrack = literature-flavored faults)",
+           choices=("ideal", "racetrack")),
+    Option("shift_fault_rate", "number", 0.0,
+           "fraction of tracks with a permanent +-1 access misalignment",
+           check=unit_interval),
+    Option("read_sigma", "number", 0.0,
+           "transverse-read sense-noise std per sqrt(active domain)",
+           check=non_negative),
+    Option("stuck_on_rate", "number", 0.0, "domains pinned at 1",
+           check=unit_interval),
+    Option("stuck_off_rate", "number", 0.0, "domains pinned at 0",
+           check=unit_interval),
+    Option("ports", "int", 4, "access ports per track (cost model)",
+           check=lambda v: None if v >= 1 else "must be >= 1"),
+    Option("tr_span", "int", 5, "domains sensed per transverse read "
+           "(cost model)",
+           check=lambda v: None if v >= 1 else "must be >= 1"),
+)
+
+_PRESETS = {"ideal": RacetrackConfig, "racetrack": RacetrackConfig.racetrack}
+
+
+@dataclasses.dataclass(frozen=True)
+class RacetrackSubstrate:
+    """:class:`~repro.accel.substrate.Substrate` over domain-wall tracks.
+
+    Stored state is the {0,1} domain-magnetization map (one track per
+    trailing ``rows``-length slice).  ``read_weights`` applies the seeded
+    shift-misalignment — a circular roll of the faulted tracks — so a
+    misaligned track contributes systematically wrong partial counts on
+    *every* read, which is exactly how shift errors bite in hardware.
+    """
+
+    config: RacetrackConfig = RacetrackConfig()
+
+    name = "racetrack"
+
+    @classmethod
+    def from_options(cls, options: dict) -> "RacetrackSubstrate":
+        opts = dict(options)
+        preset = opts.pop("preset", "ideal")
+        return cls(_PRESETS[preset](**opts))
+
+    @property
+    def is_ideal(self) -> bool:
+        return self.config.is_ideal
+
+    def program(self, bits: jax.Array, *, stream: int = 0) -> jax.Array:
+        """Shift-in write: bits become domains, pinning sites win."""
+        cfg = self.config
+        state = bits.astype(jnp.float32)
+        if cfg.stuck_on_rate > 0.0 or cfg.stuck_off_rate > 0.0:
+            u = jax.random.uniform(_key(cfg, stream, _FAULT), state.shape)
+            state = jnp.where(u < cfg.stuck_on_rate, 1.0, state)
+            state = jnp.where(u > 1.0 - cfg.stuck_off_rate, 0.0, state)
+        return state
+
+    def read_weights(self, state: jax.Array, *, stream: int = 0
+                     ) -> jax.Array:
+        cfg = self.config
+        if cfg.shift_fault_rate == 0.0:
+            return state
+        rows = state.shape[-1]
+        off = _shift_offsets(cfg, state.shape[:-1], stream)
+        idx = (jnp.arange(rows) + off[..., None]) % rows
+        return jnp.take_along_axis(state, idx, axis=-1)
+
+    def read_event_key(self, stream: int, digest) -> jax.Array:
+        return jax.random.fold_in(_key(self.config, stream, _READ),
+                                  jnp.asarray(digest, jnp.uint32))
+
+    def read_noise(self, key: jax.Array, shape: tuple[int, ...],
+                   active_rows: jax.Array) -> jax.Array:
+        cfg = self.config
+        if cfg.read_sigma == 0.0:
+            return jnp.zeros(shape, jnp.float32)
+        std = cfg.read_sigma * jnp.sqrt(
+            jnp.maximum(active_rows.astype(jnp.float32), 0.0))
+        return std * jax.random.normal(key, shape, jnp.float32)
+
+    def fault_census(self, shape: tuple[int, ...], *, stream: int = 0
+                     ) -> dict[str, int]:
+        cfg = self.config
+        n_on = n_off = n_mis = 0
+        if cfg.stuck_on_rate > 0.0 or cfg.stuck_off_rate > 0.0:
+            u = jax.random.uniform(_key(cfg, stream, _FAULT), shape)
+            n_on = int(jnp.sum(u < cfg.stuck_on_rate))
+            n_off = int(jnp.sum(u > 1.0 - cfg.stuck_off_rate))
+        if cfg.shift_fault_rate > 0.0:
+            n_mis = int(jnp.sum(_shift_offsets(cfg, shape[:-1], stream) != 0))
+        return {"on": n_on, "off": n_off, "misaligned": n_mis}
+
+    def cost(self, num_protos: int, dim: int, read_len: int, ngram: int,
+             xcfg):
+        from repro.accel import cost as cost_mod
+        return cost_mod.racetrack_cost(num_protos, dim, read_len, ngram,
+                                       xcfg, ports=self.config.ports,
+                                       tr_span=self.config.tr_span)
+
+
+@register_substrate("racetrack", RACETRACK_OPTIONS)
+def _make_racetrack(options: dict) -> RacetrackSubstrate:
+    return RacetrackSubstrate.from_options(options)

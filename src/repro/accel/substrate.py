@@ -1,0 +1,212 @@
+"""The ``Substrate`` protocol: what any in-memory device model must provide.
+
+The paper's platform-independence claim says the AM search runs on *any*
+in-memory substrate; :mod:`repro.accel.crossbar` makes that concrete by
+depending only on this protocol — the tiling, differential banks and
+behavioral ADC are substrate-independent, while everything device-physical
+(what programming stores, what a read event sees, where the noise and the
+energy come from) lives behind four hooks:
+
+  ``program(bits, stream)``        one-time write: {0,1} bits -> stored
+                                   physical state (conductances, domains);
+  ``read_weights(state, stream)``  the effective per-cell weight an AM
+                                   read sees (ideal: exactly the bits) —
+                                   calibration, drift residue, shift-fault
+                                   misalignment all land here;
+  ``read_noise(key, shape, ...)``  additive per-read-event noise on the
+                                   accumulated match count;
+  ``cost(...)``                    the substrate's analytical
+                                   latency/energy/area entry.
+
+Substrates register by name with their declared options
+(:class:`repro.pipeline.options.Option` rows, the same machinery every
+backend's options ride), so backend construction, ``--list-backends`` and
+the shared contract test all discover them uniformly:
+
+  ``pcm``        phase-change crossbar cells (multi-bit levels, drift,
+                 stuck-at faults) — :mod:`repro.accel.device`;
+  ``racetrack``  domain-wall nanowire tracks (shift-based access faults,
+                 transverse-read sensing) — :mod:`repro.accel.racetrack`.
+
+Every hook is pure JAX and seeded: the same seed always reproduces the
+same device instance, which is what keeps the noisy backends deterministic
+and the zero-noise configurations bit-exact with the digital reference.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Mapping, Protocol, runtime_checkable
+
+import jax
+
+from repro.pipeline.options import Option, OptionsSchema, non_negative
+
+
+@runtime_checkable
+class Substrate(Protocol):
+    """Device-physics hooks the substrate-generic crossbar runs through."""
+
+    name: str
+
+    @property
+    def is_ideal(self) -> bool:
+        """True when every non-ideality is off (the bit-exact path)."""
+        ...
+
+    def program(self, bits: jax.Array, *, stream: int = 0) -> jax.Array:
+        """One-time write of a {0,1} bit array into physical state.
+
+        ``stream`` tags physically distinct arrays (the positive and
+        complement banks of the differential design) so they draw
+        independent noise/fault maps from the same seed.  Deterministic in
+        the substrate's seed: reprogramming the same bits yields the same
+        device (write-once discipline).
+        """
+        ...
+
+    def read_weights(self, state: jax.Array, *, stream: int = 0
+                     ) -> jax.Array:
+        """Stored state -> effective per-cell weights for an AM read.
+
+        The ideal value is exactly the programmed bit (0.0 or 1.0); every
+        static read-path non-ideality — drift residue after calibration,
+        a shift-misaligned track, a pinned domain — shows up as a weight
+        that differs from the bit.  The crossbar accumulates
+        ``query @ weights.T`` per tile, so this is the seam where "what
+        the bit line integrates" is defined per substrate.
+        """
+        ...
+
+    def read_event_key(self, stream: int, digest) -> jax.Array:
+        """PRNG key for one read event on one bank (digest may be traced)."""
+        ...
+
+    def read_noise(self, key: jax.Array, shape: tuple[int, ...],
+                   active_rows: jax.Array) -> jax.Array:
+        """Additive noise on the accumulated match count for one event.
+
+        Returned in *count* units (the unit of one agreement): the
+        substrate folds its own sensing physics (bit-line current noise
+        over the conductance window, transverse-read fluctuation) into
+        that normalization.
+        """
+        ...
+
+    def fault_census(self, shape: tuple[int, ...], *, stream: int = 0
+                     ) -> dict[str, int]:
+        """Static defect counts of one programmed bank (host-side only).
+
+        Replays the seeded fault draws for ``shape`` — stuck cells,
+        misaligned tracks — without touching the programming graph; keys
+        are substrate-specific (``on``/``off`` for PCM, plus
+        ``misaligned`` tracks for racetrack).
+        """
+        ...
+
+    def cost(self, num_protos: int, dim: int, read_len: int, ngram: int,
+             xcfg) -> "object":
+        """The substrate's analytical cost entry (a ``CostReport``)."""
+        ...
+
+
+#: Geometry + selection options shared by every substrate backend.
+COMMON_OPTIONS: tuple[Option, ...] = (
+    Option("substrate", "str",
+           help="device model running the AM search (see docs/ACC_DEMETER.md)"),
+    Option("rows", "int", 256, "word lines / domains per array tile",
+           check=lambda v: None if v >= 1 else "must be >= 1"),
+    Option("cols", "int", 256, "bit lines (prototypes) per array tile",
+           check=lambda v: None if v >= 1 else "must be >= 1"),
+    Option("adc_bits", "int", 9, "converter resolution; lossless when "
+           "2^bits - 1 >= rows",
+           check=lambda v: None if v >= 1 else "must be >= 1"),
+    Option("seed", "int", 0xACC_DE, "device PRNG seed (all noise + faults)",
+           check=non_negative),
+)
+
+#: option names routed to CrossbarConfig (the rest go to the substrate).
+CROSSBAR_KEYS = frozenset(("rows", "cols", "adc_bits"))
+
+SubstrateFactory = Callable[[Mapping[str, object]], Substrate]
+
+_SUBSTRATES: dict[str, tuple[SubstrateFactory, tuple[Option, ...]]] = {}
+
+
+def register_substrate(name: str, options: tuple[Option, ...]
+                       ) -> Callable[[SubstrateFactory], SubstrateFactory]:
+    """Decorator: register ``options-dict -> Substrate`` under ``name``.
+
+    ``options`` declares the substrate-specific knobs (device physics,
+    preset, fault rates); the geometry/selection options in
+    :data:`COMMON_OPTIONS` are contributed by the backend.
+    """
+    def deco(factory: SubstrateFactory) -> SubstrateFactory:
+        if name in _SUBSTRATES:
+            raise ValueError(f"substrate {name!r} already registered")
+        _SUBSTRATES[name] = (factory, tuple(options))
+        return factory
+    return deco
+
+
+def available_substrates() -> tuple[str, ...]:
+    """Names of every registered substrate (import :mod:`repro.accel`
+    or the backend module first; registration happens on import)."""
+    return tuple(sorted(_SUBSTRATES))
+
+
+def substrate_options(name: str) -> tuple[Option, ...]:
+    """The declared substrate-specific options of ``name``."""
+    _require(name)
+    return _SUBSTRATES[name][1]
+
+
+def resolve_substrate(name: str, options: Mapping[str, object]) -> Substrate:
+    """Instantiate the substrate registered as ``name`` from its options."""
+    _require(name)
+    return _SUBSTRATES[name][0](dict(options))
+
+
+def _require(name: str) -> None:
+    if name not in _SUBSTRATES:
+        raise ValueError(f"unknown substrate {name!r}; registered: "
+                         f"{available_substrates()}")
+
+
+def narrowed_schema(backend: str, substrate: str) -> OptionsSchema:
+    """The exact option set valid for ``backend`` once ``substrate`` is
+    chosen: common geometry/selection options + that substrate's own.
+
+    This is what actually validates a config — a PCM-only knob under
+    ``substrate=racetrack`` is an unknown option here, with the error
+    naming the narrowed context.
+    """
+    return OptionsSchema(backend=f"{backend} (substrate={substrate})",
+                         options=COMMON_OPTIONS + substrate_options(substrate))
+
+
+def union_schema(backend: str, default_substrate: str) -> OptionsSchema:
+    """The display/CLI schema of a substrate backend: common options plus
+    every registered substrate's options (shared names merged).
+
+    ``--list-backends`` prints this union and the CLI coerces against it;
+    validation then narrows to the selected substrate's exact set.
+    """
+    merged: dict[str, Option] = {}
+    for opt in COMMON_OPTIONS:
+        if opt.name == "substrate":
+            opt = Option("substrate", "str", default_substrate, opt.help,
+                         choices=available_substrates())
+        merged[opt.name] = opt
+    for sub in available_substrates():
+        for opt in substrate_options(sub):
+            prev = merged.get(opt.name)
+            if prev is None:
+                merged[opt.name] = opt
+            elif prev.choices is not None and opt.choices is not None \
+                    and prev.choices != opt.choices:
+                # e.g. `preset`: each substrate narrows to its own names.
+                joint = prev.choices + tuple(c for c in opt.choices
+                                             if c not in prev.choices)
+                merged[opt.name] = Option(prev.name, prev.kind, prev.default,
+                                          prev.help, choices=joint)
+    return OptionsSchema(backend=backend, options=tuple(merged.values()))

@@ -30,9 +30,15 @@ from repro.pipeline.report import ProfileReport
 from repro.pipeline.session import ProfilingSession
 from repro.pipeline.source import ArraySource
 
-#: Device/crossbar knobs a sweep may step (option names of ``pcm_sim``).
+#: Device/geometry knobs a sweep may step (declared option names of the
+#: substrate backends; ``levels`` and ``shift_fault_rate`` are
+#: substrate-specific — the backend's schema rejects them elsewhere).
 SWEEPABLE = ("read_sigma", "prog_sigma", "drift_t_s", "stuck_on_rate",
-             "stuck_off_rate", "adc_bits", "seed")
+             "stuck_off_rate", "adc_bits", "seed", "levels",
+             "shift_fault_rate")
+
+#: Backends the sweep can drive; anything else is forced to ``pcm_sim``.
+_SUBSTRATE_BACKENDS = ("pcm_sim", "racetrack_sim")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,9 +67,10 @@ def noise_sweep(genomes: dict[str, np.ndarray], tokens: np.ndarray,
       genomes: reference genomes (step 2 input; encoded once, digitally).
       tokens / lengths: the query read sample.
       true_abundance: ground-truth abundance for scoring.
-      config: base config; its backend is forced to ``pcm_sim`` and its
-        existing ``backend_options`` (e.g. a preset) are kept, with
-        ``knob`` overridden per level.
+      config: base config; its backend is kept if it is a substrate
+        backend (``pcm_sim`` / ``racetrack_sim``), else forced to
+        ``pcm_sim``; existing ``backend_options`` (e.g. a preset) are
+        kept, with ``knob`` overridden per level.
       knob: one of :data:`SWEEPABLE`.
       levels: values to step ``knob`` through.
       refdb: prebuilt reference database; pass one to share a single
@@ -72,12 +79,18 @@ def noise_sweep(genomes: dict[str, np.ndarray], tokens: np.ndarray,
     """
     if knob not in SWEEPABLE:
         raise ValueError(f"unknown sweep knob {knob!r}; one of {SWEEPABLE}")
-    base = dataclasses.replace(config, backend="pcm_sim")
+    backend = (config.backend if config.backend in _SUBSTRATE_BACKENDS
+               else "pcm_sim")
+    base = dataclasses.replace(config, backend=backend)
 
     if refdb is None:
-        # Step 2 once: the digital prototypes are identical at every level.
-        builder = ProfilingSession(
-            dataclasses.replace(base, backend="reference"))
+        # Step 2 once: the digital prototypes are identical at every level
+        # (the builder strips the device options and any noise-aware flag —
+        # the reference backend takes no options, and a sweep compares
+        # device settings against one shared database).
+        builder = ProfilingSession(dataclasses.replace(
+            base, backend="reference", backend_options=(),
+            noise_aware_refdb=False))
         refdb = builder.build_refdb(genomes)
 
     points: list[SweepPoint] = []

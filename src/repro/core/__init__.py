@@ -13,8 +13,8 @@ classify live in repro.kernels.
 These are the *algorithmic* building blocks.  The public entry point is
 the unified API in :mod:`repro.pipeline` — ``ProfilerConfig`` + the
 backend registry + ``ReadSource`` + ``ProfilingSession`` — which selects
-among the substrates by name (see docs/API.md).  ``Demeter`` and
-``batch_reads`` remain as deprecation shims over that API.
+among the substrates by name (see docs/API.md).  The retired ``Demeter``
+and ``batch_reads`` shims now raise with a pointer to that API.
 """
 
 from repro.core.hd_space import HDSpace

@@ -233,6 +233,25 @@ def apply_delta(db: RefDB, *, add: RefDB | None = None,
     return out
 
 
+def rebinarize_counters(counters: jax.Array | np.ndarray,
+                        fallback_bits: jax.Array | np.ndarray) -> jax.Array:
+    """Sign-threshold bundling counters back into packed prototypes.
+
+    The inverse of losing the bundling sums at build time: retraining
+    passes (:mod:`repro.accel.codesign`) keep integer per-bit counters
+    ``(S, dim)`` and re-binarize after each update round.  Positive
+    counters become 1-bits, negative become 0-bits, and an exact zero —
+    the retrained information cancelled out — falls back to
+    ``fallback_bits`` (the naive build's bit), so an untouched prototype
+    row packs back byte-identical to the original build.
+    """
+    c = jnp.asarray(counters)
+    bits = jnp.where(c > 0, 1,
+                     jnp.where(c < 0, 0,
+                               jnp.asarray(fallback_bits).astype(jnp.int32)))
+    return bitops.pack_bits(bits)
+
+
 def agreement_matmul(queries: jax.Array, prototypes: jax.Array,
                      dim: int) -> jax.Array:
     """Agreement scores via the +-1 matmul identity (MXU formulation).

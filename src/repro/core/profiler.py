@@ -1,117 +1,46 @@
-"""Legacy profiler entry point — a deprecation shim over `repro.pipeline`.
+"""Retired legacy profiler entry point (migration stubs only).
 
-The five-step Demeter pipeline is now driven through the unified API in
+The five-step Demeter pipeline is driven through the unified API in
 :mod:`repro.pipeline`:
 
   * :class:`repro.pipeline.ProfilerConfig` — one frozen record of the run
-    (HD space, windowing, batching, backend name).
+    (HD space, windowing, batching, backend name + options).
   * the backend registry — ``reference`` / ``reference_packed`` /
-    ``pallas_matmul`` / ``pallas_packed`` replace the old
+    ``pallas_matmul`` / ``pallas_packed`` / ``pallas_fused`` /
+    ``pcm_sim`` / ``racetrack_sim`` / ``sharded`` replace the old
     ``use_kernels`` / ``packed_path`` boolean switches.
   * :class:`repro.pipeline.ReadSource` — streaming read input, replacing
     hand-rolled ``batch_reads`` loops.
   * :class:`repro.pipeline.ProfilingSession` — the facade running
     steps 2-5.
 
-:class:`Demeter` remains for existing callers and delegates everything to
-a :class:`~repro.pipeline.session.ProfilingSession`; it emits a
-``DeprecationWarning`` on construction.  ``ProfileReport`` is re-exported
-from its new home in :mod:`repro.pipeline.report`.  See ``docs/API.md``
-for the migration table.
+``Demeter`` spent its deprecation period as a delegating shim emitting a
+``DeprecationWarning``; it is now retired.  Constructing it (or calling
+:func:`batch_reads`) raises with a pointer to the migration table in
+``docs/API.md``.  ``ProfileReport`` is still re-exported from its real
+home in :mod:`repro.pipeline.report` for old import paths.
 """
 
 from __future__ import annotations
 
-import warnings
-from typing import Iterable, Iterator
-
-import jax
-import numpy as np
-
-from repro.core.assoc_memory import RefDB
-from repro.core.hd_space import HDSpace
 from repro.pipeline.report import ProfileReport  # noqa: F401  (re-export)
+
+_MIGRATION = (
+    "is retired; use repro.pipeline.ProfilingSession with a ProfilerConfig "
+    "naming a backend, and stream reads through a repro.pipeline.ReadSource "
+    "(ArraySource / FastqSource).  Flag mapping: Demeter(space) -> "
+    "backend='reference', packed_path=True -> 'reference_packed', "
+    "use_kernels=True -> 'pallas_matmul'.  See the migration table in "
+    "docs/API.md.")
 
 
 class Demeter:
-    """Deprecated facade; use :class:`repro.pipeline.ProfilingSession`.
+    """Retired facade; see the migration table in ``docs/API.md``."""
 
-    The legacy boolean switches map onto named backends:
-
-      ``Demeter(space)``                        -> ``backend="reference"``
-      ``Demeter(space, packed_path=True)``      -> ``backend="reference_packed"``
-      ``Demeter(space, use_kernels=True)``      -> ``backend="pallas_matmul"``
-    """
-
-    def __init__(self, space: HDSpace, *, window: int = 8192,
-                 stride: int | None = None, batch_size: int = 256,
-                 packed_path: bool = False, use_kernels: bool = False):
-        warnings.warn(
-            "Demeter is deprecated; use repro.pipeline.ProfilingSession with "
-            "a ProfilerConfig naming a backend (see docs/API.md)",
-            DeprecationWarning, stacklevel=2)
-        from repro.pipeline import ProfilerConfig, ProfilingSession
-        if use_kernels:
-            backend = "pallas_matmul"
-        elif packed_path:
-            backend = "reference_packed"
-        else:
-            backend = "reference"
-        self._session = ProfilingSession(ProfilerConfig(
-            space=space, window=window, stride=stride,
-            batch_size=batch_size, backend=backend))
-
-    @property
-    def space(self) -> HDSpace:
-        return self._session.space
-
-    @property
-    def window(self) -> int:
-        return self._session.config.window
-
-    @property
-    def stride(self) -> int:
-        return self._session.config.effective_stride
-
-    @property
-    def batch_size(self) -> int:
-        return self._session.config.batch_size
-
-    # -- Step 2 ------------------------------------------------------------
-    def build_refdb(self, genomes: dict[str, np.ndarray]) -> RefDB:
-        return self._session.build_refdb(genomes)
-
-    # -- Step 3 ------------------------------------------------------------
-    def encode_reads(self, tokens: jax.Array, lengths: jax.Array) -> jax.Array:
-        """Convert a read batch ``(B, L)`` into query HD vectors ``(B, W)``."""
-        return self._session.encode_reads(tokens, lengths)
-
-    # -- Step 4 ------------------------------------------------------------
-    def classify_batch(self, refdb: RefDB, queries: jax.Array):
-        return self._session.classify_queries(queries, refdb)
-
-    # -- Steps 3+4+5 streamed ----------------------------------------------
-    def profile(self, refdb: RefDB,
-                read_batches: Iterable[tuple[np.ndarray, np.ndarray]]
-                ) -> ProfileReport:
-        """Profile a food sample given an iterator of (tokens, lengths) batches."""
-        return self._session.profile(read_batches, refdb=refdb)
+    def __init__(self, *args, **kwargs):
+        raise RuntimeError(f"repro.core.Demeter {_MIGRATION}")
 
 
-def batch_reads(tokens: np.ndarray, lengths: np.ndarray,
-                batch_size: int) -> Iterator[tuple[np.ndarray, np.ndarray]]:
-    """Yield fixed-size (padded) read batches from a read set.
-
-    Deprecated alongside :class:`Demeter`: new code streams through a
-    :class:`repro.pipeline.ReadSource` instead.
-    """
-    n = len(tokens)
-    for i in range(0, n, batch_size):
-        t, l = tokens[i:i + batch_size], lengths[i:i + batch_size]
-        if len(t) < batch_size:  # pad the tail batch to a stable shape
-            pad = batch_size - len(t)
-            t = np.concatenate([t, np.zeros((pad,) + t.shape[1:], t.dtype)])
-            l = np.concatenate([l, np.zeros(pad, l.dtype)])
-            yield t, l
-            return
-        yield t, l
+def batch_reads(*args, **kwargs):
+    """Retired batching helper; stream through a ``ReadSource`` instead."""
+    raise RuntimeError(f"repro.core.batch_reads {_MIGRATION}")

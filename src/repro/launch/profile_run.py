@@ -68,19 +68,42 @@ def profile(genomes: dict, source: ReadSource | tuple, *,
     return rep
 
 
-def _parse_option(spec: str) -> tuple[str, str | int | float | bool]:
-    """``KEY=VALUE`` -> (key, typed value): bool/int/float if parseable."""
+def _parse_spec(spec: str) -> tuple[str, str]:
+    """Split ``KEY=VALUE`` (values stay raw; the schema types them)."""
     key, sep, raw = spec.partition("=")
     if not sep or not key:
         raise SystemExit(f"--backend-option expects KEY=VALUE, got {spec!r}")
-    if raw.lower() in ("true", "false"):
-        return key, raw.lower() == "true"
-    for cast in (int, float):
-        try:
-            return key, cast(raw)
-        except ValueError:
-            pass
     return key, raw
+
+
+def _typed_options(ap, backend: str,
+                   pairs: list[tuple[str, str]]) -> dict:
+    """Coerce raw ``--backend-option`` values through ``backend``'s
+    declared schema (`repro.pipeline.options`): unknown keys and values
+    that don't parse as the declared kind are CLI errors naming the
+    option, identical across every backend.  For a passthrough backend
+    (``sharded``) unknown keys fall through to the wrapped base's schema.
+    """
+    from repro.pipeline.backend import options_schema
+    from repro.pipeline.options import OptionError
+
+    schema = options_schema(backend)
+    base_schema = None
+    if schema.passthrough:
+        base = dict(pairs).get("base", "reference")
+        if base in available_backends():
+            base_schema = options_schema(base)
+    out = {}
+    for key, raw in pairs:
+        use = schema
+        if (schema.option(key) is None and schema.passthrough
+                and base_schema is not None):
+            use = base_schema
+        try:
+            out[key] = use.parse_cli(key, raw)
+        except OptionError as e:
+            ap.error(f"--backend-option: {e}")
+    return out
 
 
 def main() -> None:
@@ -121,18 +144,44 @@ def main() -> None:
                          "stay bit-identical; each device holds 1/N of the "
                          "database)")
     ap.add_argument("--list-backends", action="store_true",
-                    help="print the registered backend names and exit")
+                    help="print the registered backend names with their "
+                         "declared options and exit")
+    ap.add_argument("--noise-aware-refdb", action="store_true",
+                    help="retrain the RefDB prototypes on simulated noisy "
+                         "readout through the chosen backend (the "
+                         "margin-maximizing co-design pass; joins the "
+                         "RefDB cache key)")
+    ap.add_argument("--noise-aware-iters", type=int, default=2,
+                    help="retraining passes for --noise-aware-refdb")
     args = ap.parse_args()
 
     if args.list_backends:
+        from repro.pipeline.backend import options_schema
         for name in available_backends():
             print(name)
+            schema = options_schema(name)
+            for row in schema.describe():
+                print(f"  {row}")
+            if schema.passthrough:
+                print("  (+ the wrapped base backend's options, validated "
+                      "by its own schema)")
         return
     if args.backend not in available_backends():
         ap.error(f"unknown backend {args.backend!r}; available: "
                  f"{', '.join(available_backends())}")
 
-    options = dict(_parse_option(s) for s in args.backend_option)
+    pairs = [_parse_spec(s) for s in args.backend_option]
+    # The schema that types the values is the *effective* backend's: with
+    # --shards/--mesh the options ride into 'sharded' (whose passthrough
+    # forwards base-backend knobs), otherwise the named backend's own.
+    wrapping = ((args.shards is not None or args.mesh is not None)
+                and args.backend != "sharded")
+    base_hint = ([("base", args.backend)]
+                 if wrapping and "base" not in dict(pairs) else [])
+    options = _typed_options(
+        ap, "sharded" if wrapping else args.backend, pairs + base_hint)
+    if base_hint:       # parse-time hint only; the wrap logic re-adds it
+        del options["base"]
     backend = args.backend
     if args.mesh is not None and args.shards is not None \
             and args.mesh != args.shards:
@@ -163,7 +212,9 @@ def main() -> None:
                       z_threshold=args.z_threshold),
         window=args.window, stride=args.stride,
         batch_size=args.batch_size, backend=backend,
-        backend_options=options)
+        backend_options=options,
+        noise_aware_refdb=args.noise_aware_refdb,
+        noise_aware_iters=args.noise_aware_iters)
     try:                      # surface bad --backend-option values as CLI
         resolve_backend(config.backend, config)  # errors, not tracebacks
     except ValueError as e:

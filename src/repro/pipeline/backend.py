@@ -26,9 +26,13 @@ Registered backends:
   pallas_packed    Pallas encoder kernel + VPU popcount kernel.
   pallas_fused     fused encode->search megakernel: the encoded queries
                    never leave VMEM (:mod:`repro.pipeline.fused`).
-  pcm_sim          digital encoder + simulated PCM-crossbar AM search
-                   (:mod:`repro.accel`; bit-exact at zero device noise,
-                   configurably non-ideal via ``backend_options``).
+  pcm_sim          digital encoder + simulated in-memory AM search on the
+                   PCM substrate (:mod:`repro.accel`; bit-exact at zero
+                   device noise, configurably non-ideal — multi-bit
+                   levels, noise, drift, faults — via ``backend_options``).
+  racetrack_sim    the same simulated AM search on the racetrack-memory
+                   substrate (shift-based access faults + domain-wall
+                   read model; Khan et al., see PAPERS.md).
   sharded          prototype-axis model parallelism over a device mesh,
                    wrapping any of the above as its ``base``
                    (:mod:`repro.pipeline.sharded`, built on
@@ -68,6 +72,7 @@ import jax
 from repro.core import assoc_memory, encoder, item_memory
 from repro.core.hd_space import HDSpace
 from repro.pipeline.config import ProfilerConfig
+from repro.pipeline.options import OptionsSchema
 
 
 @runtime_checkable
@@ -91,6 +96,7 @@ class Backend(Protocol):
 BackendFactory = Callable[[ProfilerConfig], Backend]
 
 _REGISTRY: dict[str, BackendFactory] = {}
+_SCHEMAS: dict[str, OptionsSchema] = {}
 
 #: Backends that register themselves when their module is imported.  The
 #: registry resolves these lazily, so ``available_backends()`` and the
@@ -103,16 +109,27 @@ _REGISTRY: dict[str, BackendFactory] = {}
 _LAZY_MODULES: dict[str, str] = {
     "pallas_fused": "repro.pipeline.fused",
     "pcm_sim": "repro.accel.backend_pcm",
+    "racetrack_sim": "repro.accel.backend_pcm",
     "sharded": "repro.pipeline.sharded",
 }
 
 
-def register_backend(name: str) -> Callable[[BackendFactory], BackendFactory]:
-    """Decorator: register a ``ProfilerConfig -> Backend`` factory by name."""
+def register_backend(name: str, schema: OptionsSchema | None = None
+                     ) -> Callable[[BackendFactory], BackendFactory]:
+    """Decorator: register a ``ProfilerConfig -> Backend`` factory by name.
+
+    ``schema`` declares the backend's options (displayed by
+    ``--list-backends``, enforced uniformly at construction, and used to
+    type ``--backend-option`` CLI values).  ``None`` declares an
+    option-less backend: *any* provided option fails with the uniform
+    unknown-option error instead of being silently ignored.
+    """
     def deco(factory: BackendFactory) -> BackendFactory:
         if name in _REGISTRY:
             raise ValueError(f"backend {name!r} already registered")
         _REGISTRY[name] = factory
+        _SCHEMAS[name] = (schema if schema is not None
+                          else OptionsSchema(backend=name))
         return factory
     return deco
 
@@ -122,11 +139,27 @@ def available_backends() -> tuple[str, ...]:
     return tuple(sorted(set(_REGISTRY) | set(_LAZY_MODULES)))
 
 
-def resolve_backend(name: str, config: ProfilerConfig) -> Backend:
-    """Instantiate the backend registered under ``name`` for ``config``."""
+def _materialize(name: str) -> None:
+    """Import a lazy backend module so its registration runs."""
     if name not in _REGISTRY and name in _LAZY_MODULES:
         import importlib
         importlib.import_module(_LAZY_MODULES[name])  # registers on import
+
+
+def options_schema(name: str) -> OptionsSchema:
+    """The declared options schema of the backend registered as ``name``."""
+    _materialize(name)
+    try:
+        return _SCHEMAS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {available_backends()}"
+        ) from None
+
+
+def resolve_backend(name: str, config: ProfilerConfig) -> Backend:
+    """Instantiate the backend registered under ``name`` for ``config``."""
+    _materialize(name)
     try:
         factory = _REGISTRY[name]
     except KeyError:
@@ -137,11 +170,20 @@ def resolve_backend(name: str, config: ProfilerConfig) -> Backend:
 
 
 class _BackendBase:
-    """Shared state: the per-space item memory and tie-break vector."""
+    """Shared state: the per-space item memory and tie-break vector.
+
+    Construction validates ``config.backend_options`` against the options
+    schema declared at registration, so every backend — including the
+    option-less digital ones, which used to silently ignore typos — fails
+    with the same friendly error on an unknown or ill-typed option.
+    """
 
     name = "abstract"
 
     def __init__(self, config: ProfilerConfig):
+        schema = _SCHEMAS.get(config.backend)
+        if schema is not None:
+            schema.validate(config.options)
         self.config = config
         self.space = config.space
         self.im = item_memory.make_item_memory(self.space)

@@ -42,6 +42,13 @@ class ProfilerConfig:
         construction time; canonicalized to a sorted tuple of
         ``(name, value)`` pairs so the config stays hashable and
         JSON-round-trippable.  Values must be JSON primitives.
+      noise_aware_refdb: build the RefDB noise-aware — after the naive
+        build, retrain the prototypes on simulated readout through this
+        config's backend + backend_options (the margin-maximizing pass in
+        :mod:`repro.accel.codesign`).  When enabled, backend and
+        backend_options *join* the RefDB cache key: the refined
+        prototypes depend on the device they were trained against.
+      noise_aware_iters: retraining passes when ``noise_aware_refdb``.
     """
 
     space: HDSpace = HDSpace()
@@ -50,6 +57,8 @@ class ProfilerConfig:
     batch_size: int = 256
     backend: str = "reference"
     backend_options: tuple[tuple[str, OptionValue], ...] = ()
+    noise_aware_refdb: bool = False
+    noise_aware_iters: int = 2
 
     def __post_init__(self) -> None:
         if self.window < 1:
@@ -60,6 +69,8 @@ class ProfilerConfig:
             raise ValueError("batch_size must be >= 1")
         if not self.backend or not isinstance(self.backend, str):
             raise ValueError("backend must be a non-empty backend name")
+        if self.noise_aware_iters < 1:
+            raise ValueError("noise_aware_iters must be >= 1")
         object.__setattr__(self, "backend_options",
                            _canonical_options(self.backend_options))
 
@@ -118,9 +129,19 @@ class ProfilerConfig:
         non-idealities live entirely in the AM search, enforced by the
         parity tests) are deliberately excluded so tuning any of them
         reuses the cached database instead of forcing a full rebuild.
+
+        With ``noise_aware_refdb`` the exclusion no longer holds: the
+        retraining pass reads through the configured backend, so the
+        refined prototypes *do* depend on backend, backend_options and
+        the iteration count — all three join the key, and a noise-aware
+        build can never collide with a naive one.
         """
         d = {"space": dataclasses.asdict(self.space), "window": self.window,
              "stride": self.effective_stride}
+        if self.noise_aware_refdb:
+            d["noise_aware"] = {"backend": self.backend,
+                                "backend_options": list(self.backend_options),
+                                "iters": self.noise_aware_iters}
         payload = json.dumps(d, sort_keys=True)
         return hashlib.sha256(payload.encode()).hexdigest()[:16]
 

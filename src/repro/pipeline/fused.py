@@ -42,6 +42,7 @@ import jax
 
 from repro.pipeline.backend import _BackendBase, register_backend
 from repro.pipeline.config import ProfilerConfig
+from repro.pipeline.options import Option, OptionsSchema
 
 _TILE_OPTIONS = ("bb", "bw", "bs")
 _DEFAULTS = {"bb": 8, "bw": 128, "bs": 4096}
@@ -50,62 +51,72 @@ _DEFAULTS = {"bb": 8, "bw": 128, "bs": 4096}
 _warned_autotune_override = False
 
 
+def _pow2_tile(v) -> str | None:
+    if v < 1:
+        return "must be a positive int"
+    if v & (v - 1):
+        return "must be a power of two so every padded batch tiles evenly"
+    return None
+
+
+def _positive_tile(v) -> str | None:
+    return None if v >= 1 else "must be a positive int"
+
+
+def _proto_tile(v) -> str | None:
+    if v < 1:
+        return "must be a positive int"
+    if v % 128:
+        return "must be a multiple of 128 (the prototype-axis output tile)"
+    return None
+
+
+def _nonempty_path(v) -> str | None:
+    return None if v else "must be a non-empty path"
+
+
+#: Declared next to the registry entry: the single source of truth for
+#: ``--list-backends``, CLI coercion, and construction-time validation.
+FUSED_OPTIONS = OptionsSchema(backend="pallas_fused", options=(
+    Option("bb", "int", default=_DEFAULTS["bb"], check=_pow2_tile,
+           help="batch tile (reads per kernel step; power of two)"),
+    Option("bw", "int", default=_DEFAULTS["bw"], check=_positive_tile,
+           help="window tile (tokens per inner step)"),
+    Option("bs", "int", default=_DEFAULTS["bs"], check=_proto_tile,
+           help="prototype tile (output columns; multiple of 128)"),
+    Option("autotune", "bool", default=False,
+           help="measure candidate tilings once per (S, L) shape"),
+    Option("autotune_cache", "str", default=None, check=_nonempty_path,
+           help="JSON file persisting autotuner picks across processes"),
+))
+
+
 def _validated_options(config: ProfilerConfig
                        ) -> tuple[dict[str, int], set[str], bool,
                                   str | None]:
-    """Parse/validate backend options, failing with friendly errors.
+    """Consume schema-validated options + apply config-dependent checks.
 
-    Returns ``(tiles, explicit, autotune, cache_path)`` where
+    The per-value checks (types, power-of-two, 128-multiple) already ran
+    in :class:`_BackendBase` via :data:`FUSED_OPTIONS`; only the check
+    that needs the rest of the config — ``bb`` against the padded batch —
+    lives here.  Returns ``(tiles, explicit, autotune, cache_path)`` where
     ``explicit`` names the tile options the user pinned.
     """
-    tiles = dict(_DEFAULTS)
-    explicit: set[str] = set()
-    autotune = False
-    cache_path: str | None = None
-    for name, value in config.backend_options:
-        if name == "autotune":
-            if not isinstance(value, bool):
-                raise ValueError(
-                    f"pallas_fused option 'autotune' must be a bool, "
-                    f"got {value!r}")
-            autotune = value
-            continue
-        if name == "autotune_cache":
-            if not isinstance(value, str) or not value:
-                raise ValueError(
-                    f"pallas_fused option 'autotune_cache' must be a "
-                    f"non-empty path string, got {value!r}")
-            cache_path = value
-            continue
-        if name not in _TILE_OPTIONS:
-            raise ValueError(
-                f"pallas_fused got unknown option {name!r}; it takes tile "
-                f"sizes {_TILE_OPTIONS} (ints) plus 'autotune' (bool) and "
-                f"'autotune_cache' (path)")
-        if isinstance(value, bool) or not isinstance(value, int) or value < 1:
-            raise ValueError(
-                f"pallas_fused option {name!r} must be a positive int, "
-                f"got {value!r}")
-        tiles[name] = value
-        explicit.add(name)
-    if tiles["bb"] & (tiles["bb"] - 1):
-        raise ValueError(
-            f"pallas_fused option 'bb' must be a power of two so every "
-            f"padded batch tiles evenly, got {tiles['bb']}")
+    opts = config.options
+    tiles = {name: opts.get(name, _DEFAULTS[name]) for name in _TILE_OPTIONS}
+    explicit = {name for name in _TILE_OPTIONS if name in opts}
+    autotune = bool(opts.get("autotune", False))
+    cache_path = opts.get("autotune_cache")
     padded_batch = 8 * ((config.batch_size + 7) // 8)
     if "bb" in explicit and tiles["bb"] > padded_batch:
         raise ValueError(
             f"pallas_fused option 'bb'={tiles['bb']} exceeds the padded "
             f"batch ({config.batch_size} reads pad to {padded_batch}); "
             f"lower bb or raise batch_size")
-    if "bs" in explicit and tiles["bs"] % 128:
-        raise ValueError(
-            f"pallas_fused option 'bs' must be a multiple of 128 (the "
-            f"prototype-axis output tile), got {tiles['bs']}")
     return tiles, explicit, autotune, cache_path
 
 
-@register_backend("pallas_fused")
+@register_backend("pallas_fused", schema=FUSED_OPTIONS)
 class PallasFusedBackend(_BackendBase):
     """Fused encode->search megakernel (interpret mode on CPU)."""
 

@@ -106,15 +106,33 @@ class ProfilingSession:
 
     # -- Step 2 ------------------------------------------------------------
     def build_refdb(self, genomes: dict[str, np.ndarray]) -> RefDB:
-        """Encode the reference genomes into the AM through the backend."""
+        """Encode the reference genomes into the AM through the backend.
+
+        With ``config.noise_aware_refdb`` the naive build is followed by
+        the margin-maximizing retraining pass of
+        :mod:`repro.accel.codesign`: the prototypes are tuned on
+        simulated readout through this session's own backend + options,
+        so the database the device serves is the one trained against its
+        non-idealities.
+        """
         db = assoc_memory.build_refdb(
             genomes, self.space, window=self.config.window,
             stride=self.config.effective_stride,
             batch_size=self.config.batch_size,
             encode_fn=self.backend.encode)
+        db = self._maybe_refine(db, genomes)
         self.refdb = self._place(db)
         self.refdb_loaded_from_cache = False
         return self.refdb
+
+    def _maybe_refine(self, db: RefDB,
+                      genomes: dict[str, np.ndarray]) -> RefDB:
+        """Noise-aware co-design pass, when the config asks for it."""
+        if not self.config.noise_aware_refdb:
+            return db
+        from repro.accel.codesign import noise_aware_refdb
+        return noise_aware_refdb(db, genomes, self.config,
+                                 iterations=self.config.noise_aware_iters)
 
     def adopt_refdb(self, db: RefDB) -> RefDB:
         """Make an externally built/loaded RefDB this session's database.
@@ -173,16 +191,37 @@ class ProfilingSession:
             stride=self.config.effective_stride,
             batch_size=self.config.batch_size,
             encode_fn=self.backend.encode)
+        refine = self.config.noise_aware_refdb
         db = refdb_store.build_streaming(
-            genomes, builder, path=cache,
+            genomes, builder, path=None if refine else cache,
             refdb_fingerprint=self.config.refdb_fingerprint(),
             genomes_digest=_genomes_digest(genomes),
-            config_fields={"space": dataclasses.asdict(self.space),
-                           "window": self.config.window,
-                           "stride": self.config.effective_stride})
+            config_fields=self._refdb_config_fields())
+        if refine:
+            # Cache the *refined* database under the noise-aware key (the
+            # fingerprint already folds in backend + options + iters), so
+            # a later load gets the retrained prototypes, not the naive
+            # intermediate.
+            db = self._maybe_refine(db, genomes)
+            refdb_store.save(
+                cache, db, refdb_fingerprint=self.config.refdb_fingerprint(),
+                genomes_digest=_genomes_digest(genomes),
+                config_fields=self._refdb_config_fields())
         self.refdb = self._place(db)
         self.refdb_loaded_from_cache = False
         return self.refdb
+
+    def _refdb_config_fields(self) -> dict:
+        """Provenance recorded in the store manifest."""
+        fields = {"space": dataclasses.asdict(self.space),
+                  "window": self.config.window,
+                  "stride": self.config.effective_stride}
+        if self.config.noise_aware_refdb:
+            fields["noise_aware"] = {
+                "backend": self.config.backend,
+                "backend_options": list(self.config.backend_options),
+                "iters": self.config.noise_aware_iters}
+        return fields
 
     # -- Step 3 ------------------------------------------------------------
     def encode_reads(self, tokens, lengths) -> jax.Array:

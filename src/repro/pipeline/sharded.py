@@ -55,10 +55,27 @@ from repro.distributed.sharding import shard_map_compat as _shard_map
 from repro.core.bitops import pad_to_multiple
 from repro.pipeline.backend import register_backend, resolve_backend
 from repro.pipeline.config import ProfilerConfig
+from repro.pipeline.options import Option, OptionsSchema, non_negative
 
 #: Options consumed by this backend; everything else is forwarded to the
 #: base backend's config (e.g. pcm_sim device knobs under base=pcm_sim).
 _OWN_OPTIONS = ("base", "shards")
+
+
+def _non_sharded(v) -> str | None:
+    return None if v != "sharded" else "must name a non-sharded backend"
+
+
+#: ``passthrough=True``: unknown options are forwarded to the wrapped
+#: backend, whose own schema validates them — so a misspelled ``pcm_sim``
+#: knob fails with the same error whether it rides directly or through
+#: ``sharded``.
+SHARDED_OPTIONS = OptionsSchema(backend="sharded", passthrough=True, options=(
+    Option("base", "str", default="reference", check=_non_sharded,
+           help="wrapped backend name (any registered name but 'sharded')"),
+    Option("shards", "int", default=0, check=non_negative,
+           help="mesh size; 0 = every local device"),
+))
 
 
 def pad_refdb(db: RefDB, multiple: int) -> RefDB:
@@ -114,26 +131,16 @@ def per_device_bytes(db: RefDB, num_shards: int) -> int:
     return rows * w * 4 + rows * 4 + db.genome_lengths.size * 4
 
 
-@register_backend("sharded")
+@register_backend("sharded", schema=SHARDED_OPTIONS)
 class ShardedBackend:
     """Prototype-axis sharding wrapped around any base backend."""
 
     name = "sharded"
 
     def __init__(self, config: ProfilerConfig):
-        opts = config.options
-        base_name = opts.get("base", "reference")
-        if not isinstance(base_name, str) or base_name == "sharded":
-            raise ValueError(
-                f"sharded backend option 'base' must name a non-sharded "
-                f"backend, got {base_name!r}")
-        shards = opts.get("shards", 0)
-        if not isinstance(shards, int) or isinstance(shards, bool) \
-                or shards < 0:
-            raise ValueError(
-                f"sharded backend option 'shards' must be a non-negative "
-                f"integer (0 = all local devices), got {shards!r}")
-        base_options = {k: v for k, v in opts.items() if k not in _OWN_OPTIONS}
+        own, base_options = SHARDED_OPTIONS.validate(config.options)
+        base_name = own.get("base", "reference")
+        shards = own.get("shards", 0)
         base_config = dataclasses.replace(
             config, backend=base_name, backend_options=base_options)
         self.config = config

@@ -164,10 +164,16 @@ def test_invalid_options_rejected():
 
 
 def test_unknown_pcm_option_and_preset_rejected():
-    with pytest.raises(ValueError, match="unknown pcm_sim option"):
+    with pytest.raises(ValueError,
+                       match="pcm_sim got unknown option 'nonsense'"):
         resolve_backend("pcm_sim", _config().with_options(nonsense=1))
-    with pytest.raises(ValueError, match="unknown pcm_sim preset"):
+    with pytest.raises(ValueError, match="'preset' must be one of"):
         resolve_backend("pcm_sim", _config().with_options(preset="tpu"))
+    # Cross-substrate knobs fail at the narrowed (per-substrate) schema.
+    with pytest.raises(ValueError, match=r"substrate=pcm.*shift_fault_rate"
+                                         r"|shift_fault_rate"):
+        resolve_backend("pcm_sim",
+                        _config().with_options(shift_fault_rate=0.1))
 
 
 def test_mistyped_option_values_rejected():

@@ -4,9 +4,10 @@ import numpy as np
 import pytest
 
 from repro.baselines import ClarkLike, Kraken2Like, MetaCacheLike, bracken_like
-from repro.core import HDSpace, Demeter, batch_reads
+from repro.core import HDSpace
 from repro.eval import read_level_accuracy, score_profile
 from repro.genomics import synth
+from repro.pipeline import (ArraySource, ProfilerConfig, ProfilingSession)
 
 SPEC = synth.CommunitySpec(num_species=6, genome_len=20_000,
                            homology_fraction=0.0, strain_snp_rate=0.0,
@@ -43,7 +44,8 @@ def test_memory_ordering_demeter_smallest(community):
     genomes, *_ = community
     k = Kraken2Like(k=21).build(genomes)
     m = MetaCacheLike().build(genomes)
-    dm = Demeter(HDSpace(dim=4096, ngram=16), window=4096)
+    dm = ProfilingSession(ProfilerConfig(
+        space=HDSpace(dim=4096, ngram=16), window=4096))
     db = dm.build_refdb(genomes)
     assert db.memory_bytes() < m.memory_bytes() < k.memory_bytes()
     # paper's headline: order-of-magnitude+ vs kraken-like tables
@@ -52,9 +54,11 @@ def test_memory_ordering_demeter_smallest(community):
 
 def test_demeter_beats_threshold_on_easy_community(community):
     genomes, toks, lens, truth, true_ab = community
-    dm = Demeter(HDSpace(dim=8192, ngram=16, z_threshold=5.0), window=4096)
+    dm = ProfilingSession(ProfilerConfig(
+        space=HDSpace(dim=8192, ngram=16, z_threshold=5.0), window=4096,
+        batch_size=64))
     db = dm.build_refdb(genomes)
-    rep = dm.profile(db, batch_reads(toks, lens, 64))
+    rep = dm.profile(ArraySource(toks, lens), refdb=db)
     m = score_profile(rep.abundance, true_ab)
     assert m.precision == 1.0 and m.recall == 1.0, m.row()
     assert m.l1_error < 0.15

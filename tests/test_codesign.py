@@ -1,0 +1,138 @@
+"""Noise-aware RefDB co-design: write-verify programming + retraining.
+
+Covers the two stages of :func:`repro.accel.codesign.noise_aware_refdb`:
+the fault-aware programming pass (:func:`repro.accel.crossbar
+.write_verify_bits`) that probes the simulated device and re-chooses the
+stored bits, and the validation-gated margin retraining on top.  The
+headline property — a shift-faulted racetrack AM recovering reads that
+the naive build loses — is pinned both at the crossbar level (exact
+pre-compensation) and end to end through ``ProfilerConfig``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.accel.backend_pcm import split_options
+from repro.accel.codesign import noise_aware_refdb
+from repro.accel.crossbar import crossbar_agreement, write_verify_bits
+from repro.core.hd_space import HDSpace
+from repro.pipeline.backend import resolve_backend
+from repro.pipeline.config import ProfilerConfig
+
+SP = HDSpace(dim=512, ngram=5, z_threshold=3.0)
+
+
+def _config(backend="racetrack_sim", **options):
+    return ProfilerConfig(space=SP, window=512, batch_size=32,
+                          backend=backend, backend_options=options)
+
+
+@pytest.fixture(scope="module")
+def community():
+    rng = np.random.default_rng(11)
+    genomes = {f"s{i}": rng.integers(0, 4, 6000).astype(np.int32)
+               for i in range(4)}
+    toks = np.stack([np.asarray(g)[200 + 37 * i:200 + 37 * i + 96]
+                     for i, g in enumerate(genomes.values())] * 8)
+    lens = np.full(len(toks), 96, np.int32)
+    labels = np.tile(np.arange(4), 8)
+    return genomes, toks, lens, labels
+
+
+def test_write_verify_is_identity_on_ideal_substrate():
+    xcfg, sub = split_options({}, backend="racetrack_sim",
+                              default_substrate="racetrack")
+    rng = np.random.default_rng(0)
+    ref = resolve_backend("reference", _config(backend="reference"))
+    protos = ref.encode(rng.integers(0, 4, (6, 128), np.int32),
+                        np.full(6, 128, np.int32))
+    assert write_verify_bits(protos, xcfg, sub) is protos
+
+
+def test_write_verify_precompensates_misaligned_tracks(community):
+    """With *every* track misaligned and no other fault, pre-rolling the
+    stored content recovers most of the readout error.  (Not all of it:
+    the positive and complement banks draw independent fault maps, and a
+    dim whose two tracks are misaligned in *different* directions can
+    only be pre-compensated for one bank — the tie keeps the content
+    bit, halving that track's error instead of zeroing it.)"""
+    genomes, toks, lens, _ = community
+    ref = resolve_backend("reference", _config(backend="reference"))
+    q = ref.encode(toks, lens)
+    protos = ref.encode(
+        np.stack([np.asarray(g)[:512] for g in genomes.values()]),
+        np.full(4, 512, np.int32))
+    expect = np.asarray(ref.agreement(q, protos))
+
+    xcfg, sub = split_options({"shift_fault_rate": 1.0, "seed": 2},
+                              backend="racetrack_sim",
+                              default_substrate="racetrack")
+    naive = np.asarray(crossbar_agreement(q, protos, SP.dim, xcfg, sub))
+    assert (naive != expect).any()          # the faults actually bite
+    fixed = write_verify_bits(protos, xcfg, sub)
+    assert (np.asarray(fixed) != np.asarray(protos)).any()
+    naive_err = np.abs(naive - expect).mean()
+    fixed_err = np.abs(
+        np.asarray(crossbar_agreement(q, fixed, SP.dim, xcfg, sub))
+        - expect).mean()
+    assert fixed_err < 0.6 * naive_err
+
+
+def test_noise_aware_refdb_improves_shift_faulted_readout(community):
+    """End to end at the benchmark's sweep point: the noise-aware build
+    raises the own-species agreement the faulty device reads out."""
+    genomes, toks, lens, labels = community
+    config = _config(shift_fault_rate=0.5, seed=3)
+    from repro.pipeline import ProfilingSession
+    session = ProfilingSession(config)
+    db = session.build_refdb(genomes)
+    be = resolve_backend(config.backend, config)
+    q = be.encode(toks, lens)
+
+    def own_score(refdb):
+        agree = np.asarray(be.agreement(q, refdb.prototypes))
+        own = np.where(np.asarray(refdb.proto_species)[None, :]
+                       == labels[:, None], agree, -1)
+        return own.max(axis=1).mean()
+
+    refined = noise_aware_refdb(db, genomes, config, iterations=1,
+                                reads_per_species=16, read_len=64)
+    assert refined.species_names == db.species_names
+    assert refined.num_species == db.num_species
+    assert (np.asarray(refined.prototypes)
+            != np.asarray(db.prototypes)).any()
+    assert own_score(refined) > own_score(db)
+
+
+def test_noise_aware_refdb_keeps_metadata_on_digital_backend(community):
+    genomes, _, _, _ = community
+    config = _config(backend="reference")
+    from repro.pipeline import ProfilingSession
+    db = ProfilingSession(config).build_refdb(genomes)
+    out = noise_aware_refdb(db, genomes, config, iterations=1,
+                            reads_per_species=8, read_len=64)
+    assert out.prototypes.shape == db.prototypes.shape
+    assert out.species_names == db.species_names
+    np.testing.assert_array_equal(np.asarray(out.genome_lengths),
+                                  np.asarray(db.genome_lengths))
+
+
+def test_noise_aware_fingerprint_is_distinct():
+    base = _config(shift_fault_rate=0.5, seed=3)
+    aware = dataclasses.replace(base, noise_aware_refdb=True)
+    aware2 = dataclasses.replace(aware, noise_aware_iters=5)
+    prints = {c.refdb_fingerprint() for c in (base, aware, aware2)}
+    assert len(prints) == 3
+
+
+def test_noise_aware_refdb_rejects_bad_inputs(community):
+    genomes, _, _, _ = community
+    config = _config(shift_fault_rate=0.5)
+    from repro.pipeline import ProfilingSession
+    db = ProfilingSession(config).build_refdb(genomes)
+    with pytest.raises(ValueError, match="iterations"):
+        noise_aware_refdb(db, genomes, config, iterations=0)
+    with pytest.raises(KeyError, match="missing"):
+        noise_aware_refdb(db, {"s0": genomes["s0"]}, config)

@@ -197,8 +197,8 @@ def test_fused_through_profiling_service(sample):
     ({"bb": 0}, "positive int"),
     ({"bw": -1}, "positive int"),
     ({"bs": 0}, "positive int"),
-    ({"bb": True}, "positive int"),
-    ({"bw": "wide"}, "positive int"),
+    ({"bb": True}, "must be an integer"),
+    ({"bw": "wide"}, "must be an integer"),
     ({"block": 64}, "unknown option"),
     ({"bs": 100}, "multiple of 128"),
     ({"bb": 64}, "padded batch"),          # config batch_size=16 pads to 16

@@ -114,19 +114,20 @@ def test_hdc_profiler_sharded():
     _run("""
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.core import HDSpace, Demeter, bitops
+from repro.core import HDSpace, bitops
+from repro.pipeline import ProfilerConfig, ProfilingSession
 sp = HDSpace(dim=2048, ngram=8, z_threshold=3.0)
-dm = Demeter(sp, window=1024, batch_size=32)
+dm = ProfilingSession(ProfilerConfig(space=sp, window=1024, batch_size=32))
 rng = np.random.default_rng(0)
 genomes = {f's{i}': rng.integers(0, 4, 8000).astype(np.int32) for i in range(4)}
 db = dm.build_refdb(genomes)
 toks = jnp.asarray(rng.integers(0, 4, (32, 64)), jnp.int32)
 lens = jnp.full((32,), 64, jnp.int32)
 q = dm.encode_reads(toks, lens)
-res1 = dm.classify_batch(db, q)
+res1 = dm.classify_queries(q, db)
 mesh = jax.make_mesh((4, 2), ('data', 'model'))
 qs = jax.device_put(q, NamedSharding(mesh, P('data', 'model')))
-res2 = dm.classify_batch(db, qs)
+res2 = dm.classify_queries(qs, db)
 np.testing.assert_array_equal(np.asarray(res1.scores), np.asarray(res2.scores))
 print('sharded HDC classify OK')
 """)

@@ -395,28 +395,15 @@ def test_refdb_pickle_roundtrip_queries_identically(sample, tmp_path):
     np.testing.assert_array_equal(r1.abundance, r2.abundance)
 
 
-# -- legacy shim -----------------------------------------------------------
+# -- legacy shim (retired) ---------------------------------------------------
 
-def test_demeter_shim_warns_and_matches_session(sample):
+def test_retired_demeter_shim_raises_with_migration_pointer():
     from repro.core import Demeter, batch_reads
-    with pytest.warns(DeprecationWarning, match="ProfilingSession"):
-        dm = Demeter(SP, window=1024, batch_size=16)
-    db = dm.build_refdb(sample.genomes)
-    legacy = dm.profile(db, batch_reads(sample.tokens, sample.lengths, 16))
-
-    s = ProfilingSession(_config())
-    rep = s.profile(sample, refdb=db)
-    np.testing.assert_array_equal(legacy.abundance, rep.abundance)
-    np.testing.assert_array_equal(legacy.unique_counts, rep.unique_counts)
-
-
-def test_demeter_shim_kernel_flags_map_to_backends():
-    with pytest.warns(DeprecationWarning):
-        assert Demeter_backend(use_kernels=True) == "pallas_matmul"
-        assert Demeter_backend(packed_path=True) == "reference_packed"
-        assert Demeter_backend() == "reference"
-
-
-def Demeter_backend(**kw):
-    from repro.core import Demeter
-    return Demeter(SP, window=1024, **kw)._session.config.backend
+    with pytest.raises(RuntimeError, match="ProfilingSession"):
+        Demeter(SP, window=1024, batch_size=16)
+    with pytest.raises(RuntimeError, match="ReadSource"):
+        batch_reads(np.zeros((4, 8), np.int32), np.full(4, 8, np.int32), 2)
+    # the old import path for reports still resolves to the real class
+    from repro.core.profiler import ProfileReport
+    from repro.pipeline.report import ProfileReport as Canonical
+    assert ProfileReport is Canonical

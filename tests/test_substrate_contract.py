@@ -1,0 +1,179 @@
+"""Shared substrate contract: every registered substrate, one rulebook.
+
+Parametrized over ``repro.accel.substrate.available_substrates()`` so a
+newly registered substrate is automatically held to the same contract:
+
+* zero-noise bit-exactness — the ideal device is indistinguishable from
+  the ``reference`` backend, bit for bit;
+* seeded determinism — same seed, same answers; different seed,
+  different noise;
+* fault census — programmed fault populations (stuck cells, misaligned
+  tracks) are counted and reproducible;
+* options-schema round-trip — every declared option validates at its
+  default and survives CLI string coercion.
+
+Plus the cross-backend half of the options satellite: a misspelled
+option fails with the *same* friendly error on every registered backend.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.accel.substrate import (available_substrates, narrowed_schema,
+                                   resolve_substrate, substrate_options)
+from repro.core.hd_space import HDSpace
+from repro.pipeline.backend import (available_backends, options_schema,
+                                    resolve_backend)
+from repro.pipeline.config import ProfilerConfig
+from repro.pipeline.options import OptionError
+
+SP = HDSpace(dim=512, ngram=5, z_threshold=3.0)
+
+#: options that force a visible, countable fault population per substrate
+FAULT_OPTIONS = {
+    "pcm": {"stuck_on_rate": 0.5, "stuck_off_rate": 0.25},
+    "racetrack": {"stuck_on_rate": 0.5, "stuck_off_rate": 0.25,
+                  "shift_fault_rate": 0.5},
+}
+#: fault-census keys each substrate must report
+CENSUS_KEYS = {
+    "pcm": {"on", "off"},
+    "racetrack": {"on", "off", "misaligned"},
+}
+
+
+def _config(backend="pcm_sim", **options):
+    return ProfilerConfig(space=SP, window=1024, batch_size=16,
+                          backend=backend, backend_options=options)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    ref = resolve_backend("reference", _config(backend="reference"))
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, 4, (12, 96), np.int32)
+    lens = np.full(12, 96, np.int32)
+    q = ref.encode(toks, lens)
+    protos = ref.encode(rng.integers(0, 4, (6, 96), np.int32),
+                        np.full(6, 96, np.int32))
+    return q, protos, np.asarray(ref.agreement(q, protos))
+
+
+def test_substrate_registry_is_populated():
+    assert {"pcm", "racetrack"} <= set(available_substrates())
+
+
+@pytest.mark.parametrize("substrate", available_substrates())
+@pytest.mark.parametrize("carrier", ["pcm_sim", "racetrack_sim"])
+def test_zero_noise_bit_exact_with_reference(workload, carrier, substrate):
+    """An ideal device of any substrate, through either substrate backend,
+    reproduces the reference agreement bit for bit."""
+    q, protos, expect = workload
+    be = resolve_backend(carrier, _config(backend=carrier,
+                                          substrate=substrate))
+    np.testing.assert_array_equal(np.asarray(be.agreement(q, protos)),
+                                  expect)
+
+
+@pytest.mark.parametrize("substrate", available_substrates())
+def test_seeded_determinism(workload, substrate):
+    q, protos, expect = workload
+    noisy = dict(FAULT_OPTIONS[substrate], read_sigma=0.3, seed=5,
+                 substrate=substrate)
+    a1 = np.asarray(resolve_backend(
+        "pcm_sim", _config(**noisy)).agreement(q, protos))
+    a2 = np.asarray(resolve_backend(
+        "pcm_sim", _config(**noisy)).agreement(q, protos))
+    np.testing.assert_array_equal(a1, a2)
+    a3 = np.asarray(resolve_backend(
+        "pcm_sim", _config(**dict(noisy, seed=6))).agreement(q, protos))
+    assert (a1 != a3).any()
+    assert (a1 != expect).any()     # the noise actually bites
+
+
+@pytest.mark.parametrize("substrate", available_substrates())
+def test_fault_census_counts_and_reproducibility(substrate):
+    sub = resolve_substrate(substrate, FAULT_OPTIONS[substrate])
+    shape = (4, 64, 128)            # (tiles, prototypes, rows)
+    census = sub.fault_census(shape, stream=0)
+    assert set(census) == CENSUS_KEYS[substrate]
+    assert all(isinstance(v, int) and v >= 0 for v in census.values())
+    total = int(np.prod(shape))
+    # rates are large enough that every fault class must be populated,
+    # and bounded by the population it is drawn from
+    assert 0 < census["on"] < total
+    assert 0 < census["off"] < total
+    # same seed -> same census; the faults are device state, not re-drawn
+    assert sub.fault_census(shape, stream=0) == census
+    other = resolve_substrate(substrate,
+                              dict(FAULT_OPTIONS[substrate], seed=99))
+    assert other.fault_census(shape, stream=0) != census
+
+
+@pytest.mark.parametrize("substrate", available_substrates())
+def test_ideal_substrate_census_is_empty(substrate):
+    sub = resolve_substrate(substrate, {})
+    assert sub.is_ideal
+    census = sub.fault_census((2, 16, 32), stream=0)
+    assert set(census) == CENSUS_KEYS[substrate]
+    assert all(v == 0 for v in census.values())
+
+
+@pytest.mark.parametrize("substrate", available_substrates())
+def test_options_schema_round_trip(substrate):
+    """Every declared option validates at its default and survives the
+    CLI string coercion path (``--backend-option name=str(default)``)."""
+    schema = narrowed_schema("pcm_sim", substrate)
+    declared = {o.name for o in substrate_options(substrate)}
+    assert declared <= set(schema.names)
+    for opt in schema.options:
+        if opt.default is None or opt.name == "substrate":
+            continue
+        own, rest = schema.validate({opt.name: opt.default})
+        assert own == {opt.name: opt.default} and rest == {}
+        assert schema.parse_cli(opt.name, str(opt.default)) == opt.default
+
+
+@pytest.mark.parametrize("substrate", available_substrates())
+def test_cross_substrate_knob_rejected(substrate):
+    """A knob declared by a *different* substrate fails the narrowed
+    schema even though the union schema admits it for the CLI."""
+    foreign = {"pcm": "shift_fault_rate", "racetrack": "prog_sigma"}
+    with pytest.raises(OptionError, match="got unknown option"):
+        resolve_backend("pcm_sim", _config(
+            substrate=substrate, **{foreign[substrate]: 0.1}))
+
+
+@pytest.mark.parametrize("backend", available_backends())
+def test_misspelled_option_fails_identically_everywhere(backend):
+    """Acceptance criterion: one uniform unknown-option error, every
+    backend, whether it declares options, none, or passes through (the
+    ``sharded`` wrapper forwards the typo to its base, which then names
+    itself in the same message shape)."""
+    with pytest.raises(OptionError,
+                       match=r"got unknown option 'zzz_bogus'"):
+        resolve_backend(backend, _config(backend=backend, zzz_bogus=1))
+
+
+@pytest.mark.parametrize("backend", available_backends())
+def test_every_backend_declares_a_schema(backend):
+    schema = options_schema(backend)
+    assert schema.backend == backend
+    for row in schema.describe():
+        assert isinstance(row, str) and row
+
+
+def test_substrate_cost_models_disagree():
+    """Each substrate owns its cost entry: same workload, different
+    energy/latency decomposition (racetrack pays shifts, not the ADC)."""
+    pcm = resolve_substrate("pcm", {})
+    rt = resolve_substrate("racetrack", {})
+    from repro.accel.crossbar import CrossbarConfig
+    xcfg = CrossbarConfig()
+    a = pcm.cost(64, SP.dim, 100, SP.ngram, xcfg)
+    b = rt.cost(64, SP.dim, 100, SP.ngram, xcfg)
+    assert a.substrate == "pcm" and b.substrate == "racetrack"
+    assert a.shift_pj == 0.0 and b.shift_pj > 0.0
+    assert {n: e for n, e, _ in b.energy_rows()}.get("shift", 0.0) > 0.0

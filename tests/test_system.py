@@ -4,9 +4,10 @@ food sample, FASTA/FASTQ IO, and dry-run harness internals."""
 import numpy as np
 import pytest
 
-from repro.core import HDSpace, Demeter, batch_reads
+from repro.core import HDSpace
 from repro.eval import score_profile
 from repro.genomics import alphabet, fasta, synth
+from repro.pipeline import ArraySource, ProfilerConfig, ProfilingSession
 
 
 def test_end_to_end_food_profile(tmp_path):
@@ -27,9 +28,11 @@ def test_end_to_end_food_profile(tmp_path):
     assert set(genomes2) == set(genomes)
     np.testing.assert_array_equal(toks2, toks)
 
-    dm = Demeter(HDSpace(dim=8192, ngram=16, z_threshold=5.0), window=4096)
+    dm = ProfilingSession(ProfilerConfig(
+        space=HDSpace(dim=8192, ngram=16, z_threshold=5.0), window=4096,
+        batch_size=128))
     db = dm.build_refdb(genomes2)
-    rep = dm.profile(db, batch_reads(toks2, lens2, 128))
+    rep = dm.profile(ArraySource(toks2, lens2), refdb=db)
     m = score_profile(rep.abundance, true_ab)
     assert m.recall == 1.0, m.row()
     assert m.precision >= 0.75, m.row()
@@ -50,7 +53,8 @@ def test_alphabet_roundtrip():
 def test_refdb_is_write_once():
     """RefDB is frozen (PCM write-once discipline)."""
     import dataclasses
-    dm = Demeter(HDSpace(dim=512, ngram=4), window=512)
+    dm = ProfilingSession(ProfilerConfig(
+        space=HDSpace(dim=512, ngram=4), window=512))
     rng = np.random.default_rng(0)
     db = dm.build_refdb({"a": rng.integers(0, 4, 2000).astype(np.int32)})
     with pytest.raises(dataclasses.FrozenInstanceError):
